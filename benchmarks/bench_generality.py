@@ -1,0 +1,54 @@
+"""Paper Figures 13 & 14 — generality across graph algorithms.
+
+Flash plugged into Vamana (DiskANN/τ-MG-style α-prune) and NSG builds; same
+CA+NS decomposition, same backends — build-time speedup and recall reported
+for fp32 vs Flash on each algorithm.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from benchmarks.common import DEFAULT_PARAMS, FLASH_KW, bench_data, emit, timeit
+from repro import graph
+from repro.graph.knn import exact_knn, recall_at_k
+from repro.graph.nsg import build_nsg
+from repro.graph.vamana import build_vamana, search_flat
+
+
+def run() -> dict:
+    data, queries = bench_data()
+    tids, _ = exact_knn(queries, data, k=10)
+    key = jax.random.PRNGKey(0)
+    params = dataclasses.replace(DEFAULT_PARAMS, r_base=24, ef=64, alpha=1.2)
+    out = {}
+
+    def build_vam(be):
+        return build_vamana(data, be, params=params)[0]
+
+    def build_nsg_(be):
+        (index, _knn) = build_nsg(data, be, params=params, knn_k=24)
+        return index
+
+    for algo, build in [("vamana", build_vam), ("nsg", build_nsg_)]:
+        t_fp = timeit(
+            lambda: build(graph.make_backend("fp32", data)).adj, repeats=1
+        )
+        be_fl = graph.make_backend("flash", data, key, **FLASH_KW)
+        t_fl = timeit(lambda: build(be_fl).adj, repeats=1)
+        idx = build(be_fl)
+        ids, _ = search_flat(idx, queries, k=10, ef_search=128, rerank_vectors=data)
+        rec = recall_at_k(ids, tids, 10)
+        out[algo] = dict(fp32=t_fp, flash=t_fl, recall=rec)
+        emit(
+            f"generality/{algo}", t_fl * 1e6,
+            f"fp32={t_fp:.2f}s flash={t_fl:.2f}s "
+            f"speedup={t_fp/t_fl:.2f}x recall={rec:.3f}",
+        )
+    return out
+
+
+if __name__ == "__main__":
+    run()

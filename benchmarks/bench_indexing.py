@@ -1,0 +1,97 @@
+"""Paper Figures 6 & 7 + Table 4 — indexing time, index size, coding time.
+
+Builds the same HNSW with every backend (fp32 baseline, PQ, SQ, PCA, Flash,
+Flash+blocked-layout) and reports:
+  * wall-clock build time (+ speedup vs fp32),
+  * coding/preprocessing time (CT) vs total indexing time (TIT, Table 4),
+  * index size in bytes (compression ratio, Figure 7),
+  * post-build search recall (quality gate — a fast build that ruins recall
+    is the HNSW-PQ failure mode the paper highlights).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import DEFAULT_PARAMS, FLASH_KW, bench_data, emit, timeit
+from repro import graph
+from repro.graph.hnsw import build_hnsw, search_hnsw
+from repro.graph.knn import exact_knn, recall_at_k
+from repro.utils import tree_bytes
+
+
+def index_bytes(index, backend_kind: str, n: int, d: int) -> int:
+    """Adjacency + per-node payload the backend stores (paper's index size)."""
+    adj = index.adj0.size * 4 + index.adj_up.size * 4
+    be = index.backend
+    payload = 0
+    if backend_kind == "fp32":
+        payload = n * d * 4
+    elif backend_kind == "pca":
+        payload = be.z.size * 4
+    elif backend_kind == "sq":
+        payload = be.codes.size * 1  # int8-representable levels
+    elif backend_kind == "pq":
+        payload = be.codes.shape[0] * be.coder.m  # 8-bit codes
+    elif backend_kind.startswith("flash"):
+        payload = int(be.codes.shape[0] * be.coder.code_bytes)
+        if hasattr(be, "nbr_codes"):
+            payload += be.nbr_codes.shape[0] * be.nbr_codes.shape[1] * be.coder.m_f // 2
+    return adj + payload
+
+
+def run() -> dict:
+    data, queries = bench_data()
+    n, d = data.shape
+    tids, _ = exact_knn(queries, data, k=10)
+    key = jax.random.PRNGKey(0)
+    backends = [
+        ("fp32", {}),
+        ("pq", dict(m=16, l_pq=8, kmeans_iters=10)),
+        ("sq", dict(bits=8)),
+        ("pca", dict(alpha=0.9)),
+        ("flash", dict(FLASH_KW)),
+        ("flash_blocked", dict(FLASH_KW, r_for_blocked=DEFAULT_PARAMS.r_base)),
+    ]
+    results = {}
+    base_time = None
+    for kind, kw in backends:
+        t0 = time.perf_counter()
+        be = graph.make_backend(kind, data, key, **kw)
+        jax.block_until_ready(jax.tree_util.tree_leaves(be)[0])
+        ct = time.perf_counter() - t0
+
+        build = lambda: build_hnsw(data, be, params=DEFAULT_PARAMS)
+        # one timed cold build (compile cached across same-shape backends of
+        # equal pytree structure only, so report warm build too)
+        t0 = time.perf_counter()
+        index, stats = build()
+        jax.block_until_ready(index.adj0)
+        cold = time.perf_counter() - t0
+        warm = timeit(lambda: build()[0].adj0, repeats=2, warmup=0)
+        res = search_hnsw(
+            index, queries, k=10, ef_search=96, max_layers=3,
+            rerank_vectors=None if kind == "fp32" else data,
+        )
+        rec = recall_at_k(res.ids, tids, 10)
+        size = index_bytes(index, kind, n, d)
+        if kind == "fp32":
+            base_time, base_size = warm, size
+        results[kind] = dict(
+            ct=ct, build=warm, recall=rec, size=size,
+            speedup=base_time / warm, compress=base_size / size,
+        )
+        emit(
+            f"indexing/{kind}", warm * 1e6,
+            f"speedup={base_time / warm:.2f}x recall={rec:.3f} "
+            f"size={size/1e6:.2f}MB CT={ct:.2f}s TIT={ct + warm:.2f}s",
+        )
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,93 @@
+"""Paper Table 2 + Figures 1/15 — memory-access ablation & time profile.
+
+No perf counters on this box, so cache behaviour is reported through the
+paper's own cost model plus measured build-time decomposition:
+
+  * NMA model (Eqs. 10–11): random vector fetches per insert —
+    O(R·log n) for fp32 HNSW vs O(log n) with the blocked code layout
+    (neighbor codes ride along with the adjacency row).
+  * bytes-touched-per-distance: 4·D (fp32) vs M_F·L_F/8 (Flash codes).
+  * Figure 1/15 analogue: fraction of build time spent in distance
+    computation — measured by rebuilding with a free distance function
+    (distances replaced by an id-hash: same control flow, no distance work)
+    and differencing.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import DEFAULT_PARAMS, FLASH_KW, bench_data, emit, timeit
+from repro import graph
+from repro.graph.backends import FP32Backend
+from repro.graph.hnsw import build_hnsw
+
+
+@jax.tree_util.register_pytree_node_class
+class NullBackend(FP32Backend):
+    """Same traversal, distances replaced by a trivial hash — isolates the
+    non-distance fraction of build time (structure maintenance, 'A')."""
+
+    def query_dists(self, qctx, ids):
+        return (ids % 97).astype(jnp.float32)
+
+    def pair_dists(self, ids_a, ids_b):
+        ids_a, ids_b = jnp.broadcast_arrays(ids_a, ids_b)
+        return ((ids_a * 31 + ids_b) % 97).astype(jnp.float32)
+
+
+def run() -> dict:
+    data, _ = bench_data()
+    n, d = data.shape
+    key = jax.random.PRNGKey(0)
+
+    # --- profile: distance share of build time (Fig 1 vs Fig 15) ----------
+    t_fp = timeit(
+        lambda: build_hnsw(data, graph.make_backend("fp32", data),
+                           params=DEFAULT_PARAMS)[0].adj0, repeats=1)
+    t_null = timeit(
+        lambda: build_hnsw(data, NullBackend(data),
+                           params=DEFAULT_PARAMS)[0].adj0, repeats=1)
+    be_fl = graph.make_backend("flash", data, key, **FLASH_KW)
+    t_fl = timeit(
+        lambda: build_hnsw(data, be_fl, params=DEFAULT_PARAMS)[0].adj0,
+        repeats=1)
+    share_fp = max(t_fp - t_null, 0.0) / t_fp
+    share_fl = max(t_fl - t_null, 0.0) / max(t_fl, 1e-9)
+    emit("memory/dist_share_fp32", t_fp * 1e6, f"distance_share={share_fp:.2f}")
+    emit("memory/dist_share_flash", t_fl * 1e6, f"distance_share={share_fl:.2f}")
+
+    # --- NMA + bytes model (Eqs. 10-13 + Table 2 analogue) -----------------
+    r = DEFAULT_PARAMS.r_base
+    logn = np.log2(n)
+    bytes_fp32 = 4 * d
+    m_f, l_f = FLASH_KW["m_f"], FLASH_KW["l_f"]
+    bytes_flash = m_f * l_f / 8
+    nma_fp32 = r * logn
+    nma_flash = logn
+    emit(
+        "memory/bytes_per_distance", 0.0,
+        f"fp32={bytes_fp32}B flash={bytes_flash:.0f}B "
+        f"reduction={bytes_fp32/bytes_flash:.0f}x",
+    )
+    emit(
+        "memory/random_fetch_model", 0.0,
+        f"NMA_fp32={nma_fp32:.0f}/insert NMA_flash={nma_flash:.0f}/insert "
+        f"(Eqs.10-11, R={r})",
+    )
+    # per-build bytes touched by distance computations (beam stats × bytes)
+    _, stats = build_hnsw(data, graph.make_backend("fp32", data),
+                          params=DEFAULT_PARAMS)
+    nd = float(stats.n_dists)
+    emit(
+        "memory/build_bytes_touched", 0.0,
+        f"fp32={nd * bytes_fp32 / 1e6:.0f}MB flash={nd * bytes_flash / 1e6:.0f}MB "
+        f"(n_dists={nd:.0f})",
+    )
+    return dict(share_fp=share_fp, share_fl=share_fl)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,73 @@
+"""Paper Figures 3, 4 & 16 — parameter sensitivity.
+
+Sweeps: PQ (L_PQ, M_PQ), SQ (L_SQ), PCA (d_PCA), Flash (d_F, M_F) — each on
+build time + post-build recall; plus the Theorem-1 margin calibration curve
+(sign-agreement rate per setting, §3.1's tuning protocol).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import DEFAULT_PARAMS, bench_data, emit, timeit
+from repro import core, graph
+from repro.graph.hnsw import build_hnsw, search_hnsw
+from repro.graph.knn import exact_knn, recall_at_k
+
+
+def _recall_of(kind, kw, data, queries, tids, key):
+    be = graph.make_backend(kind, data, key, **kw)
+    t = timeit(lambda: build_hnsw(data, be, params=DEFAULT_PARAMS)[0].adj0,
+               repeats=1)
+    index, _ = build_hnsw(data, be, params=DEFAULT_PARAMS)
+    res = search_hnsw(index, queries, k=10, ef_search=96, max_layers=3,
+                      rerank_vectors=data)
+    return t, recall_at_k(res.ids, tids, 10)
+
+
+def run() -> dict:
+    data, queries = bench_data(n=3000)
+    tids, _ = exact_knn(queries, data, k=10)
+    key = jax.random.PRNGKey(0)
+    out = {}
+
+    for l_pq in (4, 8):  # Figure 3 (L_PQ)
+        t, r = _recall_of("pq", dict(m=8, l_pq=l_pq, kmeans_iters=8),
+                          data, queries, tids, key)
+        emit(f"params/pq_L{l_pq}", t * 1e6, f"recall={r:.3f}")
+    for m_pq in (4, 16):  # Figure 3 (M_PQ)
+        t, r = _recall_of("pq", dict(m=m_pq, l_pq=8, kmeans_iters=8),
+                          data, queries, tids, key)
+        emit(f"params/pq_M{m_pq}", t * 1e6, f"recall={r:.3f}")
+    for bits in (4, 8):  # Figure 4a (L_SQ)
+        t, r = _recall_of("sq", dict(bits=bits), data, queries, tids, key)
+        emit(f"params/sq_L{bits}", t * 1e6, f"recall={r:.3f}")
+    for alpha in (0.7, 0.95):  # Figure 4b (d_PCA via variance fraction)
+        t, r = _recall_of("pca", dict(alpha=alpha), data, queries, tids, key)
+        emit(f"params/pca_a{alpha}", t * 1e6, f"recall={r:.3f}")
+    for d_f in (16, 32, 48):  # Figure 16a (d_F)
+        t, r = _recall_of(
+            "flash", dict(d_f=d_f, m_f=16, l_f=4, h=8, kmeans_iters=8),
+            data, queries, tids, key)
+        out[f"flash_d{d_f}"] = r
+        emit(f"params/flash_d{d_f}", t * 1e6, f"recall={r:.3f}")
+    for m_f in (8, 16):  # Figure 16b (M_F)
+        t, r = _recall_of(
+            "flash", dict(d_f=32, m_f=m_f, l_f=4, h=8, kmeans_iters=8),
+            data, queries, tids, key)
+        emit(f"params/flash_M{m_f}", t * 1e6, f"recall={r:.3f}")
+
+    # §3.1 calibration protocol: sign-agreement across the flash grid
+    triples = core.sample_triples(key, data, n_triples=256, pool=1024)
+    for d_f, m_f in [(16, 8), (32, 16), (48, 16)]:
+        coder = core.fit_flash(key, data, d_f=d_f, m_f=m_f, kmeans_iters=8)
+        rate, sign = core.margin_satisfaction_rate(
+            triples, lambda x, c=coder: core.reconstruct(c, x))
+        emit(f"params/margin_d{d_f}_m{m_f}", 0.0,
+             f"margin_rate={float(rate):.3f} sign_rate={float(sign):.3f} "
+             f"code_bytes={coder.code_bytes:.0f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

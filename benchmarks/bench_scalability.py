@@ -1,0 +1,71 @@
+"""Paper Figures 10 & 11 — scalability over data volume and segment count.
+
+Volume: build time for HNSW vs HNSW-Flash at n ∈ {1k, 2k, 4k, 8k}.
+Segments: total build time when the same 8k vectors are split into
+1/2/4 segments built through the vmapped segment program (the shard_map
+deployment is embarrassingly parallel, so per-segment time ≈ total / S on
+real hardware; on one CPU the sum is what we can measure — both reported).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import DEFAULT_PARAMS, FLASH_KW, bench_data, emit, timeit
+from repro import graph
+from repro.graph import segmented as seg
+from repro.graph.hnsw import build_hnsw, prefix_entries, sample_levels
+
+
+def run() -> dict:
+    key = jax.random.PRNGKey(0)
+    out = {"volume": [], "segments": []}
+    for n in (1000, 2000, 4000, 8000):
+        data, _ = bench_data(n=n)
+        t_fp = timeit(
+            lambda d=data: build_hnsw(
+                d, graph.make_backend("fp32", d), params=DEFAULT_PARAMS
+            )[0].adj0,
+            repeats=1,
+        )
+        t_fl = timeit(
+            lambda d=data: build_hnsw(
+                d, graph.make_backend("flash", d, key, **FLASH_KW),
+                params=DEFAULT_PARAMS,
+            )[0].adj0,
+            repeats=1,
+        )
+        out["volume"].append(dict(n=n, fp32=t_fp, flash=t_fl))
+        emit(f"scalability/volume/n{n}", t_fl * 1e6,
+             f"fp32={t_fp:.2f}s flash={t_fl:.2f}s speedup={t_fp/t_fl:.2f}x")
+
+    data, _ = bench_data(n=8192)
+    coder = seg.fit_shared_coder(key, data, d_f=32, m_f=16, kmeans_iters=10)
+    for s in (1, 2, 4):
+        ns = 8192 // s
+        segs = data.reshape(s, ns, -1)
+        levels = np.stack(
+            [sample_levels(i, ns, r_upper=8, max_layers=3) for i in range(s)]
+        )
+        entries = np.stack(
+            [prefix_entries(levels[i], DEFAULT_PARAMS.batch) for i in range(s)]
+        )
+        t = timeit(
+            lambda: jax.tree_util.tree_leaves(
+                seg.build_segments_vmapped(
+                    segs, coder, jnp.asarray(levels), jnp.asarray(entries),
+                    params=DEFAULT_PARAMS,
+                )
+            )[0],
+            repeats=1,
+        )
+        out["segments"].append(dict(segments=s, total=t, per_segment=t / s))
+        emit(f"scalability/segments/s{s}", t * 1e6,
+             f"total={t:.2f}s per_segment_parallel={t/s:.2f}s")
+    return out
+
+
+if __name__ == "__main__":
+    run()

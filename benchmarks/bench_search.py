@@ -1,0 +1,53 @@
+"""Paper Figures 8 & 9 — QPS-Recall and QPS-ADR curves.
+
+Sweeps ef_search per backend on indexes built with that backend, measuring
+query throughput, Recall@10 and ADR (all searches rerank on originals, as
+the paper's Flash pipeline does).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import DEFAULT_PARAMS, FLASH_KW, bench_data, emit, timeit
+from repro import graph
+from repro.graph.hnsw import build_hnsw, search_hnsw
+from repro.graph.knn import average_distance_ratio, exact_knn, recall_at_k
+
+
+def run() -> dict:
+    data, queries = bench_data()
+    tids, tds = exact_knn(queries, data, k=10)
+    key = jax.random.PRNGKey(0)
+    out = {}
+    for kind, kw in [
+        ("fp32", {}),
+        ("sq", dict(bits=8)),
+        ("pq", dict(m=16, l_pq=8, kmeans_iters=10)),
+        ("pca", dict(alpha=0.9)),
+        ("flash", dict(FLASH_KW)),
+    ]:
+        be = graph.make_backend(kind, data, key, **kw)
+        index, _ = build_hnsw(data, be, params=DEFAULT_PARAMS)
+        curve = []
+        for ef in (16, 32, 64, 128):
+            f = lambda: search_hnsw(
+                index, queries, k=10, ef_search=ef, max_layers=3,
+                rerank_vectors=data,
+            )
+            dt = timeit(lambda: f().ids, repeats=3)
+            res = f()
+            rec = recall_at_k(res.ids, tids, 10)
+            adr = average_distance_ratio(res.dists, tds, 10)
+            qps = queries.shape[0] / dt
+            curve.append(dict(ef=ef, qps=qps, recall=rec, adr=adr))
+            emit(
+                f"search/{kind}/ef{ef}", dt / queries.shape[0] * 1e6,
+                f"qps={qps:.0f} recall={rec:.3f} adr={adr:.3f}",
+            )
+        out[kind] = curve
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,65 @@
+"""Paper Figure 12 + Table 3 — SIMD register-width generality & on/off ablation.
+
+TPU analogue of SSE/AVX/AVX512: the neighbor batch B a single "register
+load" serves. We sweep the blocked-scan batch dimension B ∈ {16, 32, 64, 128}
+(CPU 128-bit = 16 codes/load … TPU lane row = 128) and measure the ADT-scan
+kernel against the scalar-gather reference (the "SIMD off" row of Table 3).
+
+Wall times here are interpret-mode/CPU, so the *derived* column also reports
+the cost-model view: register loads per distance = M_F·H/U (Eq. 13) vs the
+fp32 baseline's 32·D/U (Eq. 12).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core import to_neighbor_blocks
+from repro.kernels import ops, ref
+
+
+def run() -> dict:
+    rng = np.random.default_rng(0)
+    n, m, k = 1 << 14, 16, 16
+    codes = jnp.asarray(rng.integers(0, k, (n, m)), jnp.int32)
+    adt = jnp.asarray(rng.integers(0, 255, (m, k)), jnp.int32)
+    out = {}
+
+    # Table 3 analogue: vectorized scan vs per-element gather loop semantics
+    t_vec = timeit(lambda: ops.flash_scan(codes, adt, impl="ref"))
+    emit("simd/vectorized_scan", t_vec / n * 1e6, f"n={n} M={m}")
+    d = 768
+    u = 128  # SSE-width register bits
+    loads_fp32 = 32 * d // u
+    loads_flash = m * 8 // u
+    emit(
+        "simd/register_loads_model", 0.0,
+        f"fp32={loads_fp32}/dist flash={loads_flash}/dist "
+        f"reduction={loads_fp32 / loads_flash:.0f}x (Eq.12/13, D=768)",
+    )
+
+    # Figure 12 analogue: blocked layout, batch width sweep
+    for b in (16, 32, 64, 128):
+        blocks = to_neighbor_blocks(codes[: (n // b) * b], b)  # (n/b, M, b)
+        t = timeit(lambda bl=blocks: ops.flash_scan_blocked(bl, adt, impl="ref"))
+        out[b] = t
+        emit(
+            f"simd/blocked_B{b}", t / n * 1e6,
+            f"loads_per_dist={m * 8 * 16 // (b * 8 * 16)}… batch={b}",
+        )
+
+    # interpret-mode Pallas parity check at each width (correctness gate)
+    for b in (16, 128):
+        blocks = to_neighbor_blocks(codes[: (n // b) * b], b)
+        got = ops.flash_scan_blocked(blocks, adt, impl="interpret")
+        want = ref.flash_scan_blocked_ref(blocks, adt)
+        assert bool(jnp.all(got == want)), f"kernel mismatch at B={b}"
+    emit("simd/pallas_interpret_parity", 0.0, "exact for B in {16,128}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

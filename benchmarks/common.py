@@ -1,0 +1,49 @@
+"""Shared benchmark utilities: datasets, timing, CSV output.
+
+Scale honesty (DESIGN.md §7): this container is a single CPU core, so
+datasets are 10³–10⁴ synthetic embedding-like vectors (vs the paper's
+10⁷–10⁹). We report *ratios* (speedups, recall deltas) and cost-model terms,
+which is what the mechanism predicts scale-freely.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import vector_dataset
+from repro.graph.hnsw import HNSWParams
+
+ROWS: list[dict] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    ROWS.append({"name": name, "us_per_call": us_per_call, "derived": derived})
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def bench_data(n: int = 4000, d: int = 64, *, seed: int = 0):
+    x = vector_dataset(seed, n=n + 200, d=d, n_clusters=48, sep=1.0)
+    return jnp.asarray(x[:n]), jnp.asarray(x[n:])
+
+
+DEFAULT_PARAMS = HNSWParams(
+    r_upper=8, r_base=16, ef=48, batch=32, max_layers=3
+)
+
+FLASH_KW = dict(d_f=32, m_f=16, l_f=4, h=8, kmeans_iters=10)
+
+
+def timeit(fn, *args, repeats: int = 3, warmup: int = 1) -> float:
+    """Median wall seconds of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))

@@ -1,0 +1,51 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit).
+
+  bench_indexing     Figures 6, 7 + Table 4   (build time / size / coding time)
+  bench_search       Figures 8, 9             (QPS-Recall, QPS-ADR)
+  bench_scalability  Figures 10, 11           (volume + segment scaling)
+  bench_simd         Figure 12 + Table 3      (batch-width sweep, SIMD on/off)
+  bench_generality   Figures 13, 14           (Vamana / NSG with Flash)
+  bench_memory       Table 2 + Figures 1, 15  (NMA/bytes model, time profile)
+  bench_params       Figures 3, 4, 16         (parameter sensitivity)
+  bench_retrieval    beyond-paper             (retrieval_cand serving cell)
+
+Roofline terms per (arch × shape) come from the dry-run, not this harness:
+``python -m repro.launch.dryrun`` (see EXPERIMENTS.md §Roofline).
+"""
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_generality,
+        bench_indexing,
+        bench_memory,
+        bench_params,
+        bench_retrieval,
+        bench_scalability,
+        bench_search,
+        bench_simd,
+    )
+
+    print("name,us_per_call,derived")
+    failures = []
+    for mod in (
+        bench_indexing, bench_search, bench_scalability, bench_simd,
+        bench_generality, bench_memory, bench_params, bench_retrieval,
+    ):
+        try:
+            mod.run()
+        except Exception as e:  # noqa: BLE001
+            failures.append((mod.__name__, e))
+            traceback.print_exc()
+    if failures:
+        print(f"FAILED benches: {[m for m, _ in failures]}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,64 @@
+"""Arch-applicability integration (DESIGN.md §4): molecular kNN-graph
+construction through the Flash index.
+
+Geometric GNNs (NequIP/EGNN/Equiformer) consume radius/kNN graphs over atom
+environments; building that graph IS an ANN problem. Here, SOAP-like
+environment descriptors are indexed with HNSW-Flash and the resulting kNN
+graph feeds an EGNN energy model.
+
+    PYTHONPATH=src python examples/gnn_graph_build.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import graph
+from repro.graph.hnsw import HNSWParams, build_hnsw, search_hnsw
+from repro.graph.knn import exact_knn
+from repro.models.gnn.common import GraphBatch
+from repro.models.gnn.egnn import EGNNConfig, egnn_forward, init_egnn
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    n_atoms, d_desc, k = 4000, 48, 8
+    rng = np.random.default_rng(0)
+    positions = jnp.asarray(rng.normal(size=(n_atoms, 3)) * 5, jnp.float32)
+    # environment descriptors (stand-in for SOAP/ACE features)
+    desc = jnp.asarray(rng.normal(size=(n_atoms, d_desc)), jnp.float32)
+
+    t0 = time.perf_counter()
+    be = graph.make_backend("flash", desc, key, d_f=32, m_f=16, kmeans_iters=10)
+    index, _ = build_hnsw(
+        desc, be, params=HNSWParams(r_upper=8, r_base=16, ef=48, batch=32)
+    )
+    res = search_hnsw(index, desc, k=k + 1, ef_search=64, rerank_vectors=desc)
+    t_ann = time.perf_counter() - t0
+    nbrs = res.ids[:, 1:]  # drop self
+
+    tids, _ = exact_knn(desc, desc, k=k + 1)
+    overlap = float(jnp.mean(jnp.any(
+        nbrs[:, :, None] == tids[:, None, 1:], axis=-1)))
+    print(f"kNN graph via HNSW-Flash: {t_ann:.1f}s, "
+          f"edge agreement with exact kNN = {overlap:.3f}")
+
+    senders = nbrs.reshape(-1)
+    receivers = jnp.repeat(jnp.arange(n_atoms), k)
+    g = GraphBatch(
+        nodes=desc[:, :8], positions=positions, edges=None,
+        senders=senders.astype(jnp.int32), receivers=receivers.astype(jnp.int32),
+        node_mask=jnp.ones((n_atoms,), bool),
+        edge_mask=senders >= 0,
+        graph_id=jnp.zeros((n_atoms,), jnp.int32), n_graphs=1,
+    )
+    cfg = EGNNConfig(n_layers=2, d_hidden=16, d_in=8)
+    energy, _ = egnn_forward(init_egnn(key, cfg), g, cfg)
+    print(f"EGNN on the built graph -> energy {float(energy[0, 0]):+.4f} "
+          f"(finite: {bool(jnp.isfinite(energy).all())})")
+
+
+if __name__ == "__main__":
+    main()

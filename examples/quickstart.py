@@ -1,0 +1,62 @@
+"""Quickstart: build an HNSW index with Flash compact coding and search it.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds the same index with full-precision distances and with Flash codes,
+then compares build cost and search recall — the paper's core trade in ~60
+lines.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import graph
+from repro.data.synthetic import vector_dataset
+from repro.graph.hnsw import HNSWParams, build_hnsw, search_hnsw
+from repro.graph.knn import exact_knn, recall_at_k
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    n, d = 8000, 96
+    data = jnp.asarray(vector_dataset(0, n=n + 100, d=d, n_clusters=64))
+    data, queries = data[:n], data[n:]
+    params = HNSWParams(r_upper=8, r_base=16, ef=48, batch=32, max_layers=3)
+
+    print(f"dataset: {n} x {d} float32 ({n * d * 4 / 1e6:.0f} MB)")
+    tids, _ = exact_knn(queries, data, k=10)
+
+    for kind, kw in [
+        ("fp32", {}),
+        ("flash", dict(d_f=48, m_f=16, l_f=4, h=8, kmeans_iters=12)),
+    ]:
+        t0 = time.perf_counter()
+        backend = graph.make_backend(kind, data, key, **kw)
+        jax.block_until_ready(jax.tree_util.tree_leaves(backend)[0])
+        t_code = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        index, stats = build_hnsw(data, backend, params=params)
+        jax.block_until_ready(index.adj0)
+        t_build = time.perf_counter() - t0
+
+        res = search_hnsw(
+            index, queries, k=10, ef_search=96, max_layers=3,
+            rerank_vectors=None if kind == "fp32" else data,
+        )
+        rec = recall_at_k(res.ids, tids, 10)
+        payload = (
+            n * d * 4 if kind == "fp32"
+            else int(backend.codes.shape[0] * backend.coder.code_bytes)
+        )
+        print(
+            f"{kind:6s} coding {t_code:5.1f}s  build {t_build:6.1f}s "
+            f"({float(stats.n_dists):.2e} dists)  recall@10 {rec:.3f}  "
+            f"vector payload {payload / 1e6:6.2f} MB"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""repro — a JAX/Pallas framework reproducing and extending
+"Accelerating Graph Indexing for ANNS on Modern CPUs" (SIGMOD'25, Flash).
+
+Layers
+------
+core/        the paper's compact-coding contribution (PCA, PQ/SQ baselines, Flash)
+kernels/     Pallas TPU kernels (ADT scan, L2 batch, SQ int8, top-k merge)
+graph/       graph-index substrate (HNSW / Vamana / NSG, beam search, selection)
+models/      assigned architecture zoo (LMs, MoE, GNNs, recsys)
+data/        synthetic generators, neighbor sampler, sharded pipeline
+train/       optimizer, train loop, checkpointing, gradient compression
+serve/       decode + retrieval serving
+distributed/ sharding rules, pipeline parallelism
+configs/     one config per assigned architecture (+ the paper's own workloads)
+launch/      production mesh, multi-pod dry-run, train/serve/build drivers
+analysis/    roofline derivation from compiled HLO
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,71 @@
+"""Lowered-HLO text parsing: collective bytes per category.
+
+``compiled.cost_analysis()`` has FLOPs and HBM bytes but no collective
+traffic, so we sum the operand sizes of every collective op in the
+optimized HLO (``compiled.as_text()``): all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute.
+"""
+
+from __future__ import annotations
+
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# e.g.:  %x = f32[16,128]{1,0} all-reduce(...)
+#        ROOT %y = (bf16[2,4]{...}, bf16[2,4]{...}) all-to-all(...)
+_OP_RE = re.compile(
+    r"=\s*(?P<sig>\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"(?P<dt>[a-z0-9]+)\[(?P<dims>[0-9,]*)\]")
+
+
+def _shape_bytes(sig: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(sig):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-category *output* bytes of all collective ops (per device).
+
+    Uses the result shape as the traffic proxy (standard roofline practice:
+    an all-gather's result is what crosses the links; -start/-done pairs are
+    deduped by only counting -start or the bare form).
+    """
+    out: dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    out["count"] = 0
+    seen_done = 0
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            seen_done += 1
+            continue  # paired with a counted -start
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        b = _shape_bytes(m.group("sig"))
+        out[op] += b
+        out["count"] += 1
+    out["total"] = sum(out[c] for c in _COLLECTIVES)
+    return out

@@ -1,0 +1,129 @@
+"""Three-term roofline from a compiled dry-run artifact (assignment §Roofline).
+
+    compute term    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory term     = HLO_bytes / (chips × HBM_bw)
+    collective term = collective_bytes / (chips × link_bw)
+
+Hardware constants (TPU v5e-class, per chip): 197 TFLOP/s bf16, 819 GB/s
+HBM, ~50 GB/s/link ICI. cost_analysis() FLOPs/bytes are whole-program
+(all-device) totals on most backends — we normalize per chip; collective
+bytes come from the optimized HLO text (one device's program → already
+per-chip).
+"""
+
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass
+
+from repro.analysis.hlo import collective_bytes
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+LINK_BW = 50e9  # bytes/s / link
+
+
+@dataclass
+class Roofline:
+    name: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float  # per chip
+    coll_breakdown: dict
+    model_flops: float
+
+    @property
+    def t_compute(self) -> float:
+        # hlo_flops is the PER-DEVICE partitioned program's count (validated
+        # against analytic 6·N·D/chips on qwen2-72b; see EXPERIMENTS.md).
+        return self.hlo_flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs (both per chip) — how much compiled
+        compute is 'useful'; catches remat/dispatch/redundancy waste."""
+        if not self.hlo_flops:
+            return 0.0
+        return self.model_flops / self.chips / self.hlo_flops
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Achievable fraction of compute peak: t_compute / max(all terms) —
+        1.0 means compute-bound at peak; lower means memory/collectives cap it."""
+        t = max(self.t_compute, self.t_memory, self.t_collective)
+        return self.t_compute / t if t > 0 else 0.0
+
+    def report(self) -> dict:
+        return {
+            "name": self.name,
+            "chips": self.chips,
+            "hlo_flops": self.hlo_flops,
+            "hlo_bytes": self.hlo_bytes,
+            "coll_bytes_per_chip": self.coll_bytes,
+            "coll_breakdown": self.coll_breakdown,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def analyze(name: str, compiled, *, chips: int, model_flops: float) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # some backends return [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    try:
+        text = compiled.as_text()
+    except Exception:
+        text = ""
+    coll = collective_bytes(text)
+    return Roofline(
+        name=name, chips=chips, hlo_flops=flops, hlo_bytes=byts,
+        coll_bytes=float(coll["total"]), coll_breakdown=coll,
+        model_flops=model_flops,
+    )
+
+
+def memory_analysis_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    out = {}
+    for k in (
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "generated_code_size_in_bytes",
+        "alias_size_in_bytes",
+    ):
+        if hasattr(ma, k):
+            out[k] = int(getattr(ma, k))
+    if out:
+        out["total_nonalias_bytes"] = (
+            out.get("argument_size_in_bytes", 0)
+            + out.get("output_size_in_bytes", 0)
+            + out.get("temp_size_in_bytes", 0)
+            - out.get("alias_size_in_bytes", 0)
+        )
+    return out

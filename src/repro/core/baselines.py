@@ -1,0 +1,193 @@
+"""The paper's three baseline coders dropped into graph construction (§3.2).
+
+* :class:`PQCoder`  — Product Quantization with ADC tables for the CA stage and
+  SDC (inter-centroid) tables for the NS stage (§3.2.1). Default L_PQ=8
+  (K=256 centroids/subspace) as in the paper's experiments.
+* :class:`SQCoder`  — per-dimension Scalar Quantization with the "no-decode"
+  quantized-domain distance (§3.2.2, Qdrant-style optimized variant).
+* :class:`PCACoder` — dimensionality reduction; full-precision distance on the
+  first d_PCA principal components (§3.2.3).
+
+Each exposes ``encode`` / ``reconstruct`` (for Theorem-1 calibration) and the
+distance hooks consumed by ``repro.graph.backends``.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kmeans as km
+from repro.core import pca as pca_mod
+from repro.core import quantize as qz
+from repro.core.flash import _partial_dists, _split_subspaces
+
+
+# ---------------------------------------------------------------------------
+# PQ
+# ---------------------------------------------------------------------------
+
+
+class PQCoder(NamedTuple):
+    """Product quantizer state.
+
+    codebooks: (M, K, ds) centroids on raw dims (no rotation, unlike Flash).
+    sdc:       (M, K, K)  float inter-centroid squared partial distances.
+    d_in:      original dimensionality (for unpadding).
+    """
+
+    codebooks: jax.Array
+    sdc: jax.Array
+
+    @property
+    def m(self) -> int:
+        return self.codebooks.shape[0]
+
+    @property
+    def k(self) -> int:
+        return self.codebooks.shape[1]
+
+    @property
+    def ds(self) -> int:
+        return self.codebooks.shape[2]
+
+    @property
+    def code_bytes(self) -> float:
+        import numpy as np
+
+        return self.m * np.log2(self.k) / 8.0
+
+
+def fit_pq(
+    key: jax.Array,
+    sample: jax.Array,
+    *,
+    m: int,
+    l_pq: int = 8,
+    kmeans_iters: int = 25,
+    max_fit_sample: int = 32768,
+) -> PQCoder:
+    sample = jnp.asarray(sample, jnp.float32)[:max_fit_sample]
+    k = 1 << l_pq
+    d = sample.shape[1]
+    ds = -(-d // m)
+    subs = _split_subspaces(sample, m, ds)  # (M, n, ds)
+    codebooks, _ = km.kmeans_fit_batched(key, subs, k=k, iters=kmeans_iters)
+    diff = codebooks[:, :, None, :] - codebooks[:, None, :, :]
+    sdc = jnp.sum(diff * diff, axis=-1)
+    return PQCoder(codebooks=codebooks, sdc=sdc)
+
+
+def pq_encode(coder: PQCoder, x: jax.Array) -> jax.Array:
+    """(n, D) -> (n, M) int32 codes."""
+    subs = _split_subspaces(x, coder.m, coder.ds)
+    return km.assign_codes_batched(subs, coder.codebooks).T.astype(jnp.int32)
+
+
+def pq_adc_table(coder: PQCoder, q: jax.Array) -> jax.Array:
+    """Asymmetric distance table for a query (D,) -> (M, K) float32 (§3.2.1)."""
+    subs = _split_subspaces(q[None, :], coder.m, coder.ds)  # (M, 1, ds)
+    return _partial_dists(subs, coder.codebooks)[:, 0, :]
+
+
+def pq_reconstruct(coder: PQCoder, x: jax.Array) -> jax.Array:
+    codes = pq_encode(coder, x)  # (n, M)
+    m_idx = jnp.arange(coder.m)[:, None]
+    gathered = coder.codebooks[m_idx, codes.T]  # (M, n, ds)
+    flat = jnp.transpose(gathered, (1, 0, 2)).reshape(x.shape[0], -1)
+    return flat[:, : x.shape[1]]
+
+
+def pq_sdc_lookup(coder: PQCoder, codes_a: jax.Array, codes_b: jax.Array) -> jax.Array:
+    """Symmetric distance between coded vectors: Σ_m sdc[m, a_m, b_m]."""
+    codes_a, codes_b = jnp.broadcast_arrays(codes_a, codes_b)
+    m_idx = jnp.arange(coder.m)
+    return jnp.sum(coder.sdc[m_idx, codes_a, codes_b], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# SQ
+# ---------------------------------------------------------------------------
+
+
+class SQCoder(NamedTuple):
+    """Scalar quantizer state (per-dimension affine, L_SQ bits)."""
+
+    params: qz.SQParams
+    s2: jax.Array  # (D,) per-dim squared scale for quantized-domain L2
+
+    @property
+    def code_bytes(self) -> float:
+        bits = int(self.params.bits)
+        return self.params.lo.shape[0] * bits / 8.0
+
+
+def fit_sq(sample: jax.Array, *, bits: int = 8) -> SQCoder:
+    params = qz.sq_fit(jnp.asarray(sample, jnp.float32), bits=bits)
+    return SQCoder(params=params, s2=qz.sq_dim_scales(params))
+
+
+def sq_encode(coder: SQCoder, x: jax.Array) -> jax.Array:
+    return qz.sq_encode(coder.params, x)
+
+
+def sq_reconstruct(coder: SQCoder, x: jax.Array) -> jax.Array:
+    return qz.sq_decode(coder.params, qz.sq_encode(coder.params, x))
+
+
+def sq_dist(coder: SQCoder, qa: jax.Array, qb: jax.Array) -> jax.Array:
+    """Quantized-domain squared L2: Σ_d s2_d (qa_d − qb_d)².
+
+    qa, qb: (..., D) int32 codes. Integer subtract/square then one fused
+    scale-accumulate — no decode of either operand (the optimized HNSW-SQ
+    variant the paper benchmarks; kernelized in repro.kernels.sq_l2).
+    """
+    diff = (qa - qb).astype(jnp.float32)
+    return jnp.sum(coder.s2 * diff * diff, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# PCA
+# ---------------------------------------------------------------------------
+
+
+class PCACoder(NamedTuple):
+    """Dimensionality-reduction coder: keep d principal components."""
+
+    mean: jax.Array  # (D,)
+    rot: jax.Array  # (D, d)
+
+    @property
+    def d(self) -> int:
+        return self.rot.shape[1]
+
+    @property
+    def code_bytes(self) -> float:
+        return self.d * 4.0
+
+
+def fit_pca_coder(
+    sample: jax.Array, *, d: int | None = None, alpha: float = 0.9
+) -> PCACoder:
+    """Fit; if ``d`` is None pick the smallest d with cum-variance >= alpha
+    (the paper sets d_PCA at >= 90% cumulative variance)."""
+    model = pca_mod.fit_pca(sample)
+    if d is None:
+        d = pca_mod.variance_dim(model, alpha)
+    return PCACoder(mean=model.mean, rot=model.components[:, :d])
+
+
+def pca_encode(coder: PCACoder, x: jax.Array) -> jax.Array:
+    return (x - coder.mean) @ coder.rot
+
+
+def pca_reconstruct(coder: PCACoder, x: jax.Array) -> jax.Array:
+    return pca_encode(coder, x) @ coder.rot.T + coder.mean
+
+
+def pca_dist(za: jax.Array, zb: jax.Array) -> jax.Array:
+    """Squared L2 in the reduced space (norm-preserving rotation ⇒ comparable)."""
+    diff = za - zb
+    return jnp.sum(diff * diff, axis=-1)

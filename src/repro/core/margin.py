@@ -1,0 +1,181 @@
+"""Lemma 1 / Theorem 1 machinery (paper §3.1).
+
+Distance comparisons in graph construction reduce to the sign of a hyperplane
+test:
+
+    δ(u, v) < δ(u, w)  ⇔  e·u − b < 0,   e = w − v,  b = (‖w‖² − ‖v‖²)/2.
+
+Theorem 1: with compact codes u', v', w' and error vectors E_x = x − x',
+the compressed comparison has the same sign whenever |e·u − b| ≥ |E| with
+
+    E = (E_w − E_v)·u + (w − v)·E_u + E_v·E_u − E_w·E_u
+        + ½‖E_w‖² − ½‖E_v‖² + v·E_v − w·E_w                         (Eq. 1)
+
+This module implements the test, the error term, and the paper's calibration
+protocol (§3.1 last paragraph): sample vectors, take their two nearest
+neighbors to form (u, v, w) triples, and measure the fraction of triples whose
+margin dominates the compression error. Coder parameters are then tuned to
+maximize that satisfaction rate at minimum code size.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def hyperplane_margin(u: jax.Array, v: jax.Array, w: jax.Array) -> jax.Array:
+    """e·u − b for the perpendicular-bisector hyperplane of (v, w) (Lemma 1).
+
+    Broadcasting: all of u, v, w are (..., D); returns (...).
+    """
+    e = w - v
+    b = 0.5 * (jnp.sum(w * w, axis=-1) - jnp.sum(v * v, axis=-1))
+    return jnp.sum(e * u, axis=-1) - b
+
+
+def comparison_sign(u: jax.Array, v: jax.Array, w: jax.Array) -> jax.Array:
+    """sign(δ(u,v) − δ(u,w)) computed directly (oracle for Lemma 1 tests)."""
+    dv = jnp.sum((u - v) ** 2, axis=-1)
+    dw = jnp.sum((u - w) ** 2, axis=-1)
+    return jnp.sign(dv - dw)
+
+
+def error_term(
+    u: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    eu: jax.Array,
+    ev: jax.Array,
+    ew: jax.Array,
+) -> jax.Array:
+    """E of Theorem 1 (Eq. 1). All inputs (..., D); returns (...)."""
+    dot = lambda a, b: jnp.sum(a * b, axis=-1)
+    return (
+        dot(ew - ev, u)
+        + dot(w - v, eu)
+        + dot(ev, eu)
+        - dot(ew, eu)
+        + 0.5 * dot(ew, ew)
+        - 0.5 * dot(ev, ev)
+        + dot(v, ev)
+        - dot(w, ew)
+    )
+
+
+class TripleSet(NamedTuple):
+    """Calibration triples: each row is (u, its NN v, its 2nd-NN w)."""
+
+    u: jax.Array  # (T, D)
+    v: jax.Array  # (T, D)
+    w: jax.Array  # (T, D)
+
+
+def sample_triples(
+    key: jax.Array,
+    data: jax.Array,
+    *,
+    n_triples: int = 1024,
+    topk: int = 100,
+    pool: int = 8192,
+) -> TripleSet:
+    """Paper protocol: sample vectors, find top-k NNs, pair each vector with
+    two of its nearest neighbors.
+
+    For tractability the NN search runs against a sampled pool. Among the
+    ``topk`` neighbors we take the 1st and 2nd (the hardest comparison — the
+    regime HNSW construction actually exercises near convergence).
+    """
+    n = data.shape[0]
+    kq, kp = jax.random.split(key)
+    q_idx = jax.random.choice(kq, n, shape=(min(n_triples, n),), replace=False)
+    p_idx = jax.random.choice(kp, n, shape=(min(pool, n),), replace=False)
+    q = data[q_idx]
+    p = data[p_idx]
+    d2 = (
+        jnp.sum(q * q, axis=1, keepdims=True)
+        + jnp.sum(p * p, axis=1)[None, :]
+        - 2.0 * q @ p.T
+    )
+    # Exclude self-matches (distance ~0) by masking near-zero entries.
+    d2 = jnp.where(d2 < 1e-9, jnp.inf, d2)
+    k = min(topk, p.shape[0])
+    _, nn = jax.lax.top_k(-d2, k)
+    v = p[nn[:, 0]]
+    w = p[nn[:, 1]]
+    return TripleSet(u=q, v=v, w=w)
+
+
+def margin_satisfaction_rate(
+    triples: TripleSet,
+    reconstruct: Callable[[jax.Array], jax.Array],
+) -> tuple[jax.Array, jax.Array]:
+    """Fraction of triples with |e·u − b| ≥ |E| for a coder's reconstruction.
+
+    ``reconstruct`` maps original vectors (T, D) -> derived vectors u' (T, D)
+    (decode(encode(x)) in the original space; see paper §3.1: "u' refers to the
+    vector derived from the compact vector code").
+
+    Returns (satisfaction_rate, sign_agreement_rate). The latter is the
+    empirically stronger statistic: even when the margin bound is violated the
+    sign often still agrees; the bound is sufficient, not necessary.
+    """
+    u, v, w = triples
+    eu = u - reconstruct(u)
+    ev = v - reconstruct(v)
+    ew = w - reconstruct(w)
+    margin = hyperplane_margin(u, v, w)
+    err = error_term(u, v, w, eu, ev, ew)
+    ok = jnp.abs(margin) >= jnp.abs(err)
+    sign_match = comparison_sign(u, v, w) == comparison_sign(
+        reconstruct(u), reconstruct(v), reconstruct(w)
+    )
+    return jnp.mean(ok.astype(jnp.float32)), jnp.mean(sign_match.astype(jnp.float32))
+
+
+def calibrate(
+    key: jax.Array,
+    data: jax.Array,
+    coder_factory: Callable[..., tuple[Callable[[jax.Array], jax.Array], float]],
+    grid: list[dict],
+    *,
+    target_rate: float = 0.9,
+    n_triples: int = 512,
+) -> dict:
+    """Grid-tune coder params: maximize satisfaction subject to min code bytes.
+
+    ``coder_factory(**params)`` must return ``(reconstruct_fn, code_bytes)``.
+    Returns the smallest-code params whose sign-agreement rate >= target_rate,
+    falling back to the best-rate params if none reach the target.
+    """
+    triples = sample_triples(key, data, n_triples=n_triples)
+    results = []
+    for params in grid:
+        reconstruct, code_bytes = coder_factory(**params)
+        rate, sign_rate = margin_satisfaction_rate(triples, reconstruct)
+        results.append(
+            {
+                **params,
+                "code_bytes": code_bytes,
+                "margin_rate": float(rate),
+                "sign_rate": float(sign_rate),
+            }
+        )
+    feasible = [r for r in results if r["sign_rate"] >= target_rate]
+    if feasible:
+        best = min(feasible, key=lambda r: (r["code_bytes"], -r["sign_rate"]))
+    else:
+        best = max(results, key=lambda r: r["sign_rate"])
+    best = dict(best)
+    best["all_results"] = results
+    return best
+
+
+def np_ground_truth_sign(u: np.ndarray, v: np.ndarray, w: np.ndarray) -> np.ndarray:
+    """Numpy oracle used by property tests."""
+    dv = np.sum((u - v) ** 2, axis=-1)
+    dw = np.sum((u - w) ** 2, axis=-1)
+    return np.sign(dv - dw)

@@ -1,0 +1,95 @@
+"""Principal component extraction (paper §3.3.2).
+
+Flash rotates vectors into the eigenbasis of the data covariance so that the
+limited bit budget of each subspace codebook is spent on high-variance
+directions. ``d_F`` is chosen as the smallest dimensionality whose cumulative
+explained variance reaches a target fraction ``alpha`` (paper uses 0.9).
+
+The decomposition is a plain covariance ``eigh`` — datasets are sampled down to
+``max_sample`` rows first (the paper fits codebooks on a sample too), and the
+accumulation runs in float64 on host for numerical robustness, which is what a
+production offline coding job would do.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class PCAModel(NamedTuple):
+    """Orthogonal rotation fitted to data.
+
+    mean:        (D,)   data mean.
+    components:  (D, D) columns are unit eigenvectors, descending eigenvalue.
+    eigenvalues: (D,)   descending, >= 0.
+    """
+
+    mean: jax.Array
+    components: jax.Array
+    eigenvalues: jax.Array
+
+    @property
+    def dim(self) -> int:
+        return self.mean.shape[0]
+
+
+def fit_pca(x: jax.Array | np.ndarray, *, max_sample: int = 65536) -> PCAModel:
+    """Fit a full-rank PCA rotation on (a sample of) ``x`` ((n, D))."""
+    x = np.asarray(x, dtype=np.float64)
+    if x.ndim != 2:
+        raise ValueError(f"expected (n, D), got {x.shape}")
+    n = x.shape[0]
+    if n > max_sample:
+        # Deterministic stride subsample — cheap and unbiased enough for a
+        # covariance estimate; matches the paper's "sample a subset" protocol.
+        step = n // max_sample
+        x = x[:: step][:max_sample]
+    mean = x.mean(axis=0)
+    xc = x - mean
+    cov = (xc.T @ xc) / max(x.shape[0] - 1, 1)
+    eigval, eigvec = np.linalg.eigh(cov)  # ascending
+    order = np.argsort(eigval)[::-1]
+    eigval = np.clip(eigval[order], 0.0, None)
+    eigvec = eigvec[:, order]
+    return PCAModel(
+        mean=jnp.asarray(mean, jnp.float32),
+        components=jnp.asarray(eigvec, jnp.float32),
+        eigenvalues=jnp.asarray(eigval, jnp.float32),
+    )
+
+
+def variance_dim(model: PCAModel, alpha: float) -> int:
+    """Smallest d with cumulative explained variance >= alpha (paper f(d))."""
+    ev = np.asarray(model.eigenvalues, dtype=np.float64)
+    total = ev.sum()
+    if total <= 0:
+        return model.dim
+    frac = np.cumsum(ev) / total
+    return int(np.searchsorted(frac, alpha) + 1)
+
+
+def transform(model: PCAModel, x: jax.Array, d: int | None = None) -> jax.Array:
+    """Project ``x`` ((..., D)) onto the first ``d`` principal components."""
+    d = model.dim if d is None else d
+    return (x - model.mean) @ model.components[:, :d]
+
+
+def inverse_transform(model: PCAModel, z: jax.Array) -> jax.Array:
+    """Lift ``z`` ((..., d)) back to the original space (zero-padding the tail).
+
+    Used to compute the Theorem-1 error vector E_u for PCA-style coders: the
+    reconstruction lives in the original space, ``E_u = u - inverse(transform(u))``.
+    """
+    d = z.shape[-1]
+    return z @ model.components[:, :d].T + model.mean
+
+
+def reconstruction_error(model: PCAModel, x: jax.Array, d: int) -> jax.Array:
+    """Per-row L2 reconstruction error when keeping ``d`` components."""
+    z = transform(model, x, d)
+    xr = inverse_transform(model, z)
+    return jnp.linalg.norm(x - xr, axis=-1)

@@ -1,0 +1,59 @@
+"""Sharded host data pipeline with prefetch.
+
+Determinism contract (elastic restarts, DESIGN.md §5): batch content is a
+pure function of (seed, step, shard_id) — no generator state survives a
+restart, so resuming at step S reproduces exactly the stream a never-failed
+run would have seen.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator
+
+
+def sharded_batches(
+    make_batch: Callable[[int, int], dict],
+    *,
+    shard_id: int,
+    start_step: int = 0,
+) -> Iterator[dict]:
+    """make_batch(step, shard_id) -> batch dict; infinite iterator."""
+    step = start_step
+    while True:
+        yield make_batch(step, shard_id)
+        step += 1
+
+
+def prefetch(it: Iterator, size: int = 2) -> Iterator:
+    """Background-thread prefetch (overlaps host batch gen with device step)."""
+    q: queue.Queue = queue.Queue(maxsize=size)
+    sentinel = object()
+
+    def worker():
+        try:
+            for item in it:
+                q.put(item)
+        finally:
+            q.put(sentinel)
+
+    t = threading.Thread(target=worker, daemon=True)
+    t.start()
+    while True:
+        item = q.get()
+        if item is sentinel:
+            return
+        yield item
+
+
+def microbatch_reshape(batch: dict, microbatches: int) -> dict:
+    """Split the leading batch axis into (microbatches, B/microbatches)."""
+    import jax
+
+    def r(x):
+        b = x.shape[0]
+        assert b % microbatches == 0, (b, microbatches)
+        return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+    return jax.tree_util.tree_map(r, batch)

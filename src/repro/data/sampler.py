@@ -1,0 +1,100 @@
+"""Real neighbor sampler for sampled-subgraph GNN training (minibatch_lg).
+
+GraphSAGE-style fanout sampling over a host-side CSR graph — the part of a
+production GNN system that never runs on the accelerator. Output is a padded
+edge-list subgraph (static shapes) ready for the device step.
+
+Layout (fanouts = [f1, f2], seed_nodes = B):
+  layer-0 nodes: B seeds
+  layer-1:       ≤ B·f1 sampled neighbors
+  layer-2:       ≤ B·f1·f2
+  edges point sampled-neighbor → parent (message flows to the seed).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def sample_subgraph(
+    indptr: np.ndarray,
+    indices: np.ndarray,
+    seeds: np.ndarray,
+    *,
+    fanouts: list[int],
+    rng: np.random.Generator,
+):
+    """Returns dict with padded arrays:
+    node_ids (N_max,), senders, receivers (E_max,), node_mask, edge_mask,
+    n_seeds. N_max/E_max are the worst-case sizes (static per fanout spec).
+    """
+    layers = [np.asarray(seeds, np.int64)]
+    send_l, recv_l = [], []
+    # local ids: seeds occupy [0, B); each sampled layer appended after
+    all_nodes = list(seeds)
+    local_of_parent = np.arange(len(seeds))
+    for f in fanouts:
+        parents = layers[-1]
+        new_nodes = []
+        for pi, p in enumerate(parents):
+            lo, hi = indptr[p], indptr[p + 1]
+            nbrs = indices[lo:hi]
+            if len(nbrs) == 0:
+                continue
+            take = rng.choice(nbrs, size=min(f, len(nbrs)), replace=False)
+            for t in take:
+                child_local = len(all_nodes) + len(new_nodes)
+                new_nodes.append(int(t))
+                send_l.append(child_local)
+                recv_l.append(int(local_of_parent[pi]))
+        start = len(all_nodes)
+        all_nodes.extend(new_nodes)
+        layers.append(np.asarray(new_nodes, np.int64))
+        local_of_parent = np.arange(start, len(all_nodes))
+
+    b = len(seeds)
+    n_max = b
+    e_max = 0
+    width = b
+    for f in fanouts:
+        width *= f
+        n_max += width
+        e_max += width
+
+    node_ids = np.full(n_max, -1, np.int64)
+    node_ids[: len(all_nodes)] = all_nodes
+    senders = np.zeros(e_max, np.int32)
+    receivers = np.zeros(e_max, np.int32)
+    senders[: len(send_l)] = send_l
+    receivers[: len(recv_l)] = recv_l
+    node_mask = node_ids >= 0
+    edge_mask = np.zeros(e_max, bool)
+    edge_mask[: len(send_l)] = True
+    return {
+        "node_ids": node_ids,
+        "senders": senders,
+        "receivers": receivers,
+        "node_mask": node_mask,
+        "edge_mask": edge_mask,
+        "n_seeds": b,
+    }
+
+
+def minibatch_stream(
+    indptr, indices, features, labels, *, batch_nodes: int,
+    fanouts: list[int], seed: int = 0,
+):
+    """Infinite deterministic generator of padded subgraph batches."""
+    n = len(indptr) - 1
+    step = 0
+    while True:
+        rng = np.random.default_rng((seed, step))
+        seeds = rng.choice(n, size=batch_nodes, replace=False)
+        sub = sample_subgraph(indptr, indices, seeds, fanouts=fanouts, rng=rng)
+        safe = np.where(sub["node_ids"] >= 0, sub["node_ids"], 0)
+        yield {
+            **sub,
+            "features": features[safe],
+            "labels": labels[seeds],
+        }
+        step += 1

@@ -1,0 +1,28 @@
+"""Ambient mesh context — lets deep model code (the MoE expert-parallel
+dispatch) find the mesh without threading it through every call signature."""
+
+from __future__ import annotations
+
+import contextlib
+
+_CURRENT_MESH = None
+
+
+def set_current_mesh(mesh) -> None:
+    global _CURRENT_MESH
+    _CURRENT_MESH = mesh
+
+
+def get_current_mesh():
+    return _CURRENT_MESH
+
+
+@contextlib.contextmanager
+def mesh_context(mesh):
+    global _CURRENT_MESH
+    prev = _CURRENT_MESH
+    _CURRENT_MESH = mesh
+    try:
+        yield mesh
+    finally:
+        _CURRENT_MESH = prev

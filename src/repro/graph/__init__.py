@@ -1,0 +1,23 @@
+"""Graph-index substrate: HNSW/Vamana/NSG builds over pluggable distance
+backends, beam search (CA), heuristic selection (NS), exact-kNN oracle."""
+
+from repro.graph.backends import (  # noqa: F401
+    FlashBackend,
+    FlashBlockedBackend,
+    FP32Backend,
+    PCABackend,
+    PQBackend,
+    SQBackend,
+    make_backend,
+)
+from repro.graph.beam import BeamResult, beam_search, greedy_descent  # noqa: F401
+from repro.graph.hnsw import (  # noqa: F401
+    BuildStats,
+    HNSWIndex,
+    HNSWParams,
+    build_hnsw,
+    sample_levels,
+    search_hnsw,
+)
+from repro.graph.knn import average_distance_ratio, exact_knn, recall_at_k  # noqa: F401
+from repro.graph.select import Selection, prune_list, select_neighbors  # noqa: F401

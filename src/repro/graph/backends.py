@@ -1,0 +1,277 @@
+"""Distance backends — the pluggable "how do we compare" axis of the paper.
+
+Graph construction (CA + NS stages) only ever *compares* distances (paper
+§2.2), so the index build is written against a small protocol and the five
+methods of the paper plug in:
+
+    fp32   unmodified HNSW          (full-precision L2)
+    pq     HNSW-PQ   (§3.2.1)       ADC tables for CA, SDC tables for NS
+    sq     HNSW-SQ   (§3.2.2)       int-domain scaled L2 (no-decode variant)
+    pca    HNSW-PCA  (§3.2.3)       full-precision L2 on d_PCA principal dims
+    flash  HNSW-Flash (§3.3)        quantized ADT (CA) + quantized SDT (NS)
+
+Protocol (all distances are *comparison-valid within one backend* — squared
+L2, or a monotone affine image of it; never mixed across backends):
+
+    prepare_query(q_raw)        -> qctx   per-inserted-vector state
+    query_dists(qctx, ids)      -> f32    distances query -> stored ids
+    neighbor_dists(qctx, node, ids) -> f32  same, but the caller names the
+                                  graph vertex whose neighbor list ``ids`` is;
+                                  lets the Flash blocked layout (§3.3.4) read
+                                  codes contiguously instead of gathering.
+    pair_dists(ids_a, ids_b)    -> f32    distances between stored ids
+    with_updated_edges(ids, nbr_ids) -> backend   commit hook (blocked layout)
+
+Backends are registered pytrees so whole index builds jit/vmap/shard cleanly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import core
+from repro.core import flash as flash_mod
+
+
+def _l2(a: jax.Array, b: jax.Array) -> jax.Array:
+    d = a - b
+    return jnp.sum(d * d, axis=-1)
+
+
+class _Base:
+    """Shared default implementations."""
+
+    def neighbor_dists(self, qctx, node, ids):  # noqa: ARG002 - node unused by default
+        return self.query_dists(qctx, ids)
+
+    def with_updated_edges(self, ids, nbr_ids):  # noqa: ARG002
+        return self
+
+    def tree_flatten(self):
+        children = tuple(getattr(self, name) for name in self._fields)
+        return children, None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):  # noqa: ARG003
+        obj = cls.__new__(cls)
+        for name, child in zip(cls._fields, children):
+            object.__setattr__(obj, name, child)
+        return obj
+
+
+@jax.tree_util.register_pytree_node_class
+class FP32Backend(_Base):
+    """Unmodified HNSW: exact squared L2 on raw vectors."""
+
+    _fields = ("vectors",)
+
+    def __init__(self, vectors: jax.Array):
+        self.vectors = vectors
+
+    @property
+    def n(self) -> int:
+        return self.vectors.shape[0]
+
+    def prepare_query(self, q: jax.Array):
+        return q
+
+    def query_dists(self, qctx, ids):
+        return _l2(self.vectors[ids], qctx)
+
+    def pair_dists(self, ids_a, ids_b):
+        ids_a, ids_b = jnp.broadcast_arrays(ids_a, ids_b)
+        return _l2(self.vectors[ids_a], self.vectors[ids_b])
+
+
+@jax.tree_util.register_pytree_node_class
+class PCABackend(_Base):
+    """HNSW-PCA: exact L2 on the first d_PCA principal components."""
+
+    _fields = ("coder", "z")
+
+    def __init__(self, coder: core.PCACoder, z: jax.Array):
+        self.coder = coder
+        self.z = z  # (n, d) projected database
+
+    @property
+    def n(self) -> int:
+        return self.z.shape[0]
+
+    def prepare_query(self, q: jax.Array):
+        return core.pca_encode(self.coder, q[None, :])[0]
+
+    def query_dists(self, qctx, ids):
+        return _l2(self.z[ids], qctx)
+
+    def pair_dists(self, ids_a, ids_b):
+        ids_a, ids_b = jnp.broadcast_arrays(ids_a, ids_b)
+        return _l2(self.z[ids_a], self.z[ids_b])
+
+
+@jax.tree_util.register_pytree_node_class
+class SQBackend(_Base):
+    """HNSW-SQ: quantized-domain scaled L2, no decode of either operand."""
+
+    _fields = ("coder", "codes")
+
+    def __init__(self, coder: core.SQCoder, codes: jax.Array):
+        self.coder = coder
+        self.codes = codes  # (n, D) int32 levels
+
+    @property
+    def n(self) -> int:
+        return self.codes.shape[0]
+
+    def prepare_query(self, q: jax.Array):
+        return core.sq_encode(self.coder, q[None, :])[0]
+
+    def query_dists(self, qctx, ids):
+        return core.sq_dist(self.coder, qctx, self.codes[ids])
+
+    def pair_dists(self, ids_a, ids_b):
+        ids_a, ids_b = jnp.broadcast_arrays(ids_a, ids_b)
+        return core.sq_dist(self.coder, self.codes[ids_a], self.codes[ids_b])
+
+
+@jax.tree_util.register_pytree_node_class
+class PQBackend(_Base):
+    """HNSW-PQ: float ADC table per query (CA), SDC centroid tables (NS)."""
+
+    _fields = ("coder", "codes")
+
+    def __init__(self, coder: core.PQCoder, codes: jax.Array):
+        self.coder = coder
+        self.codes = codes  # (n, M) int32
+
+    @property
+    def n(self) -> int:
+        return self.codes.shape[0]
+
+    def prepare_query(self, q: jax.Array):
+        return core.pq_adc_table(self.coder, q)  # (M, K) f32
+
+    def query_dists(self, qctx, ids):
+        return core.adc_lookup(qctx, self.codes[ids]).astype(jnp.float32)
+
+    def pair_dists(self, ids_a, ids_b):
+        return core.pq_sdc_lookup(
+            self.coder, self.codes[ids_a], self.codes[ids_b]
+        ).astype(jnp.float32)
+
+
+@jax.tree_util.register_pytree_node_class
+class FlashBackend(_Base):
+    """HNSW-Flash: quantized register-resident ADT + shared quantized SDT.
+
+    ADT sums (CA stage) and SDT sums (NS stage) share one (dist_min, Δ, H)
+    quantizer (paper §3.3.3) so they are mutually comparable — required
+    because neighbor selection compares δ(u, v) [SDT] with δ(v, x) [ADT].
+    """
+
+    _fields = ("coder", "codes")
+
+    def __init__(self, coder: core.FlashCoder, codes: jax.Array):
+        self.coder = coder
+        self.codes = codes  # (n, M) int32 in [0, K)
+
+    @property
+    def n(self) -> int:
+        return self.codes.shape[0]
+
+    def prepare_query(self, q: jax.Array):
+        return core.query_ctx(self.coder, q)
+
+    def query_dists(self, qctx, ids):
+        return core.adc_lookup(qctx.adt_q, self.codes[ids]).astype(jnp.float32)
+
+    def pair_dists(self, ids_a, ids_b):
+        return core.sdc_lookup(
+            self.coder, self.codes[ids_a], self.codes[ids_b]
+        ).astype(jnp.float32)
+
+
+@jax.tree_util.register_pytree_node_class
+class FlashBlockedBackend(FlashBackend):
+    """Flash + the access-aware neighbor layout of §3.3.4.
+
+    In addition to per-node codes, maintains ``nbr_codes`` (n, R, M): each
+    vertex's neighbors' codewords stored contiguously with the vertex, so the
+    CA hot loop reads one sequential row (one HBM→VMEM DMA) instead of R
+    random gathers. ``with_updated_edges`` is the commit hook that keeps the
+    mirror in sync — the memory-for-locality trade the paper measures in its
+    index-size figures (HNSW-Flash compresses less than HNSW-PQ but builds
+    faster, Figure 7).
+    """
+
+    _fields = ("coder", "codes", "nbr_codes")
+
+    def __init__(self, coder: core.FlashCoder, codes: jax.Array, nbr_codes: jax.Array):
+        super().__init__(coder, codes)
+        self.nbr_codes = nbr_codes  # (n, R, M) int32, code 0 where id == -1
+
+    def neighbor_dists(self, qctx, node, ids):
+        # Static shape dispatch: the mirror tracks one layer's degree (the
+        # base layer, where ~all CA traffic happens); other widths fall back.
+        if ids.shape[-1] != self.nbr_codes.shape[1]:
+            return self.query_dists(qctx, ids)
+        rows = self.nbr_codes[node]  # (R, M) — ONE contiguous row read
+        return flash_mod.adc_lookup(qctx.adt_q, rows).astype(jnp.float32)
+
+    def with_updated_edges(self, ids, nbr_ids):
+        """ids (...,) vertices whose lists changed (out-of-bounds = dropped);
+        nbr_ids (..., R) their new neighbor lists."""
+        if nbr_ids.shape[-1] != self.nbr_codes.shape[1]:
+            return self  # non-base-layer commit: mirror not affected
+        safe = jnp.maximum(nbr_ids, 0)
+        rows = jnp.where(
+            (nbr_ids >= 0)[..., None], self.codes[safe], 0
+        )  # (..., R, M)
+        nbr_codes = self.nbr_codes.at[ids].set(rows, mode="drop")
+        return FlashBlockedBackend(self.coder, self.codes, nbr_codes)
+
+
+# ---------------------------------------------------------------------------
+# Factory
+# ---------------------------------------------------------------------------
+
+
+def make_backend(
+    kind: str,
+    data: jax.Array,
+    key: jax.Array | None = None,
+    *,
+    r_for_blocked: int | None = None,
+    **coder_kwargs,
+):
+    """Fit a coder on ``data`` and wrap it with its backend.
+
+    kind ∈ {fp32, pq, sq, pca, flash, flash_blocked}. ``coder_kwargs`` are
+    forwarded to the fitter (e.g. d_f/m_f for flash, m/l_pq for pq…).
+    """
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    data = jnp.asarray(data, jnp.float32)
+    if kind == "fp32":
+        return FP32Backend(data)
+    if kind == "pca":
+        coder = core.fit_pca_coder(data, **coder_kwargs)
+        return PCABackend(coder, core.pca_encode(coder, data))
+    if kind == "sq":
+        coder = core.fit_sq(data, **coder_kwargs)
+        return SQBackend(coder, core.sq_encode(coder, data))
+    if kind == "pq":
+        coder = core.fit_pq(key, data, **coder_kwargs)
+        return PQBackend(coder, core.pq_encode(coder, data))
+    if kind in ("flash", "flash_blocked"):
+        coder = core.fit_flash(key, data, **coder_kwargs)
+        codes = core.encode(coder, data)
+        if kind == "flash":
+            return FlashBackend(coder, codes)
+        if r_for_blocked is None:
+            raise ValueError("flash_blocked needs r_for_blocked (max neighbors)")
+        nbr_codes = jnp.zeros(
+            (data.shape[0], r_for_blocked, coder.m_f), jnp.int32
+        )
+        return FlashBlockedBackend(coder, codes, nbr_codes)
+    raise ValueError(f"unknown backend kind {kind!r}")

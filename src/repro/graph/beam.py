@@ -1,0 +1,149 @@
+"""Candidate Acquisition: fixed-shape greedy beam search (paper §2.2, line 5).
+
+This is HNSW's ``SEARCH-LAYER`` written against XLA's static-shape rules:
+
+  * the candidate set C(x) is a fixed-width beam of ``ef`` slots kept sorted
+    ascending by distance (pad: id = −1, dist = +inf),
+  * the visited set is a dense (n,) bool bitmap (marked at evaluation time, so
+    a vertex's distance is computed exactly once),
+  * the loop is a ``lax.while_loop``: expand the best unexpanded beam entry,
+    score its ≤R neighbors through the distance backend, merge by top-ef.
+
+Stopping rule: stop when the best unexpanded candidate is farther than the
+current worst beam member (T in the paper's Example 1) — the classic HNSW
+termination — with a hard ``max_iters`` cap for jit safety.
+
+Batched insertion vmaps this over P queries; the backend is shared state.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+INF = jnp.float32(jnp.inf)
+
+
+class BeamResult(NamedTuple):
+    ids: jax.Array  # (ef,) int32, −1 padded, ascending by dist
+    dists: jax.Array  # (ef,) f32, +inf padded
+    n_hops: jax.Array  # () int32 — expanded-vertex count (cost accounting)
+    n_dists: jax.Array  # () int32 — distance evaluations (cost accounting)
+
+
+def _merge(ids_a, d_a, exp_a, ids_b, d_b, exp_b, ef):
+    """Merge two candidate lists, keep ef smallest (ties broken by id)."""
+    ids = jnp.concatenate([ids_a, ids_b])
+    d = jnp.concatenate([d_a, d_b])
+    exp = jnp.concatenate([exp_a, exp_b])
+    # top_k over negated distance == smallest-ef; jnp.lexsort-free stable pick.
+    _, idx = jax.lax.top_k(-d, ef)
+    return ids[idx], d[idx], exp[idx]
+
+
+def beam_search(
+    backend,
+    qctx,
+    adjacency: jax.Array,
+    entry_ids: jax.Array,
+    *,
+    ef: int,
+    max_iters: int | None = None,
+    visited0: jax.Array | None = None,
+) -> BeamResult:
+    """Greedy beam search over one adjacency (one graph layer).
+
+    backend    distance backend (see graph.backends).
+    qctx       backend.prepare_query(q) output.
+    adjacency  (n, R) int32, −1 = empty slot.
+    entry_ids  (E,) int32 entry points (−1 padded).
+    ef         beam width (C in the paper during construction).
+    """
+    n, r = adjacency.shape
+    e = entry_ids.shape[0]
+    if e > ef:
+        raise ValueError(f"entries ({e}) must fit the beam (ef={ef})")
+    max_iters = max_iters if max_iters is not None else 4 * ef + 8
+
+    valid_e = entry_ids >= 0
+    safe_e = jnp.where(valid_e, entry_ids, 0)
+    d_e = jnp.where(valid_e, backend.query_dists(qctx, safe_e), INF)
+    visited = jnp.zeros((n,), bool) if visited0 is None else visited0
+    visited = visited.at[safe_e].max(valid_e)
+
+    pad = ef - e
+    beam_ids = jnp.concatenate([entry_ids, jnp.full((pad,), -1, jnp.int32)])
+    beam_d = jnp.concatenate([d_e, jnp.full((pad,), INF)])
+    beam_exp = jnp.concatenate(
+        [~valid_e, jnp.ones((pad,), bool)]
+    )  # padding counts as expanded
+    # keep sorted ascending
+    order = jnp.argsort(beam_d)
+    beam_ids, beam_d, beam_exp = beam_ids[order], beam_d[order], beam_exp[order]
+
+    def cond(state):
+        beam_ids, beam_d, beam_exp, visited, it, nd = state
+        best_unexp = jnp.min(jnp.where(beam_exp, INF, beam_d))
+        worst = beam_d[ef - 1]
+        return (best_unexp <= worst) & (best_unexp < INF) & (it < max_iters)
+
+    def body(state):
+        beam_ids, beam_d, beam_exp, visited, it, nd = state
+        bi = jnp.argmin(jnp.where(beam_exp, INF, beam_d))
+        node = beam_ids[bi]
+        beam_exp = beam_exp.at[bi].set(True)
+        nbrs = adjacency[jnp.maximum(node, 0)]  # (R,)
+        ok = (nbrs >= 0) & (node >= 0)
+        safe = jnp.where(ok, nbrs, 0)
+        ok &= ~visited[safe]
+        d_new = jnp.where(ok, backend.neighbor_dists(qctx, node, safe), INF)
+        visited = visited.at[safe].max(ok)
+        ids_new = jnp.where(ok, safe, -1)
+        beam_ids, beam_d, beam_exp = _merge(
+            beam_ids, beam_d, beam_exp, ids_new, d_new, jnp.ones((r,), bool) & ~ok, ef
+        )
+        return beam_ids, beam_d, beam_exp, visited, it + 1, nd + jnp.sum(ok)
+
+    state = (beam_ids, beam_d, beam_exp, visited, jnp.int32(0), jnp.sum(valid_e))
+    beam_ids, beam_d, beam_exp, visited, it, nd = jax.lax.while_loop(
+        cond, body, state
+    )
+    del visited, beam_exp
+    return BeamResult(ids=beam_ids, dists=beam_d, n_hops=it, n_dists=nd)
+
+
+def greedy_descent(
+    backend, qctx, adjacency: jax.Array, entry_id: jax.Array, *, max_iters: int = 64
+) -> tuple[jax.Array, jax.Array]:
+    """ef=1 greedy walk (upper-layer descent): returns (closest id, dist).
+
+    Matches HNSW's inter-layer hop: repeatedly move to the closest neighbor
+    while it improves; a beam of 1 without a visited set.
+    """
+
+    def cond(state):
+        node, d, moved, it = state
+        return moved & (it < max_iters)
+
+    def body(state):
+        node, d, _, it = state
+        nbrs = adjacency[jnp.maximum(node, 0)]
+        ok = (nbrs >= 0) & (node >= 0)
+        safe = jnp.where(ok, nbrs, 0)
+        d_n = jnp.where(ok, backend.query_dists(qctx, safe), INF)
+        j = jnp.argmin(d_n)
+        better = d_n[j] < d
+        node2 = jnp.where(better, safe[j], node)
+        d2 = jnp.where(better, d_n[j], d)
+        return node2, d2, better, it + 1
+
+    valid = entry_id >= 0
+    d0 = jnp.where(
+        valid, backend.query_dists(qctx, jnp.maximum(entry_id, 0)[None])[0], INF
+    )
+    node, d, _, _ = jax.lax.while_loop(
+        cond, body, (entry_id, d0, valid, jnp.int32(0))
+    )
+    return node, d

@@ -1,0 +1,68 @@
+"""Exact brute-force k-NN oracle (ground truth for recall, paper §4.1.1).
+
+Chunked over the database so billion-row ground truth would stream; the
+distance tile is the `l2_batch` kernel's job on TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+@functools.partial(jax.jit, static_argnames=("k", "chunk", "impl"))
+def exact_knn(
+    queries: jax.Array,
+    data: jax.Array,
+    *,
+    k: int,
+    chunk: int = 8192,
+    impl: str = "auto",
+) -> tuple[jax.Array, jax.Array]:
+    """queries (Q, D), data (N, D) -> (ids (Q, k), sq-dists (Q, k)) ascending."""
+    n = data.shape[0]
+    q = queries.shape[0]
+    n_chunks = -(-n // chunk)
+    pad_n = n_chunks * chunk
+    data_p = jnp.pad(data, ((0, pad_n - n), (0, 0)))
+
+    def body(c, carry):
+        best_d, best_i = carry
+        start = c * chunk
+        tile = jax.lax.dynamic_slice_in_dim(data_p, start, chunk, axis=0)
+        d = ops.l2_batch(queries, tile, impl=impl)  # (Q, chunk)
+        ids = start + jnp.arange(chunk, dtype=jnp.int32)
+        d = jnp.where(ids[None, :] < n, d, jnp.inf)
+        cat_d = jnp.concatenate([best_d, d], axis=1)
+        cat_i = jnp.concatenate([best_i, jnp.broadcast_to(ids, (q, chunk))], axis=1)
+        nd, idx = jax.lax.top_k(-cat_d, k)
+        return -nd, jnp.take_along_axis(cat_i, idx, axis=1)
+
+    best_d = jnp.full((q, k), jnp.inf)
+    best_i = jnp.full((q, k), -1, jnp.int32)
+    best_d, best_i = jax.lax.fori_loop(0, n_chunks, body, (best_d, best_i))
+    return best_i, best_d
+
+
+def recall_at_k(found_ids: jax.Array, true_ids: jax.Array, k: int) -> float:
+    """Mean |found ∩ truth| / k over queries (paper's Recall metric)."""
+    hits = (found_ids[:, :k, None] == true_ids[:, None, :k]) & (
+        true_ids[:, None, :k] >= 0
+    )
+    return float(jnp.mean(jnp.sum(jnp.any(hits, axis=-1), axis=-1) / k))
+
+
+def average_distance_ratio(
+    found_d: jax.Array, true_d: jax.Array, k: int
+) -> float:
+    """ADR (paper §4.1.4): mean over queries/ranks of δ_found / δ_true.
+
+    Expects *exact* distances for the found ids (rerank before calling).
+    """
+    num = jnp.sqrt(jnp.maximum(found_d[:, :k], 0.0))
+    den = jnp.sqrt(jnp.maximum(true_d[:, :k], 1e-12))
+    return float(jnp.mean(num / den))

@@ -1,0 +1,100 @@
+"""NSG-style build (paper §4.5.3 generality target).
+
+NSG (Fu et al., VLDB'19) differs from HNSW in how candidates are acquired:
+it searches a prebuilt approximate k-NN graph from the medoid and applies the
+MRNG edge rule. The CA + NS decomposition is identical — which is exactly the
+paper's generality argument: Flash plugs into the distance layer unchanged.
+
+Pipeline here: (1) exact k-NN graph (the oracle substitute for NN-descent at
+the scales this container runs), (2) for every vertex, beam-search the k-NN
+graph from the medoid through the compact-code backend, (3) MRNG-select ≤ R
+neighbors from beam ∪ kNN candidates, (4) reverse edges + prune.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph.beam import INF, beam_search
+from repro.graph.hnsw import HNSWParams, _commit_forward, _reverse_pass
+from repro.graph.knn import exact_knn
+from repro.graph.select import select_neighbors
+from repro.graph.vamana import FlatIndex, medoid_id
+
+
+@functools.partial(jax.jit, static_argnames=("params",))
+def _build_nsg_jit(data, backend, knn_adj, entry, *, params: HNSWParams):
+    n = data.shape[0]
+    p = params.batch
+    r = params.r_base
+    adj = jnp.full((n, r), -1, jnp.int32)
+    adj_d = jnp.full((n, r), INF)
+    nb = -(-n // p)
+
+    def body(b, carry):
+        adj, adj_d, backend = carry
+        ids = b * p + jnp.arange(p, dtype=jnp.int32)
+        mask = ids < n
+        ids = jnp.minimum(ids, n - 1)
+        qctx = jax.vmap(backend.prepare_query)(data[ids])
+        # CA on the kNN graph from the medoid.
+        res = jax.vmap(
+            lambda qc: beam_search(
+                backend, qc, knn_adj, entry[None], ef=params.ef,
+                max_iters=params.max_iters,
+            )
+        )(qctx)
+        # Candidates = beam ∪ own kNN row (NSG uses the search's visited set;
+        # the beam is its top slice, the kNN row guarantees local candidates).
+        own = knn_adj[ids]  # (P, k)
+        own_d = jax.vmap(backend.query_dists)(qctx, jnp.maximum(own, 0))
+        own_d = jnp.where(own >= 0, own_d, INF)
+        # Drop self edges.
+        own = jnp.where(own == ids[:, None], -1, own)
+        own_d = jnp.where(own == -1, INF, own_d)
+        cand_ids = jnp.concatenate([res.ids, own], axis=1)
+        cand_d = jnp.concatenate([res.dists, own_d], axis=1)
+        order = jnp.argsort(cand_d, axis=1)
+        cand_ids = jnp.take_along_axis(cand_ids, order, axis=1)
+        cand_d = jnp.take_along_axis(cand_d, order, axis=1)
+        # Dedup: mask repeats (sorted by distance; equal ids are adjacent
+        # only if equal distance — mask any id seen earlier).
+        eq = cand_ids[:, :, None] == cand_ids[:, None, :]
+        tri = jnp.tril(jnp.ones((cand_ids.shape[1],) * 2, bool), k=-1)
+        dup = jnp.any(eq & tri[None], axis=2)
+        cand_ids = jnp.where(dup | (cand_ids < 0), -1, cand_ids)
+        cand_d = jnp.where(cand_ids < 0, INF, cand_d)
+        sel = jax.vmap(
+            lambda ci, cd: select_neighbors(backend, ci, cd, r=r, alpha=params.alpha)
+        )(cand_ids, cand_d)
+        sel_ids = jnp.where(mask[:, None], sel.ids, -1)
+        sel_d = jnp.where(mask[:, None], sel.dists, INF)
+        adj, adj_d, backend = _commit_forward(
+            adj, adj_d, backend, ids, sel_ids, sel_d, mask
+        )
+        adj, adj_d, backend = _reverse_pass(
+            adj, adj_d, backend, ids, sel_ids, sel_d, mask, params=params
+        )
+        return adj, adj_d, backend
+
+    adj, adj_d, backend = jax.lax.fori_loop(0, nb, body, (adj, adj_d, backend))
+    return FlatIndex(adj=adj, adj_d=adj_d, entry=entry, backend=backend)
+
+
+def build_nsg(
+    data,
+    backend,
+    *,
+    params: HNSWParams = HNSWParams(),
+    knn_k: int = 16,
+):
+    """Build an NSG-style index. Returns (FlatIndex, knn_adj)."""
+    data = jnp.asarray(data, jnp.float32)
+    ids, _ = exact_knn(data, data, k=knn_k + 1)
+    # Strip self-matches (first column is the point itself).
+    knn_adj = ids[:, 1:]
+    entry = medoid_id(data)
+    return _build_nsg_jit(data, backend, knn_adj, entry, params=params), knn_adj

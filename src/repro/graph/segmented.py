@@ -1,0 +1,218 @@
+"""Segment-parallel index build & search (paper §2.1.4 / §4.4, DESIGN §5).
+
+Production vector databases shard datasets into segments of tens of millions
+of vectors and build per-segment indexes concurrently; queries fan out and an
+inter-shard coordinator merges top-k. The paper's technique accelerates each
+segment's build and is "directly integrable into existing distributed
+systems" — this module is that integration for a JAX mesh:
+
+  * the coder (PCA + codebooks + SDT) is fitted ONCE on a host-side sample
+    and broadcast — an offline training job, shared by all segments,
+  * ``shard_map`` over the ("pod", "data") axes gives every device its own
+    segment; each encodes its shard and runs the same jitted HNSW build —
+    zero inter-device traffic during construction (embarrassingly parallel,
+    matching Figure 11's linear segment scaling),
+  * search: local beam search per segment, then a two-stage top-k merge —
+    local top-k, ``all_gather`` along the segment axes, global top-k (the
+    coordinator), optionally reranked on original vectors.
+
+The multi-pod dry-run lowers exactly these two programs on the production
+mesh (configs/flash_ann.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro import core
+from repro.graph import backends as bk
+from repro.graph.beam import INF, beam_search
+from repro.graph.hnsw import HNSWIndex, HNSWParams, _build_jit, search_hnsw
+
+
+class SegmentedIndexes(NamedTuple):
+    """Stacked per-segment indexes (leading axis = segment)."""
+
+    index: HNSWIndex  # every leaf has a leading (S,) axis
+
+
+def fit_shared_coder(
+    key, sample: jax.Array, *, d_f: int, m_f: int, l_f: int = 4, h: int = 8,
+    kmeans_iters: int = 25,
+) -> core.FlashCoder:
+    """Offline: fit one Flash coder for all segments (host-side eigh + jax
+    k-means)."""
+    return core.fit_flash(
+        key, sample, d_f=d_f, m_f=m_f, l_f=l_f, h=h, kmeans_iters=kmeans_iters
+    )
+
+
+def build_segment(
+    data_seg: jax.Array,
+    coder: core.FlashCoder,
+    levels: jax.Array,
+    entries: jax.Array,
+    *,
+    params: HNSWParams,
+) -> HNSWIndex:
+    """Pure-jax single-segment build (traceable under shard_map/vmap)."""
+    codes = core.encode(coder, data_seg)
+    backend = bk.FlashBackend(coder, codes)
+    index, _ = _build_jit(data_seg, backend, levels, entries, params=params)
+    return index
+
+
+def build_segments_vmapped(
+    data_segs: jax.Array,
+    coder: core.FlashCoder,
+    levels: jax.Array,
+    entries: jax.Array,
+    *,
+    params: HNSWParams,
+) -> SegmentedIndexes:
+    """Reference/local form: vmap over the segment axis (S, n_s, D).
+
+    Semantically identical to the shard_map deployment (same per-segment
+    program); used by tests and by single-host benchmarks.
+    """
+    f = functools.partial(build_segment, params=params)
+    index = jax.vmap(f, in_axes=(0, None, 0, 0))(data_segs, coder, levels, entries)
+    return SegmentedIndexes(index=index)
+
+
+def make_segmented_build_fn(mesh, *, params: HNSWParams, seg_axes=("pod", "data")):
+    """shard_map program: one segment per device group along ``seg_axes``.
+
+    data_segs: (S, n_s, D) sharded so each device owns one (1, n_s, D) slice;
+    the coder is replicated. Returns the stacked indexes with the same
+    segment sharding.
+    """
+    axes = tuple(a for a in seg_axes if a in mesh.axis_names)
+    spec_seg = P(axes)
+
+    def per_device(data_seg, coder, levels, entries):
+        # leading axis is the local segment count (1 per device group)
+        f = functools.partial(build_segment, params=params)
+        return jax.vmap(f, in_axes=(0, None, 0, 0))(data_seg, coder, levels, entries)
+
+    def build(data_segs, coder, levels, entries):
+        return jax.shard_map(
+            per_device,
+            mesh=mesh,
+            in_specs=(spec_seg, P(), spec_seg, spec_seg),
+            out_specs=spec_seg,
+            check_vma=False,
+        )(data_segs, coder, levels, entries)
+
+    return build
+
+
+# ---------------------------------------------------------------------------
+# Search with top-k merge (the inter-shard coordinator)
+# ---------------------------------------------------------------------------
+
+
+def search_segment(
+    index: HNSWIndex,
+    queries: jax.Array,
+    *,
+    k: int,
+    ef_search: int,
+    max_layers: int,
+    id_offset: jax.Array,
+    rerank_vectors: jax.Array | None = None,
+):
+    """Local search; returns globally-offset ids + distances.
+
+    With ``rerank_vectors`` (the segment's original vectors) the returned
+    distances are exact squared L2 — required for a correct cross-segment
+    merge, since quantized ADC sums are only comparison-valid *within* a
+    coder, not fine-grained enough to rank near-ties across segments.
+    """
+    res = search_hnsw(
+        index, queries, k=k, ef_search=ef_search, max_layers=max_layers,
+        rerank_vectors=rerank_vectors,
+    )
+    gids = jnp.where(res.ids >= 0, res.ids + id_offset, -1)
+    return gids, res.dists
+
+
+def make_segmented_search_fn(
+    mesh, *, k: int, ef_search: int, max_layers: int, seg_axes=("pod", "data")
+):
+    """shard_map program: fan-out search + two-stage top-k merge.
+
+    queries are replicated to every segment; each device returns its local
+    top-k; an ``all_gather`` along the segment axes collects (S·k) candidates
+    per query and a global top-k picks the answer — the coordinator step.
+    """
+    axes = tuple(a for a in seg_axes if a in mesh.axis_names)
+    spec_seg = P(axes)
+
+    def per_device(index, queries, id_offset, seg_vectors):
+        idx1 = jax.tree_util.tree_map(lambda x: x[0], index)  # local segment
+        gids, d = search_segment(
+            idx1, queries, k=k, ef_search=ef_search, max_layers=max_layers,
+            id_offset=id_offset[0], rerank_vectors=seg_vectors[0],
+        )
+        # gather candidates from all segments: (S*k) per query
+        all_ids = gids
+        all_d = d
+        for ax in axes:
+            all_ids = jax.lax.all_gather(all_ids, ax, axis=1, tiled=True)
+            all_d = jax.lax.all_gather(all_d, ax, axis=1, tiled=True)
+        neg, pos = jax.lax.top_k(-all_d, k)
+        out_ids = jnp.take_along_axis(all_ids, pos, axis=1)
+        return out_ids, -neg
+
+    def search(index_stack, queries, id_offsets, seg_vectors):
+        return jax.shard_map(
+            per_device,
+            mesh=mesh,
+            in_specs=(spec_seg, P(), spec_seg, spec_seg),
+            out_specs=(P(), P()),
+            check_vma=False,
+        )(index_stack, queries, id_offsets, seg_vectors)
+
+    return search
+
+
+def search_segments_local(
+    seg: SegmentedIndexes,
+    queries: jax.Array,
+    seg_sizes: np.ndarray,
+    *,
+    k: int,
+    ef_search: int,
+    max_layers: int,
+    seg_vectors: jax.Array | None = None,
+):
+    """Reference/local merge (vmap over segments + host top-k)."""
+    s = jax.tree_util.tree_leaves(seg.index)[0].shape[0]
+    offsets = jnp.asarray(np.concatenate([[0], np.cumsum(seg_sizes)[:-1]]), jnp.int32)
+
+    def one_seg(index, off, vecs):
+        return search_segment(
+            index, queries, k=k, ef_search=ef_search, max_layers=max_layers,
+            id_offset=off, rerank_vectors=vecs,
+        )
+
+    if seg_vectors is None:
+        gids, dists = jax.vmap(
+            lambda index, off: search_segment(
+                index, queries, k=k, ef_search=ef_search,
+                max_layers=max_layers, id_offset=off,
+            )
+        )(seg.index, offsets)
+    else:
+        gids, dists = jax.vmap(one_seg)(seg.index, offsets, seg_vectors)  # (S, Q, k)
+    all_ids = jnp.transpose(gids, (1, 0, 2)).reshape(queries.shape[0], s * k)
+    all_d = jnp.transpose(dists, (1, 0, 2)).reshape(queries.shape[0], s * k)
+    neg, pos = jax.lax.top_k(-all_d, k)
+    return jnp.take_along_axis(all_ids, pos, axis=1), -neg

@@ -1,0 +1,131 @@
+"""Vamana / τ-MG-style flat graph build (paper §4.5.3 generality target).
+
+Same CA + NS skeleton as HNSW (which is the paper's point — Flash accelerates
+any graph algorithm built from those two stages), differing in:
+
+  * single layer, entry point = medoid (closest vector to the data mean),
+  * robust prune with slack α ≥ 1 (α = 1 first pass, α > 1 second pass),
+  * a refinement pass that re-runs CA+NS for every vertex against the built
+    graph (DiskANN's two-pass schedule).
+
+Reuses the batched insert machinery from ``repro.graph.hnsw``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.beam import INF, beam_search
+from repro.graph.hnsw import (
+    HNSWParams,
+    _commit_forward,
+    _insert_batch,
+    _reverse_pass,
+    _bootstrap,
+)
+from repro.graph.select import select_neighbors
+
+
+class FlatIndex(NamedTuple):
+    adj: jax.Array  # (n, R) int32
+    adj_d: jax.Array  # (n, R) f32
+    entry: jax.Array  # () int32 — medoid
+    backend: object
+
+
+def medoid_id(data: jax.Array) -> jax.Array:
+    """Vector closest to the dataset mean (the Vamana/NSG navigating start)."""
+    mean = jnp.mean(data, axis=0)
+    d = jnp.sum((data - mean[None, :]) ** 2, axis=-1)
+    return jnp.argmin(d).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("params", "two_pass"))
+def _build_flat_jit(data, backend, entry, *, params: HNSWParams, two_pass: bool):
+    n = data.shape[0]
+    p = params.batch
+    flat = dataclasses.replace(params, max_layers=1)
+    levels = jnp.zeros((n,), jnp.int32)
+    adj0 = jnp.full((n, flat.r_base), -1, jnp.int32)
+    adj0_d = jnp.full((n, flat.r_base), INF)
+    adj_up = jnp.full((1, n, flat.r_upper), -1, jnp.int32)
+    adj_up_d = jnp.full((1, n, flat.r_upper), INF)
+
+    adj0, adj0_d, adj_up, adj_up_d, backend = _bootstrap(
+        data, adj0, adj0_d, adj_up, adj_up_d, backend, levels, params=flat
+    )
+    nb = -(-n // p)
+
+    def pass_body(alpha_pass, adj0, adj0_d, backend, start_batch):
+        pp = dataclasses.replace(flat, alpha=alpha_pass)
+
+        def body(b, carry):
+            adj0, adj0_d, backend, stats = carry
+            ids = b * p + jnp.arange(p, dtype=jnp.int32)
+            mask = ids < n
+            ids = jnp.minimum(ids, n - 1)
+            a0, a0d, au, aud, backend, stats = _insert_batch(
+                data, adj0, adj0_d, adj_up, adj_up_d, backend,
+                levels, ids, entry, mask, params=pp, stats=stats,
+            )
+            return a0, a0d, backend, stats
+
+        stats0 = (jnp.float32(0), jnp.float32(0))
+        adj0, adj0_d, backend, stats = jax.lax.fori_loop(
+            start_batch, nb, body, (adj0, adj0_d, backend, stats0)
+        )
+        return adj0, adj0_d, backend, stats
+
+    adj0, adj0_d, backend, s1 = pass_body(1.0, adj0, adj0_d, backend, 1)
+    if two_pass:
+        # Refinement: re-insert every vertex with the relaxed α against the
+        # built graph (candidates come from a fresh beam search, which
+        # dominates the visited set V of the original algorithm).
+        adj0, adj0_d, backend, s2 = pass_body(params.alpha, adj0, adj0_d, backend, 0)
+    index = FlatIndex(adj=adj0, adj_d=adj0_d, entry=entry, backend=backend)
+    return index, s1
+
+
+def build_vamana(
+    data,
+    backend,
+    *,
+    params: HNSWParams = HNSWParams(alpha=1.2),
+    two_pass: bool = True,
+):
+    data = jnp.asarray(data, jnp.float32)
+    entry = medoid_id(data)
+    return _build_flat_jit(data, backend, entry, params=params, two_pass=two_pass)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "ef_search"))
+def search_flat(
+    index: FlatIndex,
+    queries: jax.Array,
+    *,
+    k: int,
+    ef_search: int = 64,
+    rerank_vectors: jax.Array | None = None,
+):
+    """Beam search from the medoid + optional exact rerank."""
+    backend = index.backend
+
+    def one(q):
+        qctx = backend.prepare_query(q)
+        res = beam_search(backend, qctx, index.adj, index.entry[None], ef=ef_search)
+        if rerank_vectors is not None:
+            safe = jnp.maximum(res.ids, 0)
+            dv = rerank_vectors[safe] - q[None, :]
+            exact = jnp.where(res.ids >= 0, jnp.sum(dv * dv, -1), INF)
+            _, idx = jax.lax.top_k(-exact, k)
+            return res.ids[idx], exact[idx]
+        return res.ids[:k], res.dists[:k]
+
+    ids, dists = jax.vmap(one)(queries)
+    return ids, dists

@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+Kernels (each <name>.py has a pl.pallas_call + explicit BlockSpec VMEM tiling;
+ref.py holds the pure-jnp oracle; ops.py the jit'd dispatching wrappers):
+
+  flash_scan   — batched ADT lookup-accumulate (the CPU `pshufb` analogue,
+                 paper §3.3.5), flat and access-aware-blocked (§3.3.4) forms.
+  l2_batch     — tiled ‖x‖²+‖y‖²−2x·yᵀ distance matrix on the MXU
+                 (full-precision baseline path + k-means training).
+  sq_l2        — int-domain scaled L2 for the optimized HNSW-SQ baseline.
+"""
+
+from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels.ops import (  # noqa: F401
+    flash_scan,
+    flash_scan_blocked,
+    l2_batch,
+    set_default_impl,
+    sq_l2,
+)

@@ -1,0 +1,105 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Dispatch policy (``impl`` argument, default "auto"):
+
+  * ``"pallas"``     — compiled Pallas (TPU target; ``interpret=False``).
+  * ``"interpret"``  — Pallas with ``interpret=True`` (kernel body executed in
+                       Python on CPU; used by the test suite to validate the
+                       kernels in this TPU-less container).
+  * ``"ref"``        — the pure-jnp oracle (also the fast path on CPU, where
+                       interpret-mode Pallas would be pointlessly slow).
+  * ``"auto"``       — "pallas" when a TPU backend is present, else "ref".
+
+All wrappers are shape-polymorphic at the Python level and jit-cached per
+(shape, dtype, impl).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_scan import flash_scan_blocked_pallas, flash_scan_pallas
+from repro.kernels.l2_batch import l2_batch_pallas
+from repro.kernels.sq_l2 import sq_l2_pallas
+
+_DEFAULT_IMPL: str | None = None
+
+
+def set_default_impl(impl: str | None) -> None:
+    """Force a dispatch mode globally (tests/benchmarks)."""
+    global _DEFAULT_IMPL
+    _DEFAULT_IMPL = impl
+
+
+def resolve_impl(impl: str = "auto") -> str:
+    if impl == "auto" and _DEFAULT_IMPL is not None:
+        impl = _DEFAULT_IMPL
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl not in ("pallas", "interpret", "ref"):
+        raise ValueError(f"unknown impl {impl!r}")
+    return impl
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "block_n"))
+def flash_scan(
+    codes: jax.Array, adt: jax.Array, *, impl: str = "auto", block_n: int = 1024
+) -> jax.Array:
+    """Batched ADT lookup-accumulate: codes (N, M), adt (M, K) -> (N,)."""
+    impl = resolve_impl(impl)
+    if impl == "ref":
+        return ref.flash_scan_ref(codes, adt)
+    return flash_scan_pallas(
+        codes, adt, block_n=block_n, interpret=(impl == "interpret")
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "block_g"))
+def flash_scan_blocked(
+    blocks: jax.Array, adt: jax.Array, *, impl: str = "auto", block_g: int = 8
+) -> jax.Array:
+    """Blocked-layout ADT scan: blocks (G, M, B), adt (M, K) -> (G, B)."""
+    impl = resolve_impl(impl)
+    if impl == "ref":
+        return ref.flash_scan_blocked_ref(blocks, adt)
+    return flash_scan_blocked_pallas(
+        blocks, adt, block_g=block_g, interpret=(impl == "interpret")
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "block_n", "block_c"))
+def l2_batch(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    impl: str = "auto",
+    block_n: int = 256,
+    block_c: int = 256,
+) -> jax.Array:
+    """Pairwise squared L2: x (N, D), y (C, D) -> (N, C) f32."""
+    impl = resolve_impl(impl)
+    if impl == "ref":
+        return ref.l2_batch_ref(x, y)
+    return l2_batch_pallas(
+        x, y, block_n=block_n, block_c=block_c, interpret=(impl == "interpret")
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "block_n"))
+def sq_l2(
+    q: jax.Array,
+    db: jax.Array,
+    s2: jax.Array,
+    *,
+    impl: str = "auto",
+    block_n: int = 512,
+) -> jax.Array:
+    """SQ quantized-domain distance: q (D,), db (N, D), s2 (D,) -> (N,) f32."""
+    impl = resolve_impl(impl)
+    if impl == "ref":
+        return ref.sq_l2_ref(q, db, s2)
+    return sq_l2_pallas(q, db, s2, block_n=block_n, interpret=(impl == "interpret"))

@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth its kernel twin must match
+(`tests/test_kernels.py` sweeps shapes/dtypes and asserts allclose / exact
+equality for integer outputs).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_scan_ref(codes: jax.Array, adt: jax.Array) -> jax.Array:
+    """Batched ADT lookup-accumulate (paper §3.3.5).
+
+    codes: (N, M) integer codewords in [0, K).
+    adt:   (M, K) partial-distance table (int32 levels or float32).
+    Returns (N,) — Σ_m adt[m, codes[n, m]], dtype follows ``adt``.
+    """
+    m_idx = jnp.arange(adt.shape[0])
+    return jnp.sum(adt[m_idx, codes], axis=-1)
+
+
+def l2_batch_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Pairwise squared L2: x (N, D), y (C, D) -> (N, C) float32."""
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    x2 = jnp.sum(x * x, axis=-1, keepdims=True)
+    y2 = jnp.sum(y * y, axis=-1)
+    return jnp.maximum(x2 + y2[None, :] - 2.0 * (x @ y.T), 0.0)
+
+
+def sq_l2_ref(q: jax.Array, db: jax.Array, s2: jax.Array) -> jax.Array:
+    """Quantized-domain scaled L2 (optimized HNSW-SQ distance).
+
+    q:  (D,)   int32 query codes.
+    db: (N, D) int32 database codes.
+    s2: (D,)   float32 per-dim squared scales.
+    Returns (N,) float32 — Σ_d s2_d (q_d − db_{n,d})².
+    """
+    diff = (db.astype(jnp.int32) - q.astype(jnp.int32)).astype(jnp.float32)
+    return jnp.sum(s2[None, :] * diff * diff, axis=-1)
+
+
+def flash_scan_blocked_ref(blocks: jax.Array, adt: jax.Array) -> jax.Array:
+    """Access-aware blocked layout variant (paper §3.3.4 / Figure 5).
+
+    blocks: (G, M, B) codewords — G neighbor blocks, codewords grouped by
+            subspace within each block (one "register load" per (g, m) row).
+    adt:    (M, K).
+    Returns (G, B) — per-neighbor summed partial distances.
+    """
+    m_idx = jnp.arange(adt.shape[0])[:, None]
+    return jnp.sum(adt[m_idx, blocks], axis=-2)

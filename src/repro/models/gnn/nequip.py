@@ -1,0 +1,148 @@
+"""NequIP — E(3)-equivariant interatomic potential (arXiv:2101.03164).
+
+Node features are real-SH irreps up to l_max with C channels per degree.
+Interaction block (per layer):
+
+    msg_ij = Σ_{l1,l2→l3}  G^{l1l2l3} · [ h_j^{l1} ⊗ Y^{l2}(r̂_ij) ] · R_{l1l2l3}(‖r_ij‖)
+
+where G are Gaunt (real-CG) tensors, Y the edge spherical harmonics, and R a
+per-path radial MLP on a Bessel basis with smooth cutoff. Messages are
+segment-summed into receivers and passed through an equivariant self-mix
+(per-l channel linear) with a gated nonlinearity on the scalar channel.
+
+Energy readout: invariant (l=0) channels → per-atom energy → graph sum.
+Equivariance is asserted in tests (rotating positions rotates l≥1 features
+and leaves the energy invariant).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.gnn import so3
+from repro.models.gnn.common import (
+    GraphBatch,
+    Params,
+    mlp_apply,
+    mlp_init,
+    radial_basis,
+    scatter_edges_to_nodes,
+)
+
+
+@dataclass(frozen=True)
+class NequIPConfig:
+    n_layers: int = 5
+    channels: int = 32  # d_hidden per degree
+    l_max: int = 2
+    n_rbf: int = 8
+    cutoff: float = 5.0
+    n_species: int = 8
+
+    @property
+    def paths(self) -> list[tuple[int, int, int]]:
+        """All (l1, l2, l3) with non-vanishing Gaunt tensor, l* ≤ l_max."""
+        out = []
+        for l1 in range(self.l_max + 1):
+            for l2 in range(self.l_max + 1):
+                for l3 in range(self.l_max + 1):
+                    if abs(l1 - l2) <= l3 <= l1 + l2 and (l1 + l2 + l3) % 2 == 0:
+                        out.append((l1, l2, l3))
+        return out
+
+
+def init_nequip(key, cfg: NequIPConfig) -> Params:
+    c = cfg.channels
+    n_paths = len(cfg.paths)
+    layers = []
+    ks = jax.random.split(key, 2 + cfg.n_layers)
+    for i in range(cfg.n_layers):
+        k1, k2, k3 = jax.random.split(ks[2 + i], 3)
+        layers.append(
+            {
+                # radial MLP: rbf -> weights for every (path, channel)
+                "radial": mlp_init(k1, (cfg.n_rbf, 32, n_paths * c)),
+                # per-degree channel mixing of aggregated messages
+                "mix": jax.random.normal(
+                    k2, (cfg.l_max + 1, c, c), jnp.float32
+                ) / np.sqrt(c),
+                # gate scalars for l >= 1 degrees
+                "gate": jax.random.normal(
+                    k3, (c, cfg.l_max), jnp.float32
+                ) / np.sqrt(c),
+            }
+        )
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *layers)
+    ke, kh = jax.random.split(ks[0])
+    return {
+        "species_embed": jax.random.normal(
+            ke, (cfg.n_species, cfg.channels), jnp.float32
+        ),
+        "energy_head": mlp_init(kh, (cfg.channels, 32, 1)),
+        "layers": stacked,
+    }
+
+
+def _empty_features(n, cfg: NequIPConfig):
+    return jnp.zeros((n, so3.n_coeffs(cfg.l_max), cfg.channels), jnp.float32)
+
+
+def nequip_forward(p: Params, g: GraphBatch, cfg: NequIPConfig):
+    """Returns (per-graph energy (n_graphs, 1), final features (N, dim, C)).
+
+    g.nodes[:, 0] is interpreted as integer species id.
+    """
+    n = g.nodes.shape[0]
+    species = jnp.clip(g.nodes[:, 0].astype(jnp.int32), 0, cfg.n_species - 1)
+    h = _empty_features(n, cfg)
+    h = h.at[:, 0, :].set(p["species_embed"][species])  # scalars init
+
+    vec = g.positions[g.receivers] - g.positions[g.senders]  # (E, 3)
+    r = jnp.linalg.norm(vec, axis=-1)
+    y_edge = so3.real_sph_harm(cfg.l_max, vec)  # (E, dim)
+    rbf = radial_basis(r, n_rbf=cfg.n_rbf, cutoff=cfg.cutoff)  # (E, n_rbf)
+    emask = (g.edge_mask & (r < cfg.cutoff) & (r > 1e-6)).astype(jnp.float32)
+    sl = so3.l_slices(cfg.l_max)
+    gaunts = {
+        path: jnp.asarray(so3.gaunt_tensor(*path), jnp.float32)
+        for path in cfg.paths
+    }
+
+    def layer(h, lp):
+        rw = mlp_apply(lp["radial"], rbf)  # (E, n_paths*C)
+        rw = rw.reshape(rw.shape[0], len(cfg.paths), cfg.channels)
+        h_src = h[g.senders]  # (E, dim, C)
+        msg = jnp.zeros_like(h_src)
+        for pi, (l1, l2, l3) in enumerate(cfg.paths):
+            gt = gaunts[(l1, l2, l3)]  # (2l1+1, 2l2+1, 2l3+1)
+            part = jnp.einsum(
+                "eac,eb,abd->edc", h_src[:, sl[l1], :], y_edge[:, sl[l2]], gt
+            )  # (E, 2l3+1, C)
+            part = part * rw[:, pi, None, :]
+            msg = msg.at[:, sl[l3], :].add(part)
+        msg = msg * emask[:, None, None]
+        agg = scatter_edges_to_nodes(msg, g.receivers, n)  # (N, dim, C)
+        # per-degree channel mixing + gated nonlinearity
+        new = jnp.zeros_like(h)
+        scal = agg[:, 0, :] @ lp["mix"][0]
+        new = new.at[:, 0, :].set(jax.nn.silu(scal))
+        gates = jax.nn.sigmoid(scal @ lp["gate"])  # (N, l_max)
+        for l in range(1, cfg.l_max + 1):
+            mixed = jnp.einsum("nmc,cd->nmd", agg[:, sl[l], :], lp["mix"][l])
+            new = new.at[:, sl[l], :].set(mixed * gates[:, None, l - 1 : l])
+        return h + new, None
+
+    h, _ = jax.lax.scan(layer, h, p["layers"])
+    e_atom = mlp_apply(p["energy_head"], h[:, 0, :]) * g.node_mask[:, None]
+    energy = jax.ops.segment_sum(e_atom, g.graph_id, g.n_graphs)
+    return energy, h
+
+
+def nequip_loss(p, g: GraphBatch, targets, cfg: NequIPConfig):
+    """Energy regression MSE; targets (n_graphs, 1)."""
+    e, _ = nequip_forward(p, g, cfg)
+    return jnp.mean((e - targets) ** 2)

@@ -1,0 +1,229 @@
+"""SO(3) machinery for equivariant GNNs: real spherical harmonics, Wigner
+rotations of real-SH coefficient vectors, and Gaunt (real-CG) tensors.
+
+Used by NequIP (l_max ≤ 2 tensor products) and Equiformer-v2 (eSCN SO(2)
+convolutions, l_max = 6 rotations).
+
+Design choices (all validated by equivariance tests):
+
+* ``real_sph_harm`` evaluates real spherical harmonics Y_lm for arbitrary
+  l_max with associated-Legendre recursions unrolled at trace time (static
+  Python loops ⇒ fixed HLO size, vectorized over points).
+
+* Rotation matrices D^l(R) for real-SH coefficients are built by
+  **projection**: spherical harmonics of degree l are closed under rotation,
+  so with a fixed generic point set X (P ≥ 2l+1) and A = Y_l(X),
+  B = Y_l(X Rᵀ) one has  D^l(R) = pinv(A) · B  exactly (up to quadrature-free
+  linear algebra). pinv(A) is a compile-time constant; per-edge cost is one
+  SH evaluation at P rotated points — cheap, exact, and trivially vmappable,
+  which is the property the eSCN edge-frame rotation needs.
+
+* Gaunt tensors G[l1m1, l2m2, l3m3] = ∫ Y_{l1m1} Y_{l2m2} Y_{l3m3} dΩ are
+  computed once (host, numpy) with a Gauss–Legendre × uniform-φ grid that is
+  exact for the polynomial degrees involved. For real SH these triple-product
+  integrals are the structure constants of an equivariant bilinear map — the
+  role CG coefficients play in e3nn.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def n_coeffs(l_max: int) -> int:
+    return (l_max + 1) ** 2
+
+
+def l_slices(l_max: int) -> list[slice]:
+    """Coefficient slices per degree: l -> slice(l², (l+1)²)."""
+    return [slice(l * l, (l + 1) * (l + 1)) for l in range(l_max + 1)]
+
+
+# ---------------------------------------------------------------------------
+# Real spherical harmonics (jnp, arbitrary l_max, static unroll)
+# ---------------------------------------------------------------------------
+
+
+def real_sph_harm(l_max: int, xyz, *, normalized_input: bool = False, xp=jnp):
+    """Y_lm at unit directions. xyz (..., 3) -> (..., (l_max+1)²).
+
+    Ordering: (l, m) with m = −l..l, i.e. [Y00, Y1−1, Y10, Y11, Y2−2, …].
+    Uses the orthonormal (quantum-mechanics) normalization: ∫ Y² dΩ = 1.
+    """
+    if not normalized_input:
+        xyz = xyz / xp.clip(
+            xp.linalg.norm(xyz, axis=-1, keepdims=True), 1e-12, None
+        )
+    x, y, z = xyz[..., 0], xyz[..., 1], xyz[..., 2]
+    # azimuthal pieces: c_m = r^m cos(mφ) sinθ^m …  via recurrence:
+    #   c_0 = 1, s_0 = 0;  c_{m+1} = x c_m − y s_m;  s_{m+1} = x s_m + y c_m
+    cs = [xp.ones_like(x)]
+    sn = [xp.zeros_like(x)]
+    for m in range(1, l_max + 1):
+        cs.append(x * cs[-1] - y * sn[-1])
+        sn.append(x * sn[-1] + y * cs[-2])
+    # associated Legendre (with sinθ^m folded in): P̄_mm recurrence
+    # K_lm = sqrt((2l+1)/(4π) (l−m)!/(l+m)!)
+    out = []
+    # Q_lm := P_l^m(cosθ) / sin^m θ — the sin^m θ cos(mφ)/sin(mφ) azimuthal
+    # factor lives in cs/sn (polynomials in x, y), so Q needs only z:
+    #   Q_00 = 1;  Q_mm = (2m−1)·Q_{m−1,m−1}  (a constant);
+    #   Q_{m+1,m} = (2m+1)·z·Q_mm;
+    #   (l−m)·Q_lm = (2l−1)·z·Q_{l−1,m} − (l+m−1)·Q_{l−2,m}.
+    p_prev: dict[int, jax.Array] = {}
+    p_curr: dict[int, jax.Array] = {}
+    for l in range(l_max + 1):
+        p_new: dict[int, jax.Array] = {}
+        for m in range(l + 1):
+            if l == m:
+                if l == 0:
+                    p_new[m] = xp.ones_like(z)
+                else:
+                    p_new[m] = (2 * m - 1) * p_curr[m - 1]
+            elif l == m + 1:
+                p_new[m] = (2 * m + 1) * z * p_curr[m]
+            else:
+                p_new[m] = (
+                    (2 * l - 1) * z * p_curr[m] - (l + m - 1) * p_prev[m]
+                ) / (l - m)
+        p_prev, p_curr = p_curr, p_new
+        for m in range(-l, l + 1):
+            am = abs(m)
+            # normalization
+            k = np.sqrt(
+                (2 * l + 1)
+                / (4 * np.pi)
+                * _factorial_ratio(l - am, l + am)
+            )
+            if m > 0:
+                val = np.sqrt(2.0) * k * p_curr[am] * cs[am]
+            elif m < 0:
+                val = np.sqrt(2.0) * k * p_curr[am] * sn[am]
+            else:
+                val = k * p_curr[0]
+            out.append(val)
+    return xp.stack(out, axis=-1)
+
+
+def _factorial_ratio(a: int, b: int) -> float:
+    """a! / b! computed stably for small ints."""
+    out = 1.0
+    if a >= b:
+        for i in range(b + 1, a + 1):
+            out *= i
+        return out
+    for i in range(a + 1, b + 1):
+        out /= i
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Rotations of real-SH coefficients (projection method)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _projection_basis(l_max: int, n_pts: int = 0):
+    """Fixed generic points X and per-l pinv(Y_l(X)) (host-side constants)."""
+    dim = n_coeffs(l_max)
+    n_pts = n_pts or max(2 * dim, 32)
+    rng = np.random.default_rng(12345)
+    pts = rng.normal(size=(n_pts, 3))
+    pts /= np.linalg.norm(pts, axis=1, keepdims=True)
+    y = real_sph_harm(l_max, pts, xp=np)  # (P, dim) — host-side numpy
+    pinvs = []
+    for sl in l_slices(l_max):
+        a = y[:, sl]  # (P, 2l+1)
+        pinvs.append(np.linalg.pinv(a).astype(np.float32))  # (2l+1, P)
+    # cache NUMPY only — jnp constants created inside a trace would leak
+    return pts.astype(np.float32), pinvs
+
+
+def wigner_d_from_rot(l_max: int, rot: jax.Array) -> list[jax.Array]:
+    """Rotation matrices D^l for real-SH coefficient vectors.
+
+    rot: (..., 3, 3) rotation matrices. Returns a list over l of
+    (..., 2l+1, 2l+1) with the convention: if c are coefficients of f, then
+    D c are the coefficients of x ↦ f(Rᵀ x) (the actively-rotated function).
+    """
+    pts_np, pinvs = _projection_basis(l_max)
+    pts = jnp.asarray(pts_np)
+    # Y(R pts): evaluating the rotated basis
+    rpts = jnp.einsum("...ij,pj->...pi", rot, pts)
+    yr = real_sph_harm(l_max, rpts)  # (..., P, dim)
+    ds = []
+    for sl, pinv in zip(l_slices(l_max), pinvs):
+        b = yr[..., sl]  # (..., P, 2l+1)
+        # D^T = pinv(A) @ B  ⇒  D = B^T pinv(A)^T
+        d = jnp.einsum("mp,...pn->...nm", pinv, b)
+        ds.append(d)
+    return ds
+
+
+def rotate_coeffs(l_max: int, coeffs: jax.Array, rot: jax.Array) -> jax.Array:
+    """Apply D(R) blockwise. coeffs (..., dim, C) or (..., dim)."""
+    ds = wigner_d_from_rot(l_max, rot)
+    vec = coeffs.ndim == rot.ndim - 1  # no channel axis
+    parts = []
+    for sl, d in zip(l_slices(l_max), ds):
+        c = coeffs[..., sl] if vec else coeffs[..., sl, :]
+        if vec:
+            parts.append(jnp.einsum("...nm,...m->...n", d, c))
+        else:
+            parts.append(jnp.einsum("...nm,...mc->...nc", d, c))
+    return jnp.concatenate(parts, axis=-1 if vec else -2)
+
+
+def edge_rotation(edge_vec: jax.Array) -> jax.Array:
+    """Rotation matrix mapping the edge direction onto +z (..., 3, 3).
+
+    The eSCN frame: rows are an orthonormal basis (u, v, n̂) with n̂ the edge
+    direction, so R @ n̂ = e_z. A fixed fallback handles the n̂ ≈ ±z pole.
+    """
+    n = edge_vec / jnp.clip(
+        jnp.linalg.norm(edge_vec, axis=-1, keepdims=True), 1e-12, None
+    )
+    # pick a helper axis not parallel to n
+    ez = jnp.asarray([0.0, 0.0, 1.0])
+    ex = jnp.asarray([1.0, 0.0, 0.0])
+    near_pole = jnp.abs(n[..., 2:3]) > 0.99
+    helper = jnp.where(near_pole, ex, ez)
+    u = jnp.cross(helper, n)
+    u = u / jnp.clip(jnp.linalg.norm(u, axis=-1, keepdims=True), 1e-12, None)
+    v = jnp.cross(n, u)
+    return jnp.stack([u, v, n], axis=-2)  # rows u, v, n ⇒ R n = e_z ✓... rows
+
+
+# ---------------------------------------------------------------------------
+# Gaunt tensors (real-SH triple products) — NequIP's contraction weights
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def gaunt_tensor(l1: int, l2: int, l3: int) -> np.ndarray:
+    """G[m1, m2, m3] = ∫ Y_{l1m1} Y_{l2m2} Y_{l3m3} dΩ (host-side, exact).
+
+    Gauss–Legendre in cosθ × uniform in φ, exact for band-limited integrands
+    of degree ≤ l1+l2+l3.
+    """
+    deg = l1 + l2 + l3
+    n_theta = deg + 2
+    n_phi = 2 * deg + 3
+    nodes, weights = np.polynomial.legendre.leggauss(n_theta)
+    phi = np.arange(n_phi) * 2 * np.pi / n_phi
+    ct, ph = np.meshgrid(nodes, phi, indexing="ij")
+    st = np.sqrt(1 - ct**2)
+    pts = np.stack([st * np.cos(ph), st * np.sin(ph), ct], axis=-1)
+    w = np.broadcast_to(weights[:, None], ct.shape) * (2 * np.pi / n_phi)
+    lmax = max(l1, l2, l3)
+    y = real_sph_harm(lmax, pts.reshape(-1, 3), xp=np)
+    y = y.reshape(n_theta, n_phi, -1)
+    sl = l_slices(lmax)
+    y1, y2, y3 = y[..., sl[l1]], y[..., sl[l2]], y[..., sl[l3]]
+    g = np.einsum("tpa,tpb,tpc,tp->abc", y1, y2, y3, w)
+    g[np.abs(g) < 1e-10] = 0.0
+    return g

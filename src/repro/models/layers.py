@@ -1,0 +1,307 @@
+"""Shared transformer layers: norms, RoPE, GQA/MLA attention, SwiGLU.
+
+Plain functional style: ``init_*(key, …) -> params dict`` and pure apply
+functions. Layer parameters are designed to be *stacked along a leading layer
+axis* and consumed through ``jax.lax.scan`` (small HLO, fast multi-hundred-
+layer compiles — essential for the 512-device dry-run of qwen2-72b /
+deepseek-v3).
+
+Sharding notes (DESIGN.md §5): weight matrices carry logical axes
+(d_model = "embed", heads/ffn = "model-sharded"); the concrete NamedShardings
+are applied by repro.distributed.sharding.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = dict[str, Any]
+
+
+def _dense_init(key, shape, scale=None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(shape[0])
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * gamma).astype(x.dtype)
+
+
+def layer_norm(x, gamma, beta, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return (((xf - mu) * jax.lax.rsqrt(var + eps)) * gamma + beta).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x (..., S, H, hd) with positions (..., S) -> rotated x."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention (qwen2 / qwen1.5 / llama3 family; optional QKV bias)
+# ---------------------------------------------------------------------------
+
+
+def init_gqa(key, *, d_model, n_heads, n_kv, head_dim, qkv_bias: bool) -> Params:
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(ks[0], (d_model, n_heads * head_dim)),
+        "wk": _dense_init(ks[1], (d_model, n_kv * head_dim)),
+        "wv": _dense_init(ks[2], (d_model, n_kv * head_dim)),
+        "wo": _dense_init(ks[3], (n_heads * head_dim, d_model)),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), jnp.float32)
+        p["bk"] = jnp.zeros((n_kv * head_dim,), jnp.float32)
+        p["bv"] = jnp.zeros((n_kv * head_dim,), jnp.float32)
+    return p
+
+
+def _causal_attend(q, k, v, *, q_offset: int | jax.Array = 0,
+                   block_q: int | None = None, causal: bool = True):
+    """q (B, Sq, H, hd), k/v (B, Sk, Kv, hd) grouped (causal) attention.
+
+    ``block_q``: chunk the query axis (blockwise/"flash-style" prefill) so the
+    (Sq × Sk) score tile never materializes for the full sequence — the 32K
+    prefill shape would otherwise allocate 32768² × heads floats.
+    ``causal=False`` gives the bidirectional form (encoder-only models).
+    """
+    b, sq, h, hd = q.shape
+    _, sk, kv, _ = k.shape
+    group = h // kv
+    qg = q.reshape(b, sq, kv, group, hd)
+    scale = 1.0 / np.sqrt(hd)
+
+    def attend_block(q_blk, q_pos):
+        # q_blk (B, bq, Kv, G, hd); scores vs full k
+        s = jnp.einsum("bqkgd,bskd->bqkgs", q_blk, k) * scale  # (B,bq,Kv,G,Sk)
+        if causal:
+            kpos = jnp.arange(sk)
+            mask = kpos[None, :] <= q_pos[:, None]  # (bq, Sk)
+            s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+        p = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(q.dtype)
+        return jnp.einsum("bqkgs,bskd->bqkgd", p, v)
+
+    v_hd = v.shape[-1]  # may differ from q/k head dim (MLA)
+    if block_q is None or block_q >= sq:
+        out = attend_block(qg, q_offset + jnp.arange(sq))
+    else:
+        assert sq % block_q == 0, (sq, block_q)
+        # statically unrolled chunk loop (not lax.map): the score tile stays
+        # (bq × Sk), AND XLA cost_analysis counts every chunk — a lax.map
+        # body would be counted once, silently under-reporting attention
+        # FLOPs in the roofline (see EXPERIMENTS.md §Dry-run notes).
+        nb = sq // block_q
+        qb = qg.reshape(b, nb, block_q, kv, group, hd)
+        chunks = []
+        for i in range(nb):
+            pos = q_offset + i * block_q + jnp.arange(block_q)
+            chunks.append(attend_block(qb[:, i], pos))
+        out = jnp.stack(chunks, axis=1).reshape(b, sq, kv, group, v_hd)
+    return out.reshape(b, sq, h, v_hd)
+
+
+def gqa_forward(p: Params, x: jax.Array, positions: jax.Array, *,
+                n_heads: int, n_kv: int, head_dim: int, rope_theta: float,
+                block_q: int | None = None, causal: bool = True) -> jax.Array:
+    """Training/prefill forward. x (B, S, D) -> (B, S, D)."""
+    b, s, d = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, n_heads, head_dim)
+    k = k.reshape(b, s, n_kv, head_dim)
+    v = v.reshape(b, s, n_kv, head_dim)
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+    out = _causal_attend(q, k, v, block_q=block_q, causal=causal)
+    return out.reshape(b, s, n_heads * head_dim) @ p["wo"]
+
+
+def gqa_prefill(p, x, positions, *, n_heads, n_kv, head_dim, rope_theta,
+                block_q=None):
+    """Like forward but also returns the (k, v) cache contents."""
+    b, s, d = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, n_heads, head_dim)
+    k = k.reshape(b, s, n_kv, head_dim)
+    v = v.reshape(b, s, n_kv, head_dim)
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+    out = _causal_attend(q, k, v, block_q=block_q)
+    return out.reshape(b, s, n_heads * head_dim) @ p["wo"], (k, v)
+
+
+def gqa_decode(p, x, k_cache, v_cache, pos, *, n_heads, n_kv, head_dim,
+               rope_theta) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    """One-token decode. x (B, 1, D); caches (B, S_max, Kv, hd); pos () int.
+
+    Softmax runs over the cache length axis; when the cache is sequence-
+    sharded (long_500k), GSPMD turns the reductions into cross-shard
+    collectives — the flash-decoding partial-softmax combine, derived from
+    sharding rather than hand-written (DESIGN.md §4).
+    """
+    b = x.shape[0]
+    s_max = k_cache.shape[1]
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = apply_rope(q.reshape(b, 1, n_heads, head_dim), pos[None], rope_theta)
+    k = apply_rope(k.reshape(b, 1, n_kv, head_dim), pos[None], rope_theta)
+    v = v.reshape(b, 1, n_kv, head_dim)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, pos, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, pos, axis=1)
+    group = n_heads // n_kv
+    qg = q.reshape(b, n_kv, group, head_dim)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache) / np.sqrt(head_dim)
+    mask = jnp.arange(s_max)[None, None, None, :] <= pos
+    s = jnp.where(mask, s, -jnp.inf)
+    pr = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgs,bskd->bkgd", pr, v_cache)
+    out = out.reshape(b, 1, n_heads * head_dim) @ p["wo"]
+    return out, (k_cache, v_cache)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, *, d_model, d_ff) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "wg": _dense_init(ks[0], (d_model, d_ff)),
+        "wu": _dense_init(ks[1], (d_model, d_ff)),
+        "wd": _dense_init(ks[2], (d_ff, d_model)),
+    }
+
+
+def mlp_forward(p: Params, x: jax.Array) -> jax.Array:
+    return (jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])) @ p["wd"]
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (deepseek-v3)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, *, d_model, n_heads, q_lora_rank, kv_lora_rank,
+             qk_nope_dim, qk_rope_dim, v_head_dim) -> Params:
+    ks = jax.random.split(key, 8)
+    qk_head = qk_nope_dim + qk_rope_dim
+    return {
+        "wq_a": _dense_init(ks[0], (d_model, q_lora_rank)),
+        "q_norm": jnp.ones((q_lora_rank,), jnp.float32),
+        "wq_b": _dense_init(ks[1], (q_lora_rank, n_heads * qk_head)),
+        "wkv_a": _dense_init(ks[2], (d_model, kv_lora_rank)),
+        "kv_norm": jnp.ones((kv_lora_rank,), jnp.float32),
+        "wk_rope": _dense_init(ks[3], (d_model, qk_rope_dim)),
+        "wk_b": _dense_init(ks[4], (kv_lora_rank, n_heads * qk_nope_dim)),
+        "wv_b": _dense_init(ks[5], (kv_lora_rank, n_heads * v_head_dim)),
+        "wo": _dense_init(ks[6], (n_heads * v_head_dim, d_model)),
+    }
+
+
+def mla_forward(p: Params, x: jax.Array, positions: jax.Array, *,
+                n_heads, qk_nope_dim, qk_rope_dim, v_head_dim, rope_theta,
+                block_q: int | None = None) -> jax.Array:
+    """MLA training/prefill forward (full multi-head form)."""
+    b, s, d = x.shape
+    q = rms_norm(x @ p["wq_a"], p["q_norm"]) @ p["wq_b"]
+    q = q.reshape(b, s, n_heads, qk_nope_dim + qk_rope_dim)
+    q_nope, q_rope = jnp.split(q, [qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, rope_theta)
+
+    c_kv = rms_norm(x @ p["wkv_a"], p["kv_norm"])  # (B, S, r_kv)
+    k_rope = apply_rope(
+        (x @ p["wk_rope"]).reshape(b, s, 1, qk_rope_dim), positions, rope_theta
+    )  # shared single rope head
+    k_nope = (c_kv @ p["wk_b"]).reshape(b, s, n_heads, qk_nope_dim)
+    v = (c_kv @ p["wv_b"]).reshape(b, s, n_heads, v_head_dim)
+
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, s, n_heads, qk_rope_dim))], axis=-1
+    )
+    out = _causal_attend(q_full, k_full, v, block_q=block_q)
+    return out.reshape(b, s, n_heads * v_head_dim) @ p["wo"]
+
+
+def mla_decode(p: Params, x: jax.Array, ckv_cache: jax.Array,
+               krope_cache: jax.Array, pos, *, n_heads, qk_nope_dim,
+               qk_rope_dim, v_head_dim, kv_lora_rank, rope_theta):
+    """Latent-cache decode with weight absorption.
+
+    Cache stores only (c_kv (B, S, r_kv), k_rope (B, S, rope_dim)) — the MLA
+    memory win (64× smaller than full K/V for deepseek-v3). Absorption folds
+    W_UK into the query and W_UV into the output so attention runs directly
+    against the latent cache.
+    """
+    b = x.shape[0]
+    s_max = ckv_cache.shape[1]
+    q = rms_norm(x @ p["wq_a"], p["q_norm"]) @ p["wq_b"]
+    q = q.reshape(b, 1, n_heads, qk_nope_dim + qk_rope_dim)
+    q_nope, q_rope = jnp.split(q, [qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, pos[None], rope_theta)[:, 0]  # (B, H, rope)
+
+    c_kv = rms_norm(x @ p["wkv_a"], p["kv_norm"])  # (B, 1, r_kv)
+    k_rope = apply_rope(
+        (x @ p["wk_rope"]).reshape(b, 1, 1, qk_rope_dim), pos[None], rope_theta
+    )[:, :, 0]  # (B, 1, rope)
+    ckv_cache = jax.lax.dynamic_update_slice_in_dim(ckv_cache, c_kv, pos, axis=1)
+    krope_cache = jax.lax.dynamic_update_slice_in_dim(
+        krope_cache, k_rope, pos, axis=1
+    )
+
+    # absorb W_UK: q_lat (B, H, r_kv) = q_nope @ W_UK^T (per head)
+    wk_b = p["wk_b"].reshape(kv_lora_rank, n_heads, qk_nope_dim)
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], wk_b)
+    scores = jnp.einsum("bhr,bsr->bhs", q_lat, ckv_cache)
+    scores += jnp.einsum("bhr,bsr->bhs", q_rope, krope_cache)
+    scores /= np.sqrt(qk_nope_dim + qk_rope_dim)
+    mask = jnp.arange(s_max)[None, None, :] <= pos
+    scores = jnp.where(mask, scores, -jnp.inf)
+    pr = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bhs,bsr->bhr", pr, ckv_cache)  # (B, H, r_kv)
+    # absorb W_UV: out head = ctx @ W_UV
+    wv_b = p["wv_b"].reshape(kv_lora_rank, n_heads, v_head_dim)
+    out = jnp.einsum("bhr,rhv->bhv", ctx, wv_b)
+    out = out.reshape(b, 1, n_heads * v_head_dim) @ p["wo"]
+    return out, (ckv_cache, krope_cache)

@@ -1,0 +1,269 @@
+"""Mixture-of-Experts layer (deepseek-v3: 1 shared + 256 routed top-8;
+moonshot/moonlight: 64 routed top-6 + shared).
+
+Three dispatch implementations, selectable per config — the dispatch is one of
+the §Perf hillclimb axes (see EXPERIMENTS.md):
+
+  * "scatter"  (default) — sort-free token placement via argsort-by-expert +
+    per-expert positions, scatter into (E, C, D) capacity buffers, grouped
+    einsum, gather back. No one-hot matmul FLOPs.
+  * "einsum"   — classic Switch/MaxText one-hot dispatch+combine einsums.
+    Simple, GSPMD-friendly, but burns ~2× the expert FLOPs building the
+    dispatch products (visible in the roofline's MODEL/HLO ratio).
+  * "ep"       — shard_map expert parallelism: local routing + all_to_all of
+    capacity groups along the expert-sharded mesh axis, grouped matmul on
+    local experts, reverse all_to_all. The production pattern at 256 experts.
+
+Routing: softmax gating ("softmax") or deepseek-v3 sigmoid gating with
+normalized top-k weights ("sigmoid"). Aux losses: load-balance + router z.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = dict[str, Any]
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff: int  # per-expert hidden
+    n_shared: int = 0  # shared experts (always-on), deepseek style
+    capacity_factor: float = 1.25
+    router: str = "softmax"  # or "sigmoid" (deepseek-v3)
+    impl: str = "scatter"  # "scatter" | "einsum" | "ep"
+    ep_axis: str = "model"  # mesh axis experts are sharded over (impl="ep")
+
+
+def init_moe(key, *, d_model: int, cfg: MoEConfig) -> Params:
+    ks = jax.random.split(key, 5)
+    e, f = cfg.n_experts, cfg.d_ff
+    scale = 1.0 / np.sqrt(d_model)
+    p = {
+        "router": jax.random.normal(ks[0], (d_model, e), jnp.float32) * scale,
+        "wg": jax.random.normal(ks[1], (e, d_model, f), jnp.float32) * scale,
+        "wu": jax.random.normal(ks[2], (e, d_model, f), jnp.float32) * scale,
+        "wd": jax.random.normal(ks[3], (e, f, d_model), jnp.float32)
+        / np.sqrt(f),
+    }
+    if cfg.n_shared:
+        from repro.models.layers import init_mlp
+
+        p["shared"] = init_mlp(ks[4], d_model=d_model, d_ff=cfg.n_shared * f)
+    return p
+
+
+def _route(p: Params, flat: jax.Array, cfg: MoEConfig):
+    """Returns (weights (N, k), idx (N, k), aux losses)."""
+    logits = flat.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    if cfg.router == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+        w, idx = jax.lax.top_k(scores, cfg.top_k)
+        w = w / jnp.maximum(jnp.sum(w, -1, keepdims=True), 1e-9)
+        probs = scores / jnp.maximum(jnp.sum(scores, -1, keepdims=True), 1e-9)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        w, idx = jax.lax.top_k(probs, cfg.top_k)
+        w = w / jnp.maximum(jnp.sum(w, -1, keepdims=True), 1e-9)
+    # Load-balance loss (Switch): E * Σ_e f_e · P_e
+    e = cfg.n_experts
+    f_e = jnp.mean(
+        jnp.sum(jax.nn.one_hot(idx, e, dtype=jnp.float32), axis=1), axis=0
+    )
+    p_e = jnp.mean(probs, axis=0)
+    lb = e * jnp.sum(f_e * p_e)
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return w.astype(flat.dtype), idx, {"load_balance": lb, "router_z": z}
+
+
+def _expert_ffn(xe: jax.Array, p: Params) -> jax.Array:
+    """Grouped SwiGLU: xe (E, C, D) -> (E, C, D)."""
+    g = jnp.einsum("ecd,edf->ecf", xe, p["wg"])
+    u = jnp.einsum("ecd,edf->ecf", xe, p["wu"])
+    return jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, p["wd"])
+
+
+def _positions_by_expert(e_flat: jax.Array, n_experts: int) -> jax.Array:
+    """Within-expert arrival position for each (token, slot) assignment.
+
+    Sort assignments by expert id (stable), rank within each run, unsort.
+    O(Nk log Nk), no (N, E)-sized intermediates.
+    """
+    nk = e_flat.shape[0]
+    order = jnp.argsort(e_flat, stable=True)
+    e_sorted = e_flat[order]
+    # start offset of each expert's run
+    start = jnp.searchsorted(e_sorted, jnp.arange(n_experts), side="left")
+    pos_sorted = jnp.arange(nk) - start[e_sorted]
+    inv = jnp.zeros_like(order).at[order].set(jnp.arange(nk))
+    return pos_sorted[inv]
+
+
+def _dispatch_scatter(flat, w, idx, p, cfg, capacity):
+    n, d = flat.shape
+    k = cfg.top_k
+    e_flat = idx.reshape(-1)  # (Nk,)
+    pos = _positions_by_expert(e_flat, cfg.n_experts)  # (Nk,)
+    keep = pos < capacity
+    slot = jnp.where(keep, e_flat * capacity + pos, cfg.n_experts * capacity)
+    x_rep = jnp.repeat(flat, k, axis=0)  # (Nk, D) token copies
+    xe = jnp.zeros((cfg.n_experts * capacity, d), flat.dtype)
+    xe = xe.at[slot].set(x_rep, mode="drop")
+    ye = _expert_ffn(xe.reshape(cfg.n_experts, capacity, d), p)
+    ye = ye.reshape(cfg.n_experts * capacity, d)
+    safe = jnp.minimum(slot, cfg.n_experts * capacity - 1)
+    y_tok = jnp.where(keep[:, None], ye[safe], 0.0)  # (Nk, D)
+    out = jnp.sum(
+        y_tok.reshape(n, k, d) * w[..., None].astype(flat.dtype), axis=1
+    )
+    return out
+
+
+def _dispatch_einsum(flat, w, idx, p, cfg, capacity):
+    n, d = flat.shape
+    e = cfg.n_experts
+    e_oh = jax.nn.one_hot(idx, e, dtype=flat.dtype)  # (N, k, E)
+    pos = _positions_by_expert(idx.reshape(-1), e).reshape(n, cfg.top_k)
+    keep = (pos < capacity).astype(flat.dtype)
+    pos_oh = jax.nn.one_hot(pos, capacity, dtype=flat.dtype) * keep[..., None]
+    dispatch = jnp.einsum("nke,nkc->nec", e_oh, pos_oh)  # (N, E, C)
+    combine = jnp.einsum(
+        "nke,nkc,nk->nec", e_oh, pos_oh, w.astype(flat.dtype)
+    )
+    xe = jnp.einsum("nec,nd->ecd", dispatch, flat)
+    ye = _expert_ffn(xe, p)
+    return jnp.einsum("nec,ecd->nd", combine, ye)
+
+
+def _dispatch_ep(flat, w, idx, p, cfg, capacity):
+    """Expert-parallel all_to_all dispatch — must run inside shard_map with
+    ``flat`` token-sharded and expert weights sharded on ``cfg.ep_axis``.
+
+    Local view: tokens (n_loc, D); p["wg"] etc. (E_loc, …). Each device
+    groups its local tokens per *global* expert at per-device capacity,
+    all_to_all sends group slices to the expert's owner, grouped matmul,
+    reverse all_to_all, weighted combine.
+    """
+    axis = cfg.ep_axis
+    ep = jax.lax.axis_size(axis)
+    n, d = flat.shape
+    k = cfg.top_k
+    e = cfg.n_experts
+    e_loc = e // ep
+    c_dev = max(capacity // ep, 1)
+
+    e_flat = idx.reshape(-1)
+    pos = _positions_by_expert(e_flat, e)
+    keep = pos < c_dev
+    slot = jnp.where(keep, e_flat * c_dev + pos, e * c_dev)
+    x_rep = jnp.repeat(flat, k, axis=0)
+    xe = jnp.zeros((e * c_dev, d), flat.dtype).at[slot].set(x_rep, mode="drop")
+    xe = xe.reshape(ep, e_loc * c_dev, d)
+    # exchange: device j receives the groups for ITS experts from everyone
+    xe = jax.lax.all_to_all(xe, axis, split_axis=0, concat_axis=0, tiled=True)
+    xe = xe.reshape(ep, e_loc, c_dev, d).transpose(1, 0, 2, 3)
+    xe = xe.reshape(e_loc, ep * c_dev, d)
+    ye = _expert_ffn(xe, p)  # p holds local experts (E_loc, …)
+    ye = ye.reshape(e_loc, ep, c_dev, d).transpose(1, 0, 2, 3)
+    ye = ye.reshape(ep, e_loc * c_dev, d)
+    ye = jax.lax.all_to_all(ye, axis, split_axis=0, concat_axis=0, tiled=True)
+    ye = ye.reshape(e * c_dev, d)
+    safe = jnp.minimum(slot, e * c_dev - 1)
+    y_tok = jnp.where(keep[:, None], ye[safe], 0.0)
+    return jnp.sum(y_tok.reshape(n, k, d) * w[..., None].astype(flat.dtype), 1)
+
+
+def _dispatch_ep_sharded(flat, w, idx, p, cfg):
+    """shard_map wrapper around :func:`_dispatch_ep`.
+
+    Tokens shard over every mesh axis (sequence-parallel MoE: 1M tokens /
+    512 devices = 2048 local); expert weights shard over ``cfg.ep_axis``.
+    Per-device capacity is computed from the *local* token count — the knob
+    that keeps the dispatch buffers (E × C_dev × D) HBM-friendly. Falls back
+    to the scatter impl when no mesh is active (CPU smoke tests).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.context import get_current_mesh
+
+    mesh = get_current_mesh()
+    n = flat.shape[0]
+    n_dev_total = (
+        int(np.prod([mesh.shape[a] for a in mesh.axis_names])) if mesh else 0
+    )
+    if (
+        mesh is None
+        or cfg.ep_axis not in mesh.axis_names
+        or n % max(n_dev_total, 1) != 0
+        or n < n_dev_total
+    ):
+        # no mesh (CPU smoke) or too few tokens to token-shard (decode):
+        # capacity-scatter under plain GSPMD.
+        capacity = min(
+            max(int(np.ceil(n * cfg.top_k / cfg.n_experts * cfg.capacity_factor)), 1),
+            n,
+        )
+        return _dispatch_scatter(flat, w, idx, p, cfg, capacity)
+
+    all_axes = tuple(mesh.axis_names)
+    n_dev = n_dev_total
+    n_local = flat.shape[0] // n_dev
+    ep = mesh.shape[cfg.ep_axis]
+    # per-device capacity from local tokens; multiple of ep for the a2a split
+    c_loc = max(
+        int(np.ceil(n_local * cfg.top_k / cfg.n_experts * cfg.capacity_factor)),
+        1,
+    )
+    c_loc = -(-c_loc // ep) * ep
+
+    tok_spec = P(all_axes, None)
+    w_specs = {
+        "wg": P(cfg.ep_axis, None, None),
+        "wu": P(cfg.ep_axis, None, None),
+        "wd": P(cfg.ep_axis, None, None),
+    }
+
+    def body(flat_l, w_l, idx_l, wg, wu, wd):
+        p_loc = {"wg": wg, "wu": wu, "wd": wd}
+        return _dispatch_ep(flat_l, w_l, idx_l, p_loc, cfg, c_loc * ep)
+
+    return jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(tok_spec, tok_spec, tok_spec,
+                  w_specs["wg"], w_specs["wu"], w_specs["wd"]),
+        out_specs=tok_spec,
+        check_vma=False,
+    )(flat, w, idx, p["wg"], p["wu"], p["wd"])
+
+
+def moe_forward(
+    p: Params, x: jax.Array, cfg: MoEConfig
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """x (B, S, D) -> (out (B, S, D), aux losses)."""
+    b, s, d = x.shape
+    flat = x.reshape(b * s, d)
+    w, idx, aux = _route(p, flat, cfg)
+    n = flat.shape[0]
+    capacity = max(int(np.ceil(n * cfg.top_k / cfg.n_experts * cfg.capacity_factor)), 1)
+    capacity = min(capacity, n)  # an expert can never receive > n tokens
+    if cfg.impl == "scatter":
+        out = _dispatch_scatter(flat, w, idx, p, cfg, capacity)
+    elif cfg.impl == "einsum":
+        out = _dispatch_einsum(flat, w, idx, p, cfg, capacity)
+    elif cfg.impl == "ep":
+        out = _dispatch_ep_sharded(flat, w, idx, p, cfg)
+    else:
+        raise ValueError(f"unknown moe impl {cfg.impl!r}")
+    if cfg.n_shared:
+        from repro.models.layers import mlp_forward
+
+        out = out + mlp_forward(p["shared"], flat)
+    return out.reshape(b, s, d), aux

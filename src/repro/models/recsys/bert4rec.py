@@ -1,0 +1,136 @@
+"""BERT4Rec — bidirectional transformer over item sequences (arXiv:1904.06690).
+
+Cloze training: random positions are masked; the model predicts the masked
+item from both directions. Serving scores the next item at the sequence's
+final (mask) position against the item-embedding table (weights tied).
+
+Assigned shapes: train_batch (65536), serve_p99 (512), serve_bulk (262144),
+retrieval_cand (1 query × 1M candidates — see retrieval.py, where the
+Flash index from repro.core/graph is the production scorer).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+
+Params = dict[str, Any]
+
+
+@dataclass(frozen=True)
+class Bert4RecConfig:
+    n_items: int = 1_000_000  # production-scale item vocabulary
+    embed_dim: int = 64
+    n_blocks: int = 2
+    n_heads: int = 2
+    seq_len: int = 200
+    mask_prob: float = 0.2
+    dtype: Any = jnp.float32
+
+    @property
+    def mask_id(self) -> int:
+        return self.n_items  # extra row
+
+    @property
+    def head_dim(self) -> int:
+        return self.embed_dim // self.n_heads
+
+
+def init_bert4rec(key, cfg: Bert4RecConfig) -> Params:
+    ks = jax.random.split(key, 2 + cfg.n_blocks)
+    blocks = []
+    for i in range(cfg.n_blocks):
+        k1, k2 = jax.random.split(ks[2 + i])
+        blocks.append(
+            {
+                "attn": L.init_gqa(
+                    k1, d_model=cfg.embed_dim, n_heads=cfg.n_heads,
+                    n_kv=cfg.n_heads, head_dim=cfg.head_dim, qkv_bias=True,
+                ),
+                "mlp": L.init_mlp(k2, d_model=cfg.embed_dim, d_ff=4 * cfg.embed_dim),
+                "ln1": jnp.ones((cfg.embed_dim,), jnp.float32),
+                "ln1b": jnp.zeros((cfg.embed_dim,), jnp.float32),
+                "ln2": jnp.ones((cfg.embed_dim,), jnp.float32),
+                "ln2b": jnp.zeros((cfg.embed_dim,), jnp.float32),
+            }
+        )
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *blocks)
+    return {
+        "item_embed": jax.random.normal(
+            ks[0], (cfg.n_items + 1, cfg.embed_dim), jnp.float32
+        ) * 0.02,  # +1 = [MASK]
+        "pos_embed": jax.random.normal(
+            ks[1], (cfg.seq_len, cfg.embed_dim), jnp.float32
+        ) * 0.02,
+        "blocks": stacked,
+        "ln_f": jnp.ones((cfg.embed_dim,), jnp.float32),
+        "ln_fb": jnp.zeros((cfg.embed_dim,), jnp.float32),
+        "out_bias": jnp.zeros((cfg.n_items + 1,), jnp.float32),
+    }
+
+
+def bert4rec_encode(p: Params, cfg: Bert4RecConfig, items: jax.Array) -> jax.Array:
+    """items (B, S) int32 -> hidden (B, S, D). Bidirectional attention."""
+    b, s = items.shape
+    x = (p["item_embed"][items] + p["pos_embed"][None, :s]).astype(cfg.dtype)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(x, blk):
+        h = L.layer_norm(x, blk["ln1"], blk["ln1b"])
+        a = L.gqa_forward(
+            blk["attn"], h, positions, n_heads=cfg.n_heads, n_kv=cfg.n_heads,
+            head_dim=cfg.head_dim, rope_theta=10000.0, causal=False,
+        )
+        x = x + a
+        h = L.layer_norm(x, blk["ln2"], blk["ln2b"])
+        return x + L.mlp_forward(blk["mlp"], h), None
+
+    x, _ = jax.lax.scan(body, x, p["blocks"])
+    return L.layer_norm(x, p["ln_f"], p["ln_fb"])
+
+
+def bert4rec_loss(p: Params, cfg: Bert4RecConfig, items, mask_positions):
+    """Cloze loss. items (B, S); mask_positions (B, S) bool → replace with
+    [MASK], predict the original id at those positions (tied softmax)."""
+    masked = jnp.where(mask_positions, cfg.mask_id, items)
+    h = bert4rec_encode(p, cfg, masked)  # (B, S, D)
+    logits = (
+        h.astype(jnp.float32) @ p["item_embed"].T + p["out_bias"]
+    )  # (B, S, V+1)
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(lp, items[..., None], axis=-1)[..., 0]
+    m = mask_positions.astype(jnp.float32)
+    return -jnp.sum(ll * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+def bert4rec_serve(p: Params, cfg: Bert4RecConfig, items) -> jax.Array:
+    """Online scoring: hidden state of the final position (the next-item
+    query vector). items (B, S) with items[:, -1] == mask_id by convention.
+    Returns (B, D) query embeddings (scored against the table downstream)."""
+    h = bert4rec_encode(p, cfg, items)
+    return h[:, -1, :].astype(jnp.float32)
+
+
+def bert4rec_score_all(p: Params, cfg: Bert4RecConfig, items) -> jax.Array:
+    """Bulk scoring: (B, S) -> logits over the full item vocab (B, V+1)."""
+    q = bert4rec_serve(p, cfg, items)
+    return q @ p["item_embed"].T + p["out_bias"]
+
+
+def sample_training_batch(key, cfg: Bert4RecConfig, batch: int):
+    """Synthetic session data with popularity-skewed items (zipf-ish)."""
+    k1, k2 = jax.random.split(key)
+    u = jax.random.uniform(k1, (batch, cfg.seq_len), minval=1e-6, maxval=1.0)
+    items = jnp.clip(
+        (u ** (-1 / 1.2) - 1).astype(jnp.int32), 0, cfg.n_items - 1
+    )
+    mask_positions = jax.random.uniform(k2, (batch, cfg.seq_len)) < cfg.mask_prob
+    # guarantee ≥1 mask per row
+    mask_positions = mask_positions.at[:, -1].set(True)
+    return items, mask_positions

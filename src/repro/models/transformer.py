@@ -1,0 +1,518 @@
+"""Decoder-only LM: dense (qwen2/qwen1.5/llama3.2) and MoE (deepseek-v3,
+moonshot) variants, with GQA or MLA attention, scan-over-layers.
+
+Entry points
+------------
+  init_lm(key, cfg)                      parameters (layer-stacked pytree)
+  lm_loss(params, cfg, tokens, labels)   next-token CE loss (train_step body)
+  lm_prefill(params, cfg, tokens)        logits + KV caches
+  lm_decode_step(params, cfg, caches, token, pos)   one-token serve_step
+
+Layer parameters are stacked (leading axis = layer) and consumed via
+``jax.lax.scan`` so the 61–80-layer production configs lower to a small HLO.
+MoE models keep their first ``moe_first_dense`` layers dense (deepseek-v3
+uses 3), giving two scans: a dense stack and an MoE stack.
+
+MTP (deepseek-v3 multi-token prediction) is an optional extra block fed by
+[h_t ; emb(t+1)] predicting token t+2 with the shared head.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models.moe import MoEConfig, init_moe, moe_forward
+
+Params = dict[str, Any]
+
+
+@dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int  # dense-layer FFN width
+    vocab: int
+    qkv_bias: bool = False
+    rope_theta: float = 1e6
+    norm_eps: float = 1e-6
+    attn: str = "gqa"  # "gqa" | "mla"
+    # MLA dims (deepseek-v3 defaults)
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    # MoE
+    moe: MoEConfig | None = None
+    moe_first_dense: int = 0
+    mtp_depth: int = 0
+    # execution
+    dtype: Any = jnp.bfloat16  # compute dtype
+    param_dtype: Any = jnp.float32  # storage dtype (bf16 for 72B/671B: HBM fit)
+    block_q: int | None = None  # blockwise attention chunk for long prefill
+    remat: bool = True
+
+    @property
+    def n_dense_layers(self) -> int:
+        return self.n_layers if self.moe is None else self.moe_first_dense
+
+    @property
+    def n_moe_layers(self) -> int:
+        return 0 if self.moe is None else self.n_layers - self.moe_first_dense
+
+    def param_count(self) -> float:
+        """Analytic total parameter count (for roofline MODEL_FLOPS)."""
+        d, v = self.d_model, self.vocab
+        if self.attn == "mla":
+            attn = (
+                d * self.q_lora_rank
+                + self.q_lora_rank * self.n_heads * (self.qk_nope_dim + self.qk_rope_dim)
+                + d * self.kv_lora_rank
+                + d * self.qk_rope_dim
+                + self.kv_lora_rank * self.n_heads * (self.qk_nope_dim + self.v_head_dim)
+                + self.n_heads * self.v_head_dim * d
+            )
+        else:
+            attn = d * self.head_dim * (self.n_heads * 2 + self.n_kv_heads * 2)
+        dense_ffn = 3 * d * self.d_ff
+        total = v * d * 2  # embed + head
+        total += self.n_dense_layers * (attn + dense_ffn)
+        if self.moe is not None:
+            m = self.moe
+            moe_ffn = 3 * d * m.d_ff * (m.n_experts + m.n_shared) + d * m.n_experts
+            total += self.n_moe_layers * (attn + moe_ffn)
+        return float(total)
+
+    def active_param_count(self) -> float:
+        """Activated parameters per token (MoE: top-k + shared only)."""
+        if self.moe is None:
+            return self.param_count()
+        d = self.d_model
+        m = self.moe
+        full = self.param_count()
+        moe_all = 3 * d * m.d_ff * (m.n_experts + m.n_shared)
+        moe_act = 3 * d * m.d_ff * (m.top_k + m.n_shared)
+        return full - self.n_moe_layers * (moe_all - moe_act)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key, cfg: TransformerConfig, *, moe: bool) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    if cfg.attn == "mla":
+        attn = L.init_mla(
+            k1, d_model=cfg.d_model, n_heads=cfg.n_heads,
+            q_lora_rank=cfg.q_lora_rank, kv_lora_rank=cfg.kv_lora_rank,
+            qk_nope_dim=cfg.qk_nope_dim, qk_rope_dim=cfg.qk_rope_dim,
+            v_head_dim=cfg.v_head_dim,
+        )
+    else:
+        attn = L.init_gqa(
+            k1, d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+            head_dim=cfg.head_dim, qkv_bias=cfg.qkv_bias,
+        )
+    if moe:
+        ffn = init_moe(k2, d_model=cfg.d_model, cfg=cfg.moe)
+    else:
+        ffn = L.init_mlp(k2, d_model=cfg.d_model, d_ff=cfg.d_ff)
+    return {
+        "attn": attn,
+        "ffn": ffn,
+        "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+        "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+
+
+def _stack_blocks(key, cfg, n, *, moe):
+    if n == 0:
+        return None
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: _init_block(k, cfg, moe=moe))(keys)
+
+
+def init_lm(key, cfg: TransformerConfig) -> Params:
+    ke, kd, km, kh, km2 = jax.random.split(key, 5)
+    p = {
+        "embed": jax.random.normal(ke, (cfg.vocab, cfg.d_model), jnp.float32)
+        * 0.02,
+        "blocks_dense": _stack_blocks(kd, cfg, cfg.n_dense_layers, moe=False),
+        "blocks_moe": _stack_blocks(km, cfg, cfg.n_moe_layers, moe=True),
+        "ln_f": jnp.ones((cfg.d_model,), jnp.float32),
+        "head": jax.random.normal(kh, (cfg.d_model, cfg.vocab), jnp.float32)
+        / np.sqrt(cfg.d_model),
+    }
+    if cfg.mtp_depth:
+        kp, kb = jax.random.split(km2)
+        p["mtp_proj"] = (
+            jax.random.normal(kp, (2 * cfg.d_model, cfg.d_model), jnp.float32)
+            / np.sqrt(2 * cfg.d_model)
+        )
+        p["mtp_block"] = _init_block(kb, cfg, moe=False)
+    if cfg.param_dtype != jnp.float32:
+        p = jax.tree_util.tree_map(lambda w: w.astype(cfg.param_dtype), p)
+    return p
+
+
+def lm_param_specs(cfg: TransformerConfig) -> Params:
+    """Logical-axis PartitionSpec tree matching init_lm (see distributed/)."""
+    from jax.sharding import PartitionSpec as P
+
+    def gqa_spec():
+        s = {
+            "wq": P(None, None, "model"), "wk": P(None, None, "model"),
+            "wv": P(None, None, "model"), "wo": P(None, "model", None),
+        }
+        if cfg.qkv_bias:
+            s.update({"bq": P(None, "model"), "bk": P(None, "model"),
+                      "bv": P(None, "model")})
+        return s
+
+    def mla_spec():
+        return {
+            "wq_a": P(None, None, None), "q_norm": P(None, None),
+            "wq_b": P(None, None, "model"),
+            "wkv_a": P(None, None, None), "kv_norm": P(None, None),
+            "wk_rope": P(None, None, None),
+            "wk_b": P(None, None, "model"), "wv_b": P(None, None, "model"),
+            "wo": P(None, "model", None),
+        }
+
+    def mlp_spec():
+        return {"wg": P(None, None, "model"), "wu": P(None, None, "model"),
+                "wd": P(None, "model", None)}
+
+    def moe_spec():
+        s = {
+            "router": P(None, None, None),
+            "wg": P(None, "model", None, None),
+            "wu": P(None, "model", None, None),
+            "wd": P(None, "model", None, None),
+        }
+        if cfg.moe and cfg.moe.n_shared:
+            s["shared"] = mlp_spec()
+        return s
+
+    def block_spec(moe):
+        return {
+            "attn": mla_spec() if cfg.attn == "mla" else gqa_spec(),
+            "ffn": moe_spec() if moe else mlp_spec(),
+            "ln1": P(None, None), "ln2": P(None, None),
+        }
+
+    def unstacked(tree):
+        """Drop the leading (layer) axis from every leaf spec."""
+        return jax.tree_util.tree_map(
+            lambda s: P(*s[1:]), tree,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+
+    specs = {
+        "embed": P("model", None),
+        "blocks_dense": block_spec(False) if cfg.n_dense_layers else None,
+        "blocks_moe": block_spec(True) if cfg.n_moe_layers else None,
+        "ln_f": P(None),
+        "head": P(None, "model"),
+    }
+    if cfg.mtp_depth:
+        specs["mtp_proj"] = P(None, None)
+        specs["mtp_block"] = unstacked(block_spec(False))
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _cast_block(blk: Params, dtype) -> Params:
+    """Cast block weights (f32 masters) to the compute dtype; norm scales
+    stay f32 (rms_norm computes in f32 regardless)."""
+    def cast(path, w):
+        name = str(path[-1]) if path else ""
+        if "ln" in name or "norm" in name:
+            return w
+        return w.astype(dtype) if w.dtype == jnp.float32 else w
+
+    return jax.tree_util.tree_map_with_path(cast, blk)
+
+
+def _block_forward(blk: Params, x, positions, cfg: TransformerConfig, *, moe):
+    blk = _cast_block(blk, cfg.dtype)
+    h = L.rms_norm(x, blk["ln1"], cfg.norm_eps)
+    if cfg.attn == "mla":
+        a = L.mla_forward(
+            blk["attn"], h, positions, n_heads=cfg.n_heads,
+            qk_nope_dim=cfg.qk_nope_dim, qk_rope_dim=cfg.qk_rope_dim,
+            v_head_dim=cfg.v_head_dim, rope_theta=cfg.rope_theta,
+            block_q=cfg.block_q,
+        )
+    else:
+        a = L.gqa_forward(
+            blk["attn"], h, positions, n_heads=cfg.n_heads,
+            n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+            rope_theta=cfg.rope_theta, block_q=cfg.block_q,
+        )
+    x = x + a
+    h = L.rms_norm(x, blk["ln2"], cfg.norm_eps)
+    if moe:
+        f, aux = moe_forward(blk["ffn"], h, cfg.moe)
+    else:
+        f, aux = L.mlp_forward(blk["ffn"], h), {}
+    return x + f, aux
+
+
+def _scan_blocks(blocks, x, positions, cfg, *, moe):
+    if blocks is None:
+        return x, {}
+
+    def body(carry, blk):
+        y, aux = _block_forward(blk, carry, positions, cfg, moe=moe)
+        return y, aux
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, auxs = jax.lax.scan(body, x, blocks)
+    aux = {k: jnp.mean(v) for k, v in auxs.items()}
+    return x, aux
+
+
+def _trunk(params: Params, cfg: TransformerConfig, tokens: jax.Array):
+    """Embed + all blocks (pre-final-norm hidden). Returns (hidden, aux)."""
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(cfg.dtype)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x, aux1 = _scan_blocks(params["blocks_dense"], x, positions, cfg, moe=False)
+    x, aux2 = _scan_blocks(params["blocks_moe"], x, positions, cfg, moe=True)
+    aux = {**{f"dense/{k}": v for k, v in aux1.items()},
+           **{f"moe/{k}": v for k, v in aux2.items()}}
+    return x, aux
+
+
+def lm_forward(params: Params, cfg: TransformerConfig, tokens: jax.Array):
+    """tokens (B, S) -> (logits (B, S, V), aux)."""
+    x, aux = _trunk(params, cfg, tokens)
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = x @ params["head"].astype(cfg.dtype)
+    return logits.astype(jnp.float32), aux
+
+
+def lm_loss(params, cfg: TransformerConfig, tokens, labels,
+            *, lb_coef: float = 0.01, z_coef: float = 1e-4):
+    """Next-token cross entropy (+ MoE aux, + MTP if configured)."""
+    h, aux = _trunk(params, cfg, tokens)
+    logits = (
+        L.rms_norm(h, params["ln_f"], cfg.norm_eps) @ params["head"].astype(cfg.dtype)
+    ).astype(jnp.float32)
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0]
+    loss = -jnp.mean(ll)
+    metrics = {"ce": loss, **aux}
+    if "moe/load_balance" in aux:
+        loss = loss + lb_coef * aux["moe/load_balance"] + z_coef * aux["moe/router_z"]
+    if cfg.mtp_depth:
+        # predict t+2 from [h_t ; emb(t+1)] — one extra block, shared head
+        b, s = tokens.shape
+        nxt = params["embed"][jnp.roll(tokens, -1, axis=1)].astype(cfg.dtype)
+        mtp_in = jnp.concatenate([h, nxt], axis=-1) @ params["mtp_proj"].astype(cfg.dtype)
+        mtp_h, _ = _block_forward(
+            params["mtp_block"], mtp_in,
+            jnp.broadcast_to(jnp.arange(s), (b, s)), cfg, moe=False)
+        mtp_logits = (
+            L.rms_norm(mtp_h, params["ln_f"], cfg.norm_eps)
+            @ params["head"].astype(cfg.dtype)
+        ).astype(jnp.float32)
+        mtp_labels = jnp.roll(labels, -1, axis=1)
+        lp2 = jax.nn.log_softmax(mtp_logits, axis=-1)
+        ll2 = jnp.take_along_axis(lp2, mtp_labels[..., None], axis=-1)[..., 0]
+        # ignore the last two positions (rolled-in garbage)
+        mask = jnp.arange(s) < s - 2
+        mtp_loss = -jnp.sum(ll2 * mask) / jnp.maximum(jnp.sum(mask) * b, 1)
+        loss = loss + 0.3 * mtp_loss
+        metrics["mtp_ce"] = mtp_loss
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def make_caches(cfg: TransformerConfig, batch: int, s_max: int):
+    """Zeroed KV caches. GQA: (L, B, S, Kv, hd) ×2. MLA: latent + rope."""
+    n_l = cfg.n_layers
+    if cfg.attn == "mla":
+        return {
+            "ckv": jnp.zeros((n_l, batch, s_max, cfg.kv_lora_rank), cfg.dtype),
+            "krope": jnp.zeros((n_l, batch, s_max, cfg.qk_rope_dim), cfg.dtype),
+        }
+    return {
+        "k": jnp.zeros((n_l, batch, s_max, cfg.n_kv_heads, cfg.head_dim), cfg.dtype),
+        "v": jnp.zeros((n_l, batch, s_max, cfg.n_kv_heads, cfg.head_dim), cfg.dtype),
+    }
+
+
+def cache_specs(cfg: TransformerConfig, *, seq_shard: bool):
+    """PartitionSpecs for caches. seq_shard=True puts the sequence axis on
+    "model" (long-context decode: the 512K cache divides across chips and the
+    softmax combine becomes a cross-shard collective)."""
+    from jax.sharding import PartitionSpec as P
+
+    seq = "model" if seq_shard else None
+    kv = None if seq_shard else ("model" if cfg.n_kv_heads > 1 else None)
+    if cfg.attn == "mla":
+        return {
+            "ckv": P(None, ("pod", "data"), seq, None),
+            "krope": P(None, ("pod", "data"), seq, None),
+        }
+    return {
+        "k": P(None, ("pod", "data"), seq, kv, None),
+        "v": P(None, ("pod", "data"), seq, kv, None),
+    }
+
+
+def _split_layer_caches(caches, cfg):
+    nd = cfg.n_dense_layers
+    dense = {k: v[:nd] for k, v in caches.items()} if nd else None
+    moe = {k: v[nd:] for k, v in caches.items()} if cfg.n_moe_layers else None
+    return dense, moe
+
+
+def lm_decode_step(params, cfg: TransformerConfig, caches, token, pos):
+    """One-token decode: token (B,), pos () -> (logits (B, V), new caches)."""
+    b = token.shape[0]
+    x = params["embed"][token][:, None, :].astype(cfg.dtype)  # (B, 1, D)
+
+    def attn_decode(blk, x, cache_slice):
+        blk = _cast_block(blk, cfg.dtype)
+        h = L.rms_norm(x, blk["ln1"], cfg.norm_eps)
+        if cfg.attn == "mla":
+            a, new_kv = L.mla_decode(
+                blk["attn"], h, cache_slice["ckv"], cache_slice["krope"], pos,
+                n_heads=cfg.n_heads, qk_nope_dim=cfg.qk_nope_dim,
+                qk_rope_dim=cfg.qk_rope_dim, v_head_dim=cfg.v_head_dim,
+                kv_lora_rank=cfg.kv_lora_rank, rope_theta=cfg.rope_theta,
+            )
+            new_cache = {"ckv": new_kv[0], "krope": new_kv[1]}
+        else:
+            a, new_kv = L.gqa_decode(
+                blk["attn"], h, cache_slice["k"], cache_slice["v"], pos,
+                n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
+            )
+            new_cache = {"k": new_kv[0], "v": new_kv[1]}
+        return x + a, new_cache
+
+    def ffn_apply(blk, x, moe):
+        blk = _cast_block(blk, cfg.dtype)
+        h = L.rms_norm(x, blk["ln2"], cfg.norm_eps)
+        if moe:
+            f, _ = moe_forward(blk["ffn"], h, cfg.moe)
+        else:
+            f = L.mlp_forward(blk["ffn"], h)
+        return x + f
+
+    dense_c, moe_c = _split_layer_caches(caches, cfg)
+
+    def scan_decode(blocks, caches_l, x, moe):
+        if blocks is None:
+            return x, caches_l
+
+        def body(x, inp):
+            blk, cache_slice = inp
+            x, new_cache = attn_decode(blk, x, cache_slice)
+            x = ffn_apply(blk, x, moe)
+            return x, new_cache
+
+        x, new_caches = jax.lax.scan(body, x, (blocks, caches_l))
+        return x, new_caches
+
+    x, dense_c = scan_decode(params["blocks_dense"], dense_c, x, False)
+    x, moe_c = scan_decode(params["blocks_moe"], moe_c, x, True)
+    new_caches = {}
+    for k in caches:
+        parts = []
+        if dense_c is not None:
+            parts.append(dense_c[k])
+        if moe_c is not None:
+            parts.append(moe_c[k])
+        new_caches[k] = jnp.concatenate(parts, axis=0) if len(parts) > 1 else parts[0]
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = (x[:, 0, :] @ params["head"].astype(cfg.dtype)).astype(jnp.float32)
+    return logits, new_caches
+
+
+def lm_prefill(params, cfg: TransformerConfig, tokens):
+    """Prefill: runs the forward pass and materializes the KV caches.
+
+    Returns (logits of last position (B, V), caches filled to S).
+    """
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(cfg.dtype)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def block_prefill(blk, x, moe):
+        blk = _cast_block(blk, cfg.dtype)
+        h = L.rms_norm(x, blk["ln1"], cfg.norm_eps)
+        if cfg.attn == "mla":
+            # latent cache contents
+            c_kv = L.rms_norm(h @ blk["attn"]["wkv_a"], blk["attn"]["kv_norm"])
+            k_rope = L.apply_rope(
+                (h @ blk["attn"]["wk_rope"]).reshape(b, s, 1, cfg.qk_rope_dim),
+                positions, cfg.rope_theta,
+            )[:, :, 0]
+            a = L.mla_forward(
+                blk["attn"], h, positions, n_heads=cfg.n_heads,
+                qk_nope_dim=cfg.qk_nope_dim, qk_rope_dim=cfg.qk_rope_dim,
+                v_head_dim=cfg.v_head_dim, rope_theta=cfg.rope_theta,
+                block_q=cfg.block_q,
+            )
+            cache = {"ckv": c_kv.astype(cfg.dtype), "krope": k_rope.astype(cfg.dtype)}
+        else:
+            a, (k, v) = L.gqa_prefill(
+                blk["attn"], h, positions, n_heads=cfg.n_heads,
+                n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+                rope_theta=cfg.rope_theta, block_q=cfg.block_q,
+            )
+            cache = {"k": k.astype(cfg.dtype), "v": v.astype(cfg.dtype)}
+        x = x + a
+        h2 = L.rms_norm(x, blk["ln2"], cfg.norm_eps)
+        if moe:
+            f, _ = moe_forward(blk["ffn"], h2, cfg.moe)
+        else:
+            f = L.mlp_forward(blk["ffn"], h2)
+        return x + f, cache
+
+    def scan_prefill(blocks, x, moe):
+        if blocks is None:
+            return x, None
+
+        def body(x, blk):
+            return block_prefill(blk, x, moe)
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        return jax.lax.scan(body, x, blocks)
+
+    x, cache_d = scan_prefill(params["blocks_dense"], x, False)
+    x, cache_m = scan_prefill(params["blocks_moe"], x, True)
+    caches = {}
+    keys = (cache_d or cache_m).keys()
+    for k in keys:
+        parts = [c[k] for c in (cache_d, cache_m) if c is not None]
+        caches[k] = jnp.concatenate(parts, axis=0) if len(parts) > 1 else parts[0]
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = (x[:, -1, :] @ params["head"].astype(cfg.dtype)).astype(jnp.float32)
+    return logits, caches

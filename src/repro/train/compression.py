@@ -1,0 +1,81 @@
+"""Gradient compression for cross-pod reduction (DESIGN.md §5).
+
+At 512+ chips, the data-parallel all-reduce of a 72B-parameter gradient is
+the dominant inter-pod traffic. Two standard mitigations, both implemented
+as drop-in wrappers around the gradient tree *before* the optimizer:
+
+  * ``compress_bf16``  — cast the reduction operand to bf16 (half traffic).
+  * ``compress_int8``  — per-tensor symmetric int8 quantization with error
+    feedback (residual carried to the next step), ~4× traffic; EF keeps the
+    long-run bias at zero (Seide et al., 1-bit SGD lineage).
+
+Under pjit the actual psum is inserted by GSPMD wherever the sharding
+demands it; compressing the tree changes the dtype of the reduced operand —
+visible in the dry-run's collective-bytes term (§Roofline).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def compress_bf16(grads: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(lambda g: g.astype(jnp.bfloat16), grads)
+
+
+def decompress_f32(grads: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+
+
+class EFState(NamedTuple):
+    """Error-feedback residuals, one per gradient leaf."""
+
+    residual: Pytree
+
+
+def ef_init(params: Pytree) -> EFState:
+    return EFState(
+        residual=jax.tree_util.tree_map(
+            lambda p: jnp.zeros_like(p, jnp.float32), params
+        )
+    )
+
+
+def _quant_int8(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_int8(
+    grads: Pytree, ef: EFState
+) -> tuple[Pytree, Pytree, EFState]:
+    """Returns (int8 tree, scale tree, new EF state).
+
+    The int8 tree is what crosses the network (all-reduce of int8 in fp32
+    accumulation); dequantize with the scales after reduction.
+    """
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        q, scale = _quant_int8(gf)
+        deq = q.astype(jnp.float32) * scale
+        return q, scale, gf - deq
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = treedef.flatten_up_to(ef.residual)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    qs = treedef.unflatten([o[0] for o in out])
+    scales = treedef.unflatten([o[1] for o in out])
+    res = treedef.unflatten([o[2] for o in out])
+    return qs, scales, EFState(residual=res)
+
+
+def decompress_int8(qs: Pytree, scales: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(
+        lambda q, s: q.astype(jnp.float32) * s, qs, scales
+    )

@@ -1,0 +1,83 @@
+"""Elastic scaling + straggler policy (DESIGN.md §5).
+
+On a real cluster the launcher owns process lifecycle; what the *framework*
+must provide is:
+
+  1. topology-independent checkpoints — our checkpoints store full
+     (unsharded) arrays + a manifest, so restoring onto a different mesh is
+     just re-sharding at load (``reshard_for_mesh``),
+  2. a deterministic data order keyed by (step, host) so a restarted run
+     replays exactly (`repro.data.pipeline`),
+  3. an explicit straggler/failure policy that the launcher executes
+     (``ElasticPolicy``): synchronous steps with a per-step deadline; a host
+     missing D consecutive deadlines is declared failed, the job restarts
+     from the last checkpoint on the surviving mesh with data shards
+     reassigned by rank — the standard TPU-pod recipe (no partial-allreduce
+     exotica, which XLA cannot express today).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ElasticPolicy:
+    step_deadline_s: float = 300.0
+    max_missed_deadlines: int = 2
+    min_healthy_fraction: float = 0.75  # below this, park the job
+    checkpoint_every: int = 200
+
+    def should_restart(self, missed: int) -> bool:
+        return missed >= self.max_missed_deadlines
+
+    def can_continue(self, healthy: int, total: int) -> bool:
+        return healthy >= self.min_healthy_fraction * total
+
+
+def reshard_for_mesh(tree, specs, mesh: Mesh):
+    """Place a (host-resident) checkpoint tree onto ``mesh`` per ``specs``.
+
+    Works for any mesh shape whose axis sizes divide the array dims named in
+    the spec — the elastic-restart path (e.g. 512-chip ckpt → 256-chip mesh).
+    """
+    def put(x, spec):
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map(
+        put, tree, specs, is_leaf=lambda x: not isinstance(x, dict)
+    )
+
+
+def reassign_data_shards(
+    n_shards: int, healthy_ranks: list[int]
+) -> dict[int, list[int]]:
+    """Round-robin reassignment of data shards to surviving hosts.
+
+    Deterministic: shard i goes to healthy_ranks[i % len(healthy)], so every
+    surviving host computes the same assignment without coordination.
+    """
+    if not healthy_ranks:
+        raise ValueError("no healthy hosts")
+    healthy = sorted(healthy_ranks)
+    out: dict[int, list[int]] = {r: [] for r in healthy}
+    for shard in range(n_shards):
+        out[healthy[shard % len(healthy)]].append(shard)
+    return out
+
+
+def validate_divisibility(shape: tuple[int, ...], spec, mesh: Mesh) -> bool:
+    """Check an array can be sharded by ``spec`` on ``mesh`` (elastic guard)."""
+    for dim, names in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if names is None:
+            continue
+        names = names if isinstance(names, tuple) else (names,)
+        size = int(np.prod([mesh.shape[n] for n in names]))
+        if dim % size:
+            return False
+    return True

@@ -1,0 +1,189 @@
+"""Per-architecture smoke tests (assignment deliverable f).
+
+Every assigned arch instantiates a REDUCED config of the same family and
+runs one forward/train step on CPU, asserting output shapes + no NaNs.
+Full configs are exercised only via the dry-run (ShapeDtypeStruct).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import REGISTRY, assigned_cells, get_arch
+from repro.models.gnn.common import random_graph_batch
+from repro.models.gnn.egnn import EGNNConfig, egnn_loss, init_egnn
+from repro.models.gnn.equiformer_v2 import (
+    EquiformerV2Config,
+    equiformer_v2_loss,
+    init_equiformer_v2,
+)
+from repro.models.gnn.gatedgcn import GatedGCNConfig, gatedgcn_loss, init_gatedgcn
+from repro.models.gnn.nequip import NequIPConfig, init_nequip, nequip_loss
+from repro.models.recsys import bert4rec as b4r
+from repro.models import transformer as tfm
+
+LM_ARCHS = [a for a, arch in REGISTRY.items() if arch.family == "lm"]
+GNN_ARCHS = [a for a, arch in REGISTRY.items() if arch.family == "gnn"]
+
+_GNN = {
+    GatedGCNConfig: (init_gatedgcn, gatedgcn_loss),
+    EGNNConfig: (init_egnn, egnn_loss),
+    NequIPConfig: (init_nequip, nequip_loss),
+    EquiformerV2Config: (init_equiformer_v2, equiformer_v2_loss),
+}
+
+
+class TestRegistry:
+    def test_all_ten_archs_present(self):
+        graded = [a for a, arch in REGISTRY.items() if arch.family != "ann"]
+        assert len(graded) == 10
+
+    def test_forty_cells(self):
+        assert len(assigned_cells()) == 40
+
+    def test_full_configs_match_assignment(self):
+        q = get_arch("qwen2-72b").make_full()
+        assert (q.n_layers, q.d_model, q.n_heads, q.n_kv_heads) == (80, 8192, 64, 8)
+        assert (q.d_ff, q.vocab, q.qkv_bias) == (29568, 152064, True)
+        d = get_arch("deepseek-v3-671b").make_full()
+        assert (d.n_layers, d.d_model, d.n_heads) == (61, 7168, 128)
+        assert (d.moe.n_experts, d.moe.top_k, d.moe.d_ff) == (256, 8, 2048)
+        assert d.attn == "mla" and d.mtp_depth == 1
+        m = get_arch("moonshot-v1-16b-a3b").make_full()
+        assert (m.n_layers, m.d_model, m.moe.n_experts, m.moe.top_k) == (
+            48, 2048, 64, 6)
+        e = get_arch("equiformer-v2").make_full()
+        assert (e.n_layers, e.channels, e.l_max, e.m_max, e.n_heads) == (
+            12, 128, 6, 2, 8)
+        n = get_arch("nequip").make_full()
+        assert (n.n_layers, n.channels, n.l_max, n.n_rbf) == (5, 32, 2, 8)
+        g = get_arch("gatedgcn").make_full()
+        assert (g.n_layers, g.d_hidden) == (16, 70)
+        b = get_arch("bert4rec").make_full()
+        assert (b.embed_dim, b.n_blocks, b.n_heads, b.seq_len) == (64, 2, 2, 200)
+
+    def test_param_counts_sane(self):
+        """Analytic parameter counts land near the advertised sizes."""
+        q72 = get_arch("qwen2-72b").make_full().param_count()
+        assert 6e10 < q72 < 9e10
+        ds = get_arch("deepseek-v3-671b").make_full()
+        assert 6e11 < ds.param_count() < 7.5e11
+        assert 3e10 < ds.active_param_count() < 5.5e10  # ~37B active
+        # assignment specifies 48L (vs the released model's 27L), so the
+        # assignment-faithful config is ~28B total / ~4.8B active
+        ms = get_arch("moonshot-v1-16b-a3b").make_full()
+        assert 2.0e10 < ms.param_count() < 3.5e10
+        q05 = get_arch("qwen1.5-0.5b").make_full().param_count()
+        assert 3e8 < q05 < 8e8
+
+
+class TestLMSmoke:
+    @pytest.mark.parametrize("arch_id", LM_ARCHS)
+    def test_reduced_train_step(self, arch_id, key):
+        cfg = get_arch(arch_id).make_reduced()
+        params = tfm.init_lm(key, cfg)
+        toks = jax.random.randint(key, (2, 16), 0, cfg.vocab)
+        labels = jnp.roll(toks, -1, axis=1)
+        loss, metrics = jax.jit(
+            lambda p, t, l: tfm.lm_loss(p, cfg, t, l)
+        )(params, toks, labels)
+        assert np.isfinite(float(loss))
+        logits, _ = tfm.lm_forward(params, cfg, toks)
+        assert logits.shape == (2, 16, cfg.vocab)
+        assert not bool(jnp.isnan(logits).any())
+
+    @pytest.mark.parametrize("arch_id", LM_ARCHS)
+    def test_reduced_decode_matches_forward(self, arch_id, key):
+        cfg = get_arch(arch_id).make_reduced()
+        if cfg.moe is not None:
+            cfg = dataclasses.replace(
+                cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0)
+            )
+        params = tfm.init_lm(key, cfg)
+        toks = jax.random.randint(key, (2, 12), 0, cfg.vocab)
+        logits, _ = tfm.lm_forward(params, cfg, toks)
+        _, caches = tfm.lm_prefill(params, cfg, toks)
+        caches = jax.tree_util.tree_map(
+            lambda c: jnp.pad(
+                c, [(0, 0), (0, 0), (0, 20 - c.shape[2])] + [(0, 0)] * (c.ndim - 3)
+            ),
+            caches,
+        )
+        dec, _ = tfm.lm_decode_step(params, cfg, caches, toks[:, -1], jnp.int32(11))
+        np.testing.assert_allclose(
+            np.asarray(dec), np.asarray(logits[:, -1, :]), rtol=2e-2, atol=2e-2
+        )
+
+
+class TestGNNSmoke:
+    @pytest.mark.parametrize("arch_id", GNN_ARCHS)
+    def test_reduced_train_step(self, arch_id, key):
+        cfg = get_arch(arch_id).make_reduced()
+        init_fn, loss_fn = _GNN[type(cfg)]
+        geometric = not isinstance(cfg, GatedGCNConfig)
+        d_feat = getattr(cfg, "d_in", 8)
+        g = random_graph_batch(
+            key, n_nodes=40, n_edges=120, d_feat=d_feat,
+            with_positions=geometric, n_graphs=2,
+        )
+        params = init_fn(key, cfg)
+        if isinstance(cfg, GatedGCNConfig):
+            labels = jax.random.randint(key, (40,), 0, cfg.n_classes)
+        else:
+            labels = jax.random.normal(key, (2, 1))
+        loss = jax.jit(lambda p: loss_fn(p, g, labels, cfg))(params)
+        assert np.isfinite(float(loss))
+        grads = jax.grad(lambda p: loss_fn(p, g, labels, cfg))(params)
+        gn = float(
+            jnp.sqrt(sum(jnp.sum(x.astype(jnp.float32) ** 2)
+                         for x in jax.tree_util.tree_leaves(grads)))
+        )
+        assert np.isfinite(gn) and gn > 0
+
+
+class TestRecsysSmoke:
+    def test_reduced_train_step(self, key):
+        cfg = get_arch("bert4rec").make_reduced()
+        params = b4r.init_bert4rec(key, cfg)
+        items, maskpos = b4r.sample_training_batch(key, cfg, 4)
+        loss = jax.jit(lambda p: b4r.bert4rec_loss(p, cfg, items, maskpos))(params)
+        assert np.isfinite(float(loss))
+
+    def test_serve_and_score(self, key):
+        cfg = get_arch("bert4rec").make_reduced()
+        params = b4r.init_bert4rec(key, cfg)
+        items, _ = b4r.sample_training_batch(key, cfg, 4)
+        q = b4r.bert4rec_serve(params, cfg, items)
+        assert q.shape == (4, cfg.embed_dim)
+        logits = b4r.bert4rec_score_all(params, cfg, items)
+        assert logits.shape == (4, cfg.n_items + 1)
+        assert not bool(jnp.isnan(logits).any())
+
+
+class TestStepBundles:
+    """Reduced-config bundles must lower on a 1-device mesh (every family)."""
+
+    @pytest.mark.parametrize(
+        "arch_id,shape",
+        [
+            ("qwen1.5-0.5b", "train_4k"),
+            ("gatedgcn", "molecule"),
+            ("bert4rec", "serve_p99"),
+        ],
+    )
+    def test_bundle_lowers(self, arch_id, shape):
+        from repro.distributed.context import mesh_context
+        from repro.launch.steps import build_bundle
+
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        with mesh_context(mesh):
+            b = build_bundle(arch_id, shape, mesh, reduced=True)
+            jax.jit(
+                b.fn, in_shardings=b.in_shardings,
+                out_shardings=b.out_shardings, donate_argnums=b.donate,
+            ).lower(*b.args)

@@ -1,0 +1,319 @@
+"""Integration + property tests for the graph-index substrate.
+
+Covers: beam search invariants, neighbor-selection (MRNG rule), HNSW build +
+search recall per backend, reverse-edge integrity, Vamana/NSG generality,
+segmented build/search parity.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import graph
+from repro.graph import segmented as seg
+from repro.graph.beam import beam_search
+from repro.graph.hnsw import (
+    HNSWParams,
+    build_hnsw,
+    prefix_entries,
+    sample_levels,
+    search_hnsw,
+)
+from repro.graph.knn import average_distance_ratio, exact_knn, recall_at_k
+from repro.graph.nsg import build_nsg
+from repro.graph.select import select_neighbors
+from repro.graph.vamana import build_vamana, search_flat
+
+PARAMS = HNSWParams(r_upper=8, r_base=16, ef=32, batch=16, max_layers=3)
+
+
+@pytest.fixture(scope="module")
+def truth(small_data):
+    data, queries = small_data
+    ids, d = exact_knn(queries, data, k=10)
+    return ids, d
+
+
+@pytest.fixture(scope="module")
+def fp32_index(small_data):
+    data, _ = small_data
+    be = graph.make_backend("fp32", data)
+    index, stats = build_hnsw(data, be, params=PARAMS)
+    return index, stats
+
+
+@pytest.fixture(scope="module")
+def flash_index(small_data, key):
+    data, _ = small_data
+    be = graph.make_backend(
+        "flash", data, key, d_f=32, m_f=16, l_f=4, h=8, kmeans_iters=10
+    )
+    index, stats = build_hnsw(data, be, params=PARAMS)
+    return index, stats
+
+
+class TestLevels:
+    def test_levels_distribution(self):
+        lv = sample_levels(0, 100000, r_upper=16, max_layers=6)
+        assert lv.min() == 0 and lv.max() <= 5
+        # exponential decay: each layer ~1/R_upper of the previous
+        frac1 = (lv >= 1).mean()
+        assert 0.02 < frac1 < 0.12  # 1/16 ≈ 0.0625
+
+    def test_prefix_entries(self):
+        lv = np.array([0, 2, 0, 1, 3, 0, 0, 0], np.int32)
+        ent = prefix_entries(lv, 2)
+        np.testing.assert_array_equal(ent, [-1, 1, 1, 4])
+
+
+class TestBeam:
+    def test_beam_sorted_and_visits_once(self, small_data):
+        data, _ = small_data
+        be = graph.make_backend("fp32", data)
+        # ring adjacency: node i -> i±1 … a path graph
+        n = data.shape[0]
+        adj = jnp.stack(
+            [jnp.arange(1, n + 1) % n, jnp.arange(-1, n - 1) % n], axis=1
+        ).astype(jnp.int32)
+        qctx = be.prepare_query(data[5])
+        res = beam_search(be, qctx, adj, jnp.asarray([0]), ef=8)
+        d = np.asarray(res.dists)
+        assert np.all(np.diff(d[np.isfinite(d)]) >= 0)  # ascending
+        ids = np.asarray(res.ids)
+        valid = ids[ids >= 0]
+        assert len(np.unique(valid)) == len(valid)  # no duplicates
+
+    def test_beam_finds_true_nn_on_full_graph(self, small_data):
+        """On a graph where the entry connects to everything, beam == brute."""
+        data, _ = small_data
+        n = data.shape[0]
+        be = graph.make_backend("fp32", data[:257])
+        adj = jnp.full((257, 256), -1, jnp.int32)
+        adj = adj.at[0].set(jnp.arange(1, 257))
+        q = data[300]
+        res = beam_search(be, be.prepare_query(q), adj, jnp.asarray([0]), ef=8)
+        true = np.argsort(np.asarray(jnp.sum((data[:257] - q) ** 2, -1)))[:1]
+        assert int(res.ids[0]) == int(true[0])
+
+
+class TestSelect:
+    def test_respects_r(self, small_data):
+        data, _ = small_data
+        be = graph.make_backend("fp32", data)
+        q = data[0]
+        d = be.query_dists(be.prepare_query(q), jnp.arange(64))
+        order = jnp.argsort(d)
+        sel = select_neighbors(be, order.astype(jnp.int32), d[order], r=8)
+        assert int(sel.count) <= 8
+        assert int(jnp.sum(sel.ids >= 0)) == int(sel.count)
+
+    def test_mrng_rule_holds(self, small_data):
+        """For every selected pair (u later than v): δ(u,v) ≥ δ(u,x)."""
+        data, _ = small_data
+        be = graph.make_backend("fp32", data)
+        q = data[0]
+        ids = jnp.arange(1, 129, dtype=jnp.int32)
+        d = be.query_dists(be.prepare_query(q), ids)
+        order = jnp.argsort(d)
+        sel = select_neighbors(be, ids[order], d[order], r=16)
+        sids = np.asarray(sel.ids)
+        sd = np.asarray(sel.dists)
+        chosen = sids[sids >= 0]
+        cd = sd[sids >= 0]
+        for i in range(len(chosen)):
+            for j in range(i):
+                pd = float(
+                    be.pair_dists(jnp.asarray(chosen[i]), jnp.asarray(chosen[j]))
+                )
+                assert pd >= cd[i] - 1e-5  # no selected u dominates v
+
+    def test_selected_sorted_ascending(self, small_data):
+        data, _ = small_data
+        be = graph.make_backend("fp32", data)
+        d = be.query_dists(be.prepare_query(data[0]), jnp.arange(64))
+        order = jnp.argsort(d)
+        sel = select_neighbors(be, order.astype(jnp.int32), d[order], r=8)
+        sd = np.asarray(sel.dists)
+        assert np.all(np.diff(sd[np.isfinite(sd)]) >= 0)
+
+
+class TestHNSWBuild:
+    def test_fp32_recall(self, small_data, fp32_index, truth):
+        data, queries = small_data
+        index, _ = fp32_index
+        res = search_hnsw(index, queries, k=10, ef_search=64, max_layers=3)
+        assert recall_at_k(res.ids, truth[0], 10) >= 0.9
+
+    def test_flash_recall_with_rerank(self, small_data, flash_index, truth):
+        data, queries = small_data
+        index, _ = flash_index
+        res = search_hnsw(
+            index, queries, k=10, ef_search=128, max_layers=3, rerank_vectors=data
+        )
+        assert recall_at_k(res.ids, truth[0], 10) >= 0.85
+
+    def test_flash_build_quality_matches_fp32_graph(
+        self, small_data, flash_index, fp32_index, truth
+    ):
+        """Graph built with Flash codes, searched in fp32: recall stays high —
+        the paper's core claim (compressed comparisons build a good graph)."""
+        data, queries = small_data
+        index, _ = flash_index
+        fp_be = graph.make_backend("fp32", data)
+        mixed = index._replace(backend=fp_be)
+        res = search_hnsw(mixed, queries, k=10, ef_search=64, max_layers=3)
+        assert recall_at_k(res.ids, truth[0], 10) >= 0.85
+
+    def test_adjacency_wellformed(self, fp32_index, small_data):
+        data, _ = small_data
+        index, _ = fp32_index
+        adj = np.asarray(index.adj0)
+        n = data.shape[0]
+        assert adj.shape == (n, PARAMS.r_base)
+        assert adj.min() >= -1 and adj.max() < n
+        # no self loops
+        self_loop = adj == np.arange(n)[:, None]
+        assert not self_loop.any()
+        # mean degree is healthy (connected-ish graph)
+        deg = (adj >= 0).sum(1)
+        assert deg.mean() > 4
+
+    def test_no_duplicate_neighbors(self, fp32_index):
+        index, _ = fp32_index
+        adj = np.asarray(index.adj0)
+        for row in adj[:200]:
+            v = row[row >= 0]
+            assert len(np.unique(v)) == len(v)
+
+    def test_upper_layers_sparse(self, fp32_index, small_data):
+        data, _ = small_data
+        index, _ = fp32_index
+        lv = np.asarray(index.levels)
+        up = np.asarray(index.adj_up[0])
+        # only vertices with level >= 1 may have layer-1 edges
+        has_edges = (up >= 0).any(1)
+        assert not has_edges[lv < 1].any()
+
+    def test_build_stats_positive(self, fp32_index):
+        _, stats = fp32_index
+        assert float(stats.n_dists) > 0 and float(stats.n_hops) > 0
+
+    def test_adr_close_to_one(self, small_data, flash_index, truth):
+        data, queries = small_data
+        index, _ = flash_index
+        res = search_hnsw(
+            index, queries, k=10, ef_search=128, max_layers=3, rerank_vectors=data
+        )
+        adr = average_distance_ratio(res.dists, truth[1], 10)
+        assert adr < 1.15
+
+
+class TestBackendsBuild:
+    @pytest.mark.parametrize(
+        "kind,kw,min_recall",
+        [
+            ("sq", dict(bits=8), 0.85),
+            ("pca", dict(alpha=0.9), 0.6),
+            ("pq", dict(m=8, l_pq=6, kmeans_iters=6), 0.5),
+        ],
+    )
+    def test_backend_recall(self, small_data, key, truth, kind, kw, min_recall):
+        data, queries = small_data
+        be = graph.make_backend(kind, data, key, **kw)
+        index, _ = build_hnsw(data, be, params=PARAMS)
+        res = search_hnsw(
+            index, queries, k=10, ef_search=96, max_layers=3, rerank_vectors=data
+        )
+        assert recall_at_k(res.ids, truth[0], 10) >= min_recall
+
+    def test_flash_blocked_equals_flash(self, small_data, key, truth):
+        """The access-aware layout changes memory traffic, not results."""
+        data, queries = small_data
+        be_b = graph.make_backend(
+            "flash_blocked", data, key, d_f=32, m_f=16, l_f=4, h=8,
+            kmeans_iters=10, r_for_blocked=PARAMS.r_base,
+        )
+        index_b, _ = build_hnsw(data, be_b, params=PARAMS)
+        be_f = graph.FlashBackend(be_b.coder, be_b.codes)
+        index_f, _ = build_hnsw(data, be_f, params=PARAMS)
+        np.testing.assert_array_equal(
+            np.asarray(index_b.adj0), np.asarray(index_f.adj0)
+        )
+        # and the mirror is consistent with the adjacency
+        adj = np.asarray(index_b.adj0)
+        nbrc = np.asarray(index_b.backend.nbr_codes)
+        codes = np.asarray(index_b.backend.codes)
+        for v in range(0, 200, 17):
+            for slot, u in enumerate(adj[v]):
+                if u >= 0:
+                    np.testing.assert_array_equal(nbrc[v, slot], codes[u])
+
+
+class TestGenerality:
+    def test_vamana_fp32(self, small_data, truth):
+        data, queries = small_data
+        be = graph.make_backend("fp32", data)
+        idx, _ = build_vamana(data, be, params=HNSWParams(
+            r_upper=8, r_base=24, ef=96, batch=16, alpha=1.2))
+        ids, _ = search_flat(idx, queries, k=10, ef_search=96)
+        assert recall_at_k(ids, truth[0], 10) >= 0.9
+
+    def test_vamana_flash(self, small_data, key, truth):
+        data, queries = small_data
+        be = graph.make_backend("flash", data, key, d_f=32, m_f=16, kmeans_iters=10)
+        idx, _ = build_vamana(data, be, params=HNSWParams(
+            r_upper=8, r_base=24, ef=96, batch=16, alpha=1.2))
+        ids, _ = search_flat(idx, queries, k=10, ef_search=128, rerank_vectors=data)
+        assert recall_at_k(ids, truth[0], 10) >= 0.9
+
+    def test_nsg_flash(self, small_data, key, truth):
+        data, queries = small_data
+        be = graph.make_backend("flash", data, key, d_f=32, m_f=16, kmeans_iters=10)
+        (idx, _knn) = build_nsg(
+            data, be, params=HNSWParams(r_base=24, ef=96, batch=16), knn_k=24
+        )
+        ids, _ = search_flat(idx, queries, k=10, ef_search=128, rerank_vectors=data)
+        assert recall_at_k(ids, truth[0], 10) >= 0.8
+
+
+class TestSegmented:
+    def test_build_and_merge(self, small_data, key, truth):
+        data, queries = small_data
+        S, ns = 4, 500
+        segs = data[: S * ns].reshape(S, ns, -1)
+        coder = seg.fit_shared_coder(key, data, d_f=32, m_f=16, kmeans_iters=10)
+        levels = np.stack(
+            [sample_levels(s, ns, r_upper=8, max_layers=3) for s in range(S)]
+        )
+        entries = np.stack([prefix_entries(levels[s], 16) for s in range(S)])
+        built = seg.build_segments_vmapped(
+            segs, coder, jnp.asarray(levels), jnp.asarray(entries), params=PARAMS
+        )
+        gids, gd = seg.search_segments_local(
+            built, queries, np.full(S, ns), k=10, ef_search=64, max_layers=3,
+            seg_vectors=segs,
+        )
+        assert recall_at_k(gids, truth[0], 10) >= 0.9
+
+    def test_shard_map_matches_vmap(self, small_data, key):
+        """shard_map deployment ≡ vmap reference on a 1-device mesh."""
+        data, _ = small_data
+        S, ns = 2, 500
+        segs = data[: S * ns].reshape(S, ns, -1)
+        coder = seg.fit_shared_coder(key, data, d_f=16, m_f=8, kmeans_iters=6)
+        levels = np.stack(
+            [sample_levels(s, ns, r_upper=8, max_layers=3) for s in range(S)]
+        )
+        entries = np.stack([prefix_entries(levels[s], 16) for s in range(S)])
+        ref = seg.build_segments_vmapped(
+            segs, coder, jnp.asarray(levels), jnp.asarray(entries), params=PARAMS
+        )
+        mesh = jax.make_mesh((1,), ("data",))
+        f = seg.make_segmented_build_fn(mesh, params=PARAMS, seg_axes=("data",))
+        got = f(segs, coder, jnp.asarray(levels), jnp.asarray(entries))
+        np.testing.assert_array_equal(
+            np.asarray(got.adj0), np.asarray(ref.index.adj0)
+        )

@@ -1,0 +1,178 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracles.
+
+Every kernel is swept across shapes and dtypes; integer-output kernels must
+match exactly, float kernels within tolerance.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ops, ref
+
+
+def _rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+class TestFlashScan:
+    @pytest.mark.parametrize("n", [1, 7, 128, 1000, 1024, 2050])
+    @pytest.mark.parametrize("m", [4, 16])
+    def test_shapes_exact(self, n, m):
+        rng = _rng(n * 31 + m)
+        codes = jnp.asarray(rng.integers(0, 16, (n, m)), jnp.int32)
+        adt = jnp.asarray(rng.integers(0, 255, (m, 16)), jnp.int32)
+        out_ref = ref.flash_scan_ref(codes, adt)
+        out = ops.flash_scan(codes, adt, impl="interpret")
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(out_ref))
+
+    @pytest.mark.parametrize("k", [16, 64, 256])
+    def test_k_sweep(self, k):
+        """K up to 256 — covers PQ-style (L=8) tables, not just Flash (L=4)."""
+        rng = _rng(k)
+        codes = jnp.asarray(rng.integers(0, k, (300, 8)), jnp.int32)
+        adt = jnp.asarray(rng.integers(0, 255, (8, k)), jnp.int32)
+        np.testing.assert_array_equal(
+            np.asarray(ops.flash_scan(codes, adt, impl="interpret")),
+            np.asarray(ref.flash_scan_ref(codes, adt)),
+        )
+
+    @pytest.mark.parametrize("dtype", [jnp.int32, jnp.float32])
+    def test_dtype_sweep(self, dtype):
+        rng = _rng(3)
+        codes = jnp.asarray(rng.integers(0, 16, (257, 16)), jnp.int32)
+        adt = jnp.asarray(rng.uniform(0, 250, (16, 16))).astype(dtype)
+        out = ops.flash_scan(codes, adt, impl="interpret")
+        out_ref = ref.flash_scan_ref(codes, adt)
+        assert out.dtype == out_ref.dtype
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(out_ref), rtol=1e-6, atol=1e-4
+        )
+
+    @given(st.integers(min_value=1, max_value=300), st.integers(0, 2**31 - 1))
+    @settings(max_examples=15, deadline=None)
+    def test_property_random(self, n, seed):
+        rng = _rng(seed)
+        codes = jnp.asarray(rng.integers(0, 16, (n, 8)), jnp.int32)
+        adt = jnp.asarray(rng.integers(0, 255, (8, 16)), jnp.int32)
+        np.testing.assert_array_equal(
+            np.asarray(ops.flash_scan(codes, adt, impl="interpret")),
+            np.asarray(ref.flash_scan_ref(codes, adt)),
+        )
+
+    def test_block_sizes(self):
+        rng = _rng(9)
+        codes = jnp.asarray(rng.integers(0, 16, (700, 16)), jnp.int32)
+        adt = jnp.asarray(rng.integers(0, 255, (16, 16)), jnp.int32)
+        expect = np.asarray(ref.flash_scan_ref(codes, adt))
+        for bn in (128, 256, 1024):
+            got = ops.flash_scan(codes, adt, impl="interpret", block_n=bn)
+            np.testing.assert_array_equal(np.asarray(got), expect)
+
+
+class TestFlashScanBlocked:
+    @pytest.mark.parametrize("g,b", [(1, 16), (5, 16), (16, 128), (33, 32)])
+    def test_blocked_layout(self, g, b):
+        rng = _rng(g * b)
+        blocks = jnp.asarray(rng.integers(0, 16, (g, 16, b)), jnp.int32)
+        adt = jnp.asarray(rng.integers(0, 255, (16, 16)), jnp.int32)
+        np.testing.assert_array_equal(
+            np.asarray(ops.flash_scan_blocked(blocks, adt, impl="interpret")),
+            np.asarray(ref.flash_scan_blocked_ref(blocks, adt)),
+        )
+
+    def test_blocked_equals_flat(self):
+        """Blocked layout (§3.3.4) computes the same distances as flat."""
+        from repro.core import to_neighbor_blocks
+
+        rng = _rng(4)
+        codes = jnp.asarray(rng.integers(0, 16, (64, 16)), jnp.int32)
+        adt = jnp.asarray(rng.integers(0, 255, (16, 16)), jnp.int32)
+        flat = ref.flash_scan_ref(codes, adt)
+        blocks = to_neighbor_blocks(codes, 16)  # (4, 16, 16)
+        blocked = ops.flash_scan_blocked(blocks, adt, impl="interpret")
+        np.testing.assert_array_equal(
+            np.asarray(blocked).reshape(-1), np.asarray(flat)
+        )
+
+
+class TestL2Batch:
+    @pytest.mark.parametrize(
+        "n,c,d", [(1, 1, 4), (17, 33, 48), (256, 256, 128), (300, 70, 130)]
+    )
+    def test_shapes(self, n, c, d):
+        rng = _rng(n + c + d)
+        x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+        y = jnp.asarray(rng.normal(size=(c, d)), jnp.float32)
+        got = ops.l2_batch(x, y, impl="interpret")
+        want = ref.l2_batch_ref(x, y)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-3
+        )
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        rng = _rng(11)
+        x = jnp.asarray(rng.normal(size=(64, 32))).astype(dtype)
+        y = jnp.asarray(rng.normal(size=(32, 32))).astype(dtype)
+        got = ops.l2_batch(x, y, impl="interpret")
+        want = ref.l2_batch_ref(x, y)
+        tol = 1e-4 if dtype == jnp.float32 else 5e-2
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=tol, atol=tol * 10
+        )
+
+    def test_self_distance_zero(self):
+        rng = _rng(5)
+        x = jnp.asarray(rng.normal(size=(32, 16)), jnp.float32)
+        d = ops.l2_batch(x, x, impl="interpret")
+        assert float(jnp.max(jnp.abs(jnp.diagonal(d)))) < 1e-3
+
+
+class TestSqL2:
+    @pytest.mark.parametrize("n,d", [(1, 8), (100, 64), (513, 100), (2048, 256)])
+    def test_shapes(self, n, d):
+        rng = _rng(n + d)
+        q = jnp.asarray(rng.integers(0, 256, (d,)), jnp.int32)
+        db = jnp.asarray(rng.integers(0, 256, (n, d)), jnp.int32)
+        s2 = jnp.asarray(rng.uniform(1e-4, 0.1, (d,)), jnp.float32)
+        got = ops.sq_l2(q, db, s2, impl="interpret")
+        want = ref.sq_l2_ref(q, db, s2)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-3
+        )
+
+    def test_matches_core_sq_dist(self, small_data):
+        """Kernel path == core.sq_dist == decoded-space distance."""
+        from repro import core
+
+        data, _ = small_data
+        sq = core.fit_sq(data, bits=8)
+        qc = core.sq_encode(sq, data[0:1])[0]
+        dbc = core.sq_encode(sq, data[:100])
+        got = ops.sq_l2(qc, dbc, sq.s2, impl="interpret")
+        want = core.sq_dist(sq, qc[None, :], dbc)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-3
+        )
+
+
+class TestDispatch:
+    def test_auto_resolves_on_cpu(self):
+        assert ops.resolve_impl("auto") == "ref"
+
+    def test_override(self):
+        ops.set_default_impl("interpret")
+        try:
+            assert ops.resolve_impl("auto") == "interpret"
+        finally:
+            ops.set_default_impl(None)
+
+    def test_bad_impl_raises(self):
+        with pytest.raises(ValueError):
+            ops.resolve_impl("cuda")

@@ -1,0 +1,206 @@
+"""Model-layer tests: attention/decode parity, MoE dispatch equivalence,
+GNN equivariance properties, SO(3) machinery exactness."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.models import layers as L
+from repro.models import transformer as tfm
+from repro.models.gnn import so3
+from repro.models.gnn.common import random_graph_batch
+from repro.models.gnn.egnn import EGNNConfig, egnn_forward, init_egnn
+from repro.models.gnn.equiformer_v2 import (
+    EquiformerV2Config,
+    equiformer_v2_forward,
+    init_equiformer_v2,
+)
+from repro.models.gnn.nequip import NequIPConfig, init_nequip, nequip_forward
+from repro.models.moe import MoEConfig, init_moe, moe_forward
+
+
+def _random_rotation(seed=0):
+    rng = np.random.default_rng(seed)
+    q, _ = np.linalg.qr(rng.normal(size=(3, 3)))
+    if np.linalg.det(q) < 0:
+        q[:, 0] *= -1
+    return jnp.asarray(q, jnp.float32)
+
+
+class TestAttention:
+    def test_blockwise_equals_full(self, key):
+        """block_q-chunked causal attention == unchunked (prefill path)."""
+        p = L.init_gqa(key, d_model=32, n_heads=4, n_kv=2, head_dim=8,
+                       qkv_bias=False)
+        x = jax.random.normal(key, (2, 64, 32))
+        pos = jnp.broadcast_to(jnp.arange(64), (2, 64))
+        full = L.gqa_forward(p, x, pos, n_heads=4, n_kv=2, head_dim=8,
+                             rope_theta=1e4, block_q=None)
+        blocked = L.gqa_forward(p, x, pos, n_heads=4, n_kv=2, head_dim=8,
+                                rope_theta=1e4, block_q=16)
+        np.testing.assert_allclose(
+            np.asarray(full), np.asarray(blocked), rtol=1e-4, atol=1e-4
+        )
+
+    def test_rope_preserves_norm(self, key):
+        x = jax.random.normal(key, (2, 8, 4, 16))
+        pos = jnp.broadcast_to(jnp.arange(8), (2, 8))
+        y = L.apply_rope(x, pos, 1e4)
+        np.testing.assert_allclose(
+            np.asarray(jnp.linalg.norm(y, axis=-1)),
+            np.asarray(jnp.linalg.norm(x, axis=-1)), rtol=1e-4,
+        )
+
+    def test_causal_mask(self, key):
+        """Changing future tokens cannot change past logits."""
+        cfg = tfm.TransformerConfig(
+            name="t", n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+            head_dim=16, d_ff=64, vocab=64, dtype=jnp.float32, remat=False,
+        )
+        params = tfm.init_lm(jax.random.PRNGKey(0), cfg)
+        t1 = jax.random.randint(key, (1, 10), 0, 64)
+        t2 = t1.at[0, -1].set((t1[0, -1] + 1) % 64)
+        l1, _ = tfm.lm_forward(params, cfg, t1)
+        l2, _ = tfm.lm_forward(params, cfg, t2)
+        np.testing.assert_allclose(
+            np.asarray(l1[:, :-1]), np.asarray(l2[:, :-1]), atol=1e-5
+        )
+
+
+class TestMoE:
+    @pytest.fixture(scope="class")
+    def setup(self, key):
+        cfg = MoEConfig(n_experts=8, top_k=2, d_ff=32, capacity_factor=8.0)
+        p = init_moe(key, d_model=16, cfg=cfg)
+        x = jax.random.normal(key, (2, 16, 16))
+        return cfg, p, x
+
+    def test_scatter_equals_einsum(self, setup):
+        cfg, p, x = setup
+        o1, _ = moe_forward(p, x, dataclasses.replace(cfg, impl="scatter"))
+        o2, _ = moe_forward(p, x, dataclasses.replace(cfg, impl="einsum"))
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_ep_falls_back_without_mesh(self, setup):
+        cfg, p, x = setup
+        o1, _ = moe_forward(p, x, dataclasses.replace(cfg, impl="scatter"))
+        o3, _ = moe_forward(p, x, dataclasses.replace(cfg, impl="ep"))
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o3),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_aux_losses_finite(self, setup):
+        cfg, p, x = setup
+        _, aux = moe_forward(p, x, cfg)
+        assert np.isfinite(float(aux["load_balance"]))
+        assert float(aux["load_balance"]) >= 0.99  # E·Σf·P ≥ 1 at balance
+
+    def test_capacity_drops_reduce_output(self, setup, key):
+        """Tiny capacity ⇒ tokens dropped ⇒ output differs from dropless."""
+        cfg, p, x = setup
+        tight = dataclasses.replace(cfg, capacity_factor=0.25)
+        o_drop, _ = moe_forward(p, x, tight)
+        o_full, _ = moe_forward(p, x, cfg)
+        assert float(jnp.max(jnp.abs(o_drop - o_full))) > 1e-6
+
+
+class TestSO3:
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=10, deadline=None)
+    def test_rotation_closure_property(self, seed):
+        """Y(Rx)·c == Y(x)·(D(R)c) for all rotations (l_max=4)."""
+        rot = _random_rotation(seed)
+        rng = np.random.default_rng(seed)
+        c = jnp.asarray(rng.normal(size=(25,)), jnp.float32)
+        x = jnp.asarray(rng.normal(size=(8, 3)), jnp.float32)
+        lhs = so3.real_sph_harm(4, x @ rot) @ c
+        rhs = so3.real_sph_harm(4, x) @ so3.rotate_coeffs(4, c, rot)
+        np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                                   rtol=1e-3, atol=1e-4)
+
+    def test_wigner_orthogonal(self):
+        rot = _random_rotation(3)
+        for l, d in enumerate(so3.wigner_d_from_rot(6, rot)):
+            np.testing.assert_allclose(
+                np.asarray(d @ d.T), np.eye(2 * l + 1), atol=1e-4
+            )
+
+    def test_edge_rotation_maps_to_z(self, key):
+        e = jax.random.normal(key, (32, 3))
+        r = so3.edge_rotation(e)
+        n = e / jnp.linalg.norm(e, axis=1, keepdims=True)
+        z = jnp.einsum("eij,ej->ei", r, n)
+        np.testing.assert_allclose(
+            np.asarray(z), np.tile([0, 0, 1.0], (32, 1)), atol=1e-5
+        )
+
+    def test_gaunt_selection_rules(self):
+        """G vanishes unless |l1−l2| ≤ l3 ≤ l1+l2 and l1+l2+l3 even."""
+        assert np.abs(so3.gaunt_tensor(1, 1, 1)).max() < 1e-9  # odd sum
+        assert np.abs(so3.gaunt_tensor(0, 1, 2)).max() < 1e-9  # triangle
+        assert np.abs(so3.gaunt_tensor(1, 1, 2)).max() > 1e-3
+
+
+class TestEquivariance:
+    @pytest.fixture(scope="class")
+    def graph(self, key):
+        return random_graph_batch(
+            key, n_nodes=24, n_edges=64, d_feat=6,
+            with_positions=True, n_graphs=2,
+        )
+
+    def test_egnn(self, graph, key):
+        cfg = EGNNConfig(n_layers=2, d_hidden=16, d_in=6)
+        p = init_egnn(key, cfg)
+        rot = _random_rotation(1)
+        o1, x1 = egnn_forward(p, graph, cfg)
+        o2, x2 = egnn_forward(p, graph._replace(positions=graph.positions @ rot.T), cfg)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-3)
+        np.testing.assert_allclose(np.asarray(x1 @ rot.T), np.asarray(x2), atol=1e-2)
+
+    def test_nequip(self, graph, key):
+        cfg = NequIPConfig(n_layers=2, channels=8, l_max=2, n_rbf=4)
+        p = init_nequip(key, cfg)
+        rot = _random_rotation(2)
+        e1, h1 = nequip_forward(p, graph, cfg)
+        e2, h2 = nequip_forward(
+            p, graph._replace(positions=graph.positions @ rot.T), cfg
+        )
+        np.testing.assert_allclose(np.asarray(e1), np.asarray(e2), atol=1e-4)
+        np.testing.assert_allclose(
+            np.asarray(so3.rotate_coeffs(2, h1, rot[None])), np.asarray(h2),
+            atol=1e-4,
+        )
+
+    def test_equiformer_v2(self, graph, key):
+        cfg = EquiformerV2Config(
+            n_layers=2, channels=16, l_max=4, m_max=2, n_heads=4, n_rbf=4
+        )
+        p = init_equiformer_v2(key, cfg)
+        rot = _random_rotation(4)
+        e1, h1 = equiformer_v2_forward(p, graph, cfg)
+        e2, h2 = equiformer_v2_forward(
+            p, graph._replace(positions=graph.positions @ rot.T), cfg
+        )
+        np.testing.assert_allclose(np.asarray(e1), np.asarray(e2), atol=1e-4)
+        np.testing.assert_allclose(
+            np.asarray(so3.rotate_coeffs(4, h1, rot[None])), np.asarray(h2),
+            atol=1e-3,
+        )
+
+    def test_translation_invariance(self, graph, key):
+        cfg = NequIPConfig(n_layers=2, channels=8, l_max=2, n_rbf=4)
+        p = init_nequip(key, cfg)
+        shift = jnp.asarray([1.5, -2.0, 0.7])
+        e1, _ = nequip_forward(p, graph, cfg)
+        e2, _ = nequip_forward(
+            p, graph._replace(positions=graph.positions + shift), cfg
+        )
+        np.testing.assert_allclose(np.asarray(e1), np.asarray(e2), atol=1e-4)

@@ -1,0 +1,186 @@
+"""Substrate tests: optimizer, checkpointing (fault tolerance), compression,
+elastic restart, data pipeline determinism, neighbor sampler."""
+
+from __future__ import annotations
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.data.pipeline import microbatch_reshape, prefetch, sharded_batches
+from repro.data.sampler import sample_subgraph
+from repro.data.synthetic import lm_batch, random_csr_graph
+from repro.train import checkpoint as ck
+from repro.train import compression as comp
+from repro.train.elastic import reassign_data_shards, validate_divisibility
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update, schedule_lr
+from repro.utils import fingerprint
+
+
+class TestOptimizer:
+    def test_converges_on_quadratic(self):
+        cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                          total_steps=200, schedule="constant")
+        params = {"w": jnp.asarray([5.0, -3.0])}
+        state = adamw_init(params)
+        for _ in range(150):
+            grads = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+            params, state, _ = adamw_update(cfg, grads, state, params)
+        assert float(jnp.max(jnp.abs(params["w"]))) < 0.1
+
+    def test_clip_norm(self):
+        cfg = AdamWConfig(clip_norm=1.0, warmup_steps=0)
+        params = {"w": jnp.zeros((4,))}
+        state = adamw_init(params)
+        _, _, m = adamw_update(cfg, {"w": jnp.full((4,), 100.0)}, state, params)
+        assert float(m["grad_norm"]) == pytest.approx(200.0)
+
+    def test_schedule_shapes(self):
+        cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                          min_lr_frac=0.1)
+        lrs = [float(schedule_lr(cfg, jnp.asarray(s))) for s in (0, 5, 10, 100)]
+        assert lrs[0] == 0.0
+        assert lrs[1] == pytest.approx(0.5)
+        assert lrs[2] == pytest.approx(1.0)
+        assert lrs[3] == pytest.approx(0.1, rel=1e-2)
+
+    def test_bf16_state_dtype(self):
+        params = {"w": jnp.zeros((4,), jnp.bfloat16)}
+        state = adamw_init(params, state_dtype="bf16")
+        assert state.mu["w"].dtype == jnp.bfloat16
+
+
+class TestCheckpoint:
+    def test_roundtrip_and_verify(self):
+        tree = {"a": np.arange(12, dtype=np.float32).reshape(3, 4),
+                "b": {"c": np.asarray([1, 2, 3], np.int32)}}
+        with tempfile.TemporaryDirectory() as td:
+            ck.save_checkpoint(td, 7, tree)
+            restored, step = ck.restore_checkpoint(td, tree)
+            assert step == 7
+            assert fingerprint(restored) == fingerprint(tree)
+
+    def test_keep_k_pruning(self):
+        tree = {"a": np.zeros(3)}
+        with tempfile.TemporaryDirectory() as td:
+            for s in range(6):
+                ck.save_checkpoint(td, s, tree, keep=3)
+            assert ck.list_checkpoints(td) == [3, 4, 5]
+
+    def test_corruption_detected(self):
+        tree = {"a": np.arange(100, dtype=np.float32)}
+        with tempfile.TemporaryDirectory() as td:
+            path = ck.save_checkpoint(td, 1, tree)
+            # corrupt the array file
+            npz = os.path.join(path, "arrays.npz")
+            data = dict(np.load(npz))
+            data["a0"][3] += 1.0
+            np.savez(npz, **data)
+            with pytest.raises(IOError):
+                ck.restore_checkpoint(td, tree)
+
+    def test_shape_mismatch_detected(self):
+        tree = {"a": np.zeros((3, 4))}
+        with tempfile.TemporaryDirectory() as td:
+            ck.save_checkpoint(td, 1, tree)
+            with pytest.raises(ValueError):
+                ck.restore_checkpoint(td, {"a": np.zeros((4, 3))})
+
+    def test_atomicity_no_tmp_left(self):
+        tree = {"a": np.zeros(3)}
+        with tempfile.TemporaryDirectory() as td:
+            ck.save_checkpoint(td, 1, tree)
+            assert not any(n.endswith(".tmp") for n in os.listdir(td))
+
+
+class TestCompression:
+    def test_bf16_roundtrip_small_error(self, key):
+        g = {"w": jax.random.normal(key, (128,))}
+        out = comp.decompress_f32(comp.compress_bf16(g))
+        err = float(jnp.max(jnp.abs(out["w"] - g["w"])))
+        assert err < 0.02
+
+    def test_int8_error_feedback_unbiased(self, key):
+        """With EF, the accumulated quantization error stays bounded and the
+        *sum* of dequantized gradients tracks the sum of true gradients."""
+        g_true = jax.random.normal(key, (256,)) * 0.01
+        ef = comp.ef_init({"w": g_true})
+        total_q = jnp.zeros_like(g_true)
+        for i in range(20):
+            qs, scales, ef = comp.compress_int8({"w": g_true}, ef)
+            total_q += comp.decompress_int8(qs, scales)["w"]
+        drift = float(jnp.max(jnp.abs(total_q - 20 * g_true)))
+        scale = float(jnp.max(jnp.abs(g_true)))
+        assert drift < scale  # bounded by one quantization step overall
+
+
+class TestElastic:
+    def test_reassign_deterministic(self):
+        a = reassign_data_shards(16, [0, 1, 3])
+        b = reassign_data_shards(16, [3, 1, 0])
+        assert a == b
+        assert sorted(sum(a.values(), [])) == list(range(16))
+
+    def test_divisibility_guard(self):
+        mesh = jax.make_mesh((1,), ("model",))
+        from jax.sharding import PartitionSpec as P
+
+        assert validate_divisibility((16, 4), P("model", None), mesh)
+
+    def test_restart_replays_same_data(self):
+        mk = lambda step, shard: lm_batch(0, step, shard, batch=2, seq=8, vocab=50)
+        it1 = sharded_batches(mk, shard_id=0)
+        batches = [next(it1) for _ in range(5)]
+        it2 = sharded_batches(mk, shard_id=0, start_step=3)
+        resumed = next(it2)
+        np.testing.assert_array_equal(
+            np.asarray(batches[3]["tokens"]), np.asarray(resumed["tokens"])
+        )
+
+
+class TestDataPipeline:
+    def test_prefetch_preserves_order(self):
+        it = prefetch(iter(range(10)), size=3)
+        assert list(it) == list(range(10))
+
+    def test_microbatch_reshape(self):
+        b = {"x": jnp.zeros((8, 4))}
+        out = microbatch_reshape(b, 4)
+        assert out["x"].shape == (4, 2, 4)
+
+    @given(st.integers(0, 1000))
+    @settings(max_examples=10, deadline=None)
+    def test_batches_deterministic(self, step):
+        a = lm_batch(0, step, 1, batch=2, seq=8, vocab=100)
+        b = lm_batch(0, step, 1, batch=2, seq=8, vocab=100)
+        np.testing.assert_array_equal(np.asarray(a["tokens"]), np.asarray(b["tokens"]))
+
+
+class TestSampler:
+    def test_fanout_bounds(self):
+        indptr, indices = random_csr_graph(0, n_nodes=300, avg_degree=6)
+        rng = np.random.default_rng(0)
+        sub = sample_subgraph(indptr, indices, np.arange(8),
+                              fanouts=[4, 3], rng=rng)
+        b = 8
+        assert sub["node_ids"].shape == (b + b * 4 + b * 12,)
+        assert sub["senders"].shape == (b * 4 + b * 12,)
+        # all real edges point to already-sampled parents
+        ne = int(sub["edge_mask"].sum())
+        assert (sub["receivers"][:ne] < len(sub["node_ids"])).all()
+
+    def test_edges_reference_valid_nodes(self):
+        indptr, indices = random_csr_graph(1, n_nodes=100, avg_degree=4)
+        rng = np.random.default_rng(1)
+        sub = sample_subgraph(indptr, indices, np.arange(4),
+                              fanouts=[3, 2], rng=rng)
+        ne = int(sub["edge_mask"].sum())
+        valid = sub["node_ids"] >= 0
+        assert valid[sub["senders"][:ne]].all()
+        assert valid[sub["receivers"][:ne]].all()
