@@ -11,6 +11,7 @@ Flash+blocked-layout) and reports:
 
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import jax
@@ -42,6 +43,61 @@ def index_bytes(index, backend_kind: str, n: int, d: int) -> int:
         if hasattr(be, "nbr_codes"):
             payload += be.nbr_codes.shape[0] * be.nbr_codes.shape[1] * be.coder.m_f // 2
     return adj + payload
+
+
+def width_sweep(widths=(1, 4, 8), *, n: int = 3000, d: int = 48) -> dict:
+    """Multi-expansion CA sweep: build cost vs beam width W (DESIGN.md §3.2).
+
+    Reports, per W: warm wall-clock build time, distance evaluations, and the
+    headline ratio — microseconds of build time per distance evaluation. The
+    widened beam runs W× fewer while_loop iterations over W·R-dense distance
+    blocks, so us_per_dist should fall as W grows (the paper's SIMD-
+    utilization claim restated); n_dists itself grows slightly because
+    trailing picks of an iteration may lie beyond the termination bound.
+    """
+    data, queries = bench_data(n, d)
+    tids, _ = exact_knn(queries, data, k=10)
+    key = jax.random.PRNGKey(0)
+    # flash_blocked so the W·R blocks actually go through the kernel-routed
+    # mirror path (flash_scan_batch) — the mechanism the sweep claims to
+    # measure; plain "flash" would time the gather fallback.
+    be = graph.make_backend(
+        "flash_blocked", data, key,
+        r_for_blocked=DEFAULT_PARAMS.r_base, **FLASH_KW,
+    )
+    out = {}
+    for w in widths:
+        params = dataclasses.replace(DEFAULT_PARAMS, width=w)
+        build = lambda: build_hnsw(data, be, params=params)  # noqa: B023
+        index, stats = build()
+        jax.block_until_ready(index.adj0)
+        # single-core container: medians over several warm repeats, or the
+        # per-width comparison drowns in scheduler/GC noise (the stats build
+        # above already served as the warmup)
+        warm = timeit(lambda: build()[0].adj0, repeats=5, warmup=0)  # noqa: B023
+        n_dists = float(stats.n_dists)
+        res = search_hnsw(
+            index, queries, k=10, ef_search=96, rerank_vectors=data
+        )
+        rec = float(recall_at_k(res.ids, tids, 10))
+        out[str(w)] = dict(
+            width=w,
+            build_s=warm,
+            n_dists=n_dists,
+            us_per_dist=warm / n_dists * 1e6,
+            recall_at_10=rec,
+        )
+        emit(
+            f"indexing/width_{w}", warm * 1e6,
+            f"n_dists={n_dists:.0f} us_per_dist={warm / n_dists * 1e6:.4f} "
+            f"recall={rec:.3f}",
+        )
+    return dict(
+        bench="indexing_width_sweep",
+        n=n, d=d,
+        params=dataclasses.asdict(DEFAULT_PARAMS) | {"width": "swept"},
+        widths=out,
+    )
 
 
 def run() -> dict:

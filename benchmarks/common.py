@@ -30,8 +30,11 @@ def bench_data(n: int = 4000, d: int = 64, *, seed: int = 0):
     return jnp.asarray(x[:n]), jnp.asarray(x[n:])
 
 
+# width=4: benchmarks default to the multi-expansion (widened) CA path —
+# the engine's W·R-dense distance blocks (DESIGN.md §3.2). Tests pin width=1
+# where they assert parity with the classic beam.
 DEFAULT_PARAMS = HNSWParams(
-    r_upper=8, r_base=16, ef=48, batch=32, max_layers=3
+    r_upper=8, r_base=16, ef=48, batch=32, max_layers=3, width=4
 )
 
 FLASH_KW = dict(d_f=32, m_f=16, l_f=4, h=8, kmeans_iters=10)

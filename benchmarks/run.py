@@ -1,6 +1,12 @@
 """Benchmark harness — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit).
+Default mode prints ``name,us_per_call,derived`` CSV rows
+(benchmarks.common.emit) for every bench module.
+
+``--json PATH`` instead runs the machine-readable perf-trajectory suite and
+writes it to PATH (CI uploads ``BENCH_indexing.json``):
+
+    python benchmarks/run.py --json BENCH_indexing.json
 
   bench_indexing     Figures 6, 7 + Table 4   (build time / size / coding time)
   bench_search       Figures 8, 9             (QPS-Recall, QPS-ADR)
@@ -15,11 +21,39 @@ Roofline terms per (arch × shape) come from the dry-run, not this harness:
 ``python -m repro.launch.dryrun`` (see EXPERIMENTS.md §Roofline).
 """
 
+import argparse
+import json
 import sys
 import traceback
 
 
-def main() -> None:
+def run_json(path: str, only: str) -> None:
+    """Machine-readable perf snapshot (build-time trajectory across PRs)."""
+    from benchmarks import bench_indexing
+
+    if only != "indexing_widths":
+        raise SystemExit(f"unknown --only {only!r} (have: indexing_widths)")
+    print("name,us_per_call,derived")
+    payload = bench_indexing.width_sweep()
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"wrote {path}", file=sys.stderr)
+    widths = payload["widths"]
+    base = widths.get("1")
+    if base:
+        worse = [
+            w for w, row in widths.items()
+            if w != "1" and row["us_per_dist"] >= base["us_per_dist"]
+        ]
+        if worse:
+            print(
+                f"WARNING: width(s) {worse} did not beat width=1 on "
+                "us_per_dist",
+                file=sys.stderr,
+            )
+
+
+def run_csv() -> None:
     from benchmarks import (
         bench_generality,
         bench_indexing,
@@ -45,6 +79,24 @@ def main() -> None:
     if failures:
         print(f"FAILED benches: {[m for m, _ in failures]}", file=sys.stderr)
         raise SystemExit(1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--json", metavar="PATH", default=None,
+        help="write the machine-readable width-sweep snapshot to PATH "
+        "instead of running the CSV bench suite",
+    )
+    ap.add_argument(
+        "--only", default="indexing_widths",
+        help="which JSON suite to run (with --json); default indexing_widths",
+    )
+    args = ap.parse_args()
+    if args.json:
+        run_json(args.json, args.only)
+    else:
+        run_csv()
 
 
 if __name__ == '__main__':

@@ -1,5 +1,6 @@
 """Graph-index substrate: HNSW/Vamana/NSG builds over pluggable distance
-backends, beam search (CA), heuristic selection (NS), exact-kNN oracle."""
+backends, the shared batched CA+NS build engine, multi-expansion beam search
+(CA), heuristic selection (NS), exact-kNN oracle."""
 
 from repro.graph.backends import (  # noqa: F401
     FlashBackend,
@@ -10,13 +11,25 @@ from repro.graph.backends import (  # noqa: F401
     SQBackend,
     make_backend,
 )
-from repro.graph.beam import BeamResult, beam_search, greedy_descent  # noqa: F401
-from repro.graph.hnsw import (  # noqa: F401
+from repro.graph.beam import (  # noqa: F401
+    BeamResult,
+    DescentResult,
+    beam_search,
+    greedy_descent,
+)
+from repro.graph.engine import (  # noqa: F401
+    BuildEngine,
+    BuildParams,
     BuildStats,
+    CostAccount,
+    prefix_entries,
+    sample_levels,
+)
+from repro.graph.hnsw import (  # noqa: F401
     HNSWIndex,
     HNSWParams,
     build_hnsw,
-    sample_levels,
+    build_hnsw_jit,
     search_hnsw,
 )
 from repro.graph.knn import average_distance_ratio, exact_knn, recall_at_k  # noqa: F401

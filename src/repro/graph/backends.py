@@ -15,10 +15,14 @@ L2, or a monotone affine image of it; never mixed across backends):
 
     prepare_query(q_raw)        -> qctx   per-inserted-vector state
     query_dists(qctx, ids)      -> f32    distances query -> stored ids
-    neighbor_dists(qctx, node, ids) -> f32  same, but the caller names the
-                                  graph vertex whose neighbor list ``ids`` is;
-                                  lets the Flash blocked layout (§3.3.4) read
-                                  codes contiguously instead of gathering.
+    neighbor_dists_batch(qctx, nodes, ids) -> f32  the CA hot path: nodes
+                                  (W,) graph vertices whose adjacency rows
+                                  ``ids`` (W, R) are being scored (−1 =
+                                  masked row). Naming the vertices lets the
+                                  Flash blocked layout (§3.3.4) read W
+                                  contiguous code rows through the blocked
+                                  Pallas kernel (kernels.ops.flash_scan_batch)
+                                  instead of W·R random gathers.
     pair_dists(ids_a, ids_b)    -> f32    distances between stored ids
     with_updated_edges(ids, nbr_ids) -> backend   commit hook (blocked layout)
 
@@ -31,7 +35,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import core
-from repro.core import flash as flash_mod
+from repro.kernels import ops
 
 
 def _l2(a: jax.Array, b: jax.Array) -> jax.Array:
@@ -42,7 +46,9 @@ def _l2(a: jax.Array, b: jax.Array) -> jax.Array:
 class _Base:
     """Shared default implementations."""
 
-    def neighbor_dists(self, qctx, node, ids):  # noqa: ARG002 - node unused by default
+    def neighbor_dists_batch(self, qctx, nodes, ids):  # noqa: ARG002
+        # Default: one batched gather-and-score; every backend's query_dists
+        # broadcasts over leading axes, so (W, R) ids come back as (W, R).
         return self.query_dists(qctx, ids)
 
     def with_updated_edges(self, ids, nbr_ids):  # noqa: ARG002
@@ -210,13 +216,19 @@ class FlashBlockedBackend(FlashBackend):
         super().__init__(coder, codes)
         self.nbr_codes = nbr_codes  # (n, R, M) int32, code 0 where id == -1
 
-    def neighbor_dists(self, qctx, node, ids):
-        # Static shape dispatch: the mirror tracks one layer's degree (the
-        # base layer, where ~all CA traffic happens); other widths fall back.
+    def neighbor_dists_batch(self, qctx, nodes, ids):
+        """Multi-expansion CA block: W contiguous (R, M) mirror rows, scored
+        through the blocked Pallas kernel (§3.3.4 restated for W rows —
+        one HBM→VMEM DMA per expanded vertex, zero per-neighbor gathers).
+
+        Static shape dispatch: the mirror tracks one layer's degree (the
+        base layer, where ~all CA traffic happens); other widths fall back
+        to the gather path.
+        """
         if ids.shape[-1] != self.nbr_codes.shape[1]:
             return self.query_dists(qctx, ids)
-        rows = self.nbr_codes[node]  # (R, M) — ONE contiguous row read
-        return flash_mod.adc_lookup(qctx.adt_q, rows).astype(jnp.float32)
+        rows = self.nbr_codes[jnp.maximum(nodes, 0)]  # (W, R, M)
+        return ops.flash_scan_batch(rows, qctx.adt_q).astype(jnp.float32)
 
     def with_updated_edges(self, ids, nbr_ids):
         """ids (...,) vertices whose lists changed (out-of-bounds = dropped);

@@ -1,0 +1,408 @@
+"""Shared batched CA+NS build engine (DESIGN.md §3).
+
+Every graph index in this repo — HNSW, Vamana, NSG, and the segment-parallel
+deployment — is the same two-stage loop the paper decomposes construction
+into: **candidate acquisition** (CA: beam-search the frozen prefix graph
+through a compact-code distance backend) and **neighbor selection** (NS: the
+MRNG-style heuristic over the candidates), followed by a forward commit of the
+selected lists and a reverse pass that adds y→x edges and prunes overflow.
+This module is that loop, extracted once behind a public API so the algorithm
+modules compose it instead of cross-importing each other's private helpers:
+
+    engine = BuildEngine(BuildParams(r_base=32, ef=64, width=4))
+    res    = engine.acquire(backend, qctx, adjacency, entries)   # CA
+    sel    = engine.select(backend, res.ids, res.dists, r=r)     # NS
+    ...    = engine.commit_forward(...); engine.reverse_pass(...)
+
+or, for the full batch-synchronous layered build (HNSW and the flat builds):
+
+    state  = engine.bootstrap(data, *state, levels)
+    *state, acct = engine.insert_batch(data, *state, levels, ids, entry, mask,
+                                       acct=acct)
+
+Pluggable axes:
+  * distance backend — anything satisfying the ``graph.backends`` protocol,
+  * selection policy — ``BuildParams.select_mode`` ("heuristic" = MRNG rule
+    with slack α; "closest" = plain top-R, the NSW-style ablation),
+  * beam width — ``BuildParams.width`` (W): the multi-expansion beam feeds
+    the distance backend W·R-wide candidate blocks per iteration (DESIGN.md
+    §3.2), which is what keeps the Flash Pallas kernel dense,
+  * cost accounting — a :class:`CostAccount` threaded through every CA call,
+    so build benchmarks report distance evaluations, not just wall-clock.
+
+Everything here is pure and shape-static: jit/vmap/shard_map-safe, with the
+backend riding along in the carry (the Flash blocked neighbor-code mirror
+stays in sync through ``with_updated_edges``).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.beam import INF, BeamResult, beam_search
+from repro.graph.select import Selection, prune_list, select_neighbors
+
+
+@dataclass(frozen=True)
+class BuildParams:
+    """Static build hyper-parameters (hashable => jit static arg).
+
+    r_upper:  R on layers ≥ 1 (paper's R).
+    r_base:   R on layer 0 (2·R by default, per paper footnote 3).
+    ef:       C — construction beam width (efConstruction).
+    batch:    P — concurrent inserts per synchronous step.
+    max_layers: total layers L (levels 0..L−1).
+    alpha:    RNG-slack for selection (1.0 = HNSW; >1 = Vamana/τ-MG style).
+    prune_mode: overflow pruning ("heuristic" per paper, "farthest" ablation).
+    max_iters: beam expansion cap (defaults inside beam, scaled by width).
+    width:    W — beam expansions per iteration (1 = classic HNSW beam;
+              >1 = multi-expansion, denser distance blocks per iteration).
+    select_mode: NS policy ("heuristic" = MRNG rule, "closest" = top-R).
+    """
+
+    r_upper: int = 16
+    r_base: int = 32
+    ef: int = 64
+    batch: int = 32
+    max_layers: int = 3
+    alpha: float = 1.0
+    prune_mode: str = "heuristic"
+    max_iters: int | None = None
+    width: int = 1
+    select_mode: str = "heuristic"
+
+
+class CostAccount(NamedTuple):
+    """Build cost counters, threaded through every CA stage.
+
+    n_dists: distance evaluations (the paper's dominant cost term).
+    n_hops:  expanded vertices (≈ adjacency-row fetches).
+    """
+
+    n_dists: jax.Array
+    n_hops: jax.Array
+
+    @classmethod
+    def zero(cls) -> "CostAccount":
+        return cls(n_dists=jnp.float32(0), n_hops=jnp.float32(0))
+
+    def add_beam(self, res: BeamResult) -> "CostAccount":
+        """Fold a (possibly vmapped) beam result into the account."""
+        return CostAccount(
+            n_dists=self.n_dists + jnp.sum(res.n_dists),
+            n_hops=self.n_hops + jnp.sum(res.n_hops),
+        )
+
+
+class BuildStats(NamedTuple):
+    """Public build-cost summary (the CostAccount, frozen at return)."""
+
+    n_dists: jax.Array
+    n_hops: jax.Array
+
+
+def sample_levels(
+    seed: int, n: int, *, r_upper: int, max_layers: int
+) -> np.ndarray:
+    """Exponentially decaying level assignment, mL = 1/ln(R_upper)."""
+    rng = np.random.default_rng(seed)
+    m_l = 1.0 / np.log(max(r_upper, 2))
+    lv = np.floor(-np.log(rng.uniform(1e-12, 1.0, size=n)) * m_l).astype(np.int32)
+    return np.minimum(lv, max_layers - 1)
+
+
+def prefix_entries(levels: np.ndarray, batch: int) -> np.ndarray:
+    """Host-side: entry point (argmax level over the inserted prefix) per batch.
+
+    Batch b inserts ids [b·P, (b+1)·P); its searches start from the highest-
+    level vertex among ids < b·P — exactly hnswlib's enter-point maintenance,
+    precomputed because insertion order is known up front.
+    """
+    n = len(levels)
+    nb = -(-n // batch)
+    ent = np.full((nb,), -1, np.int64)
+    best, best_lv = -1, -1
+    idx = 0
+    for b in range(nb):
+        start = b * batch
+        while idx < start:
+            if levels[idx] > best_lv:
+                best_lv, best = int(levels[idx]), idx
+            idx += 1
+        ent[b] = best
+    return ent.astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Edge commit (module-level pure helpers; BuildEngine methods wrap them)
+# ---------------------------------------------------------------------------
+
+
+def commit_forward(adj, adj_d, backend, new_ids, sel_ids, sel_d, mask):
+    """Write the selected neighbor lists of a batch of new vertices.
+
+    Masked-out rows scatter to an out-of-bounds index with mode="drop" —
+    masked ids may be clamped duplicates of real ids, and duplicate scatter
+    order is undefined.
+    """
+    n = adj.shape[0]
+    ids_s = jnp.where(mask, new_ids, n)  # n = out of bounds -> dropped
+    adj = adj.at[ids_s].set(sel_ids, mode="drop")
+    adj_d = adj_d.at[ids_s].set(sel_d, mode="drop")
+    backend = backend.with_updated_edges(ids_s, sel_ids)
+    return adj, adj_d, backend
+
+
+def reverse_pass(
+    adj, adj_d, backend, new_ids, sel_ids, sel_d, mask, *, params: BuildParams
+):
+    """Add reverse edges y → x for each x in the batch, pruning overflow.
+
+    Sequential over the P inserts (they may touch the same destination y);
+    vectorized over each insert's ≤R destinations (distinct within one list).
+    """
+    p, r = sel_ids.shape
+
+    def body(i, carry):
+        adj, adj_d, backend = carry
+        x = new_ids[i]
+        nbrs, nd = sel_ids[i], sel_d[i]  # (r,)
+        ok = (nbrs >= 0) & mask[i]
+        safe = jnp.where(ok, nbrs, 0)
+        ex_ids = adj[safe]  # (r, r)
+        ex_d = adj_d[safe]
+        counts = jnp.sum(ex_ids >= 0, axis=1)  # (r,)
+        # Room left → plain append at the first free slot (hnswlib line 7).
+        slot = jnp.arange(r)[None, :] == counts[:, None]
+        app_ids = jnp.where(slot, x, ex_ids)
+        app_d = jnp.where(slot, nd[:, None], ex_d)
+        # Full → heuristic prune over existing ∪ {x} (r+1 candidates).
+        cand_ids = jnp.concatenate([ex_ids, jnp.full((r, 1), x, jnp.int32)], 1)
+        cand_d = jnp.concatenate([ex_d, nd[:, None]], 1)
+        pruned = jax.vmap(
+            lambda ci, cd: prune_list(
+                backend, ci, cd, r=r, alpha=params.alpha, mode=params.prune_mode
+            )
+        )(cand_ids, cand_d)
+        full = counts >= r
+        rows = jnp.where(full[:, None], pruned.ids, app_ids)
+        rows_d = jnp.where(full[:, None], pruned.dists, app_d)
+        n = adj.shape[0]
+        dst = jnp.where(ok, safe, n)  # masked dsts dropped (see commit_forward)
+        adj = adj.at[dst].set(rows, mode="drop")
+        adj_d = adj_d.at[dst].set(rows_d, mode="drop")
+        backend = backend.with_updated_edges(dst, rows)
+        return adj, adj_d, backend
+
+    return jax.lax.fori_loop(0, p, body, (adj, adj_d, backend))
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class BuildEngine:
+    """Composable CA → NS → commit pipeline over one static param set.
+
+    Hashable (frozen dataclass of a frozen dataclass), so an engine is a
+    valid jit static argument; all methods are pure functions of traced
+    array state.
+    """
+
+    params: BuildParams
+
+    # ---- CA: candidate acquisition ------------------------------------
+
+    def acquire(self, backend, qctx, adjacency, entries) -> BeamResult:
+        """Batched beam search: qctx pytree with leading (P,), entries (P,)."""
+        p = self.params
+        return jax.vmap(
+            lambda qc, e: beam_search(
+                backend, qc, adjacency, e[None],
+                ef=p.ef, width=p.width, max_iters=p.max_iters,
+            )
+        )(qctx, entries)
+
+    # ---- NS: neighbor selection (pluggable policy) --------------------
+
+    def select_one(self, backend, cand_ids, cand_d, *, r: int) -> Selection:
+        """Select ≤ r neighbors from one sorted candidate list."""
+        mode = self.params.select_mode
+        if mode == "heuristic":
+            return select_neighbors(
+                backend, cand_ids, cand_d, r=r, alpha=self.params.alpha
+            )
+        if mode == "closest":
+            # NSW-style ablation: keep the r nearest, no occlusion rule.
+            c = cand_ids.shape[0]
+            kk = min(r, c)
+            ids = jnp.where(jnp.isfinite(cand_d[:kk]), cand_ids[:kk], -1)
+            dists = jnp.where(ids >= 0, cand_d[:kk], INF)
+            if kk < r:
+                ids = jnp.concatenate([ids, jnp.full((r - kk,), -1, ids.dtype)])
+                dists = jnp.concatenate([dists, jnp.full((r - kk,), INF)])
+            return Selection(
+                ids=ids, dists=dists, count=jnp.sum((ids >= 0).astype(jnp.int32))
+            )
+        raise ValueError(f"unknown select_mode {mode!r}")
+
+    def select(self, backend, cand_ids, cand_d, *, r: int) -> Selection:
+        """Batched selection over (P, C) candidate lists."""
+        return jax.vmap(
+            lambda ci, cd: self.select_one(backend, ci, cd, r=r)
+        )(cand_ids, cand_d)
+
+    # ---- commit --------------------------------------------------------
+
+    def commit_forward(self, adj, adj_d, backend, new_ids, sel_ids, sel_d, mask):
+        return commit_forward(adj, adj_d, backend, new_ids, sel_ids, sel_d, mask)
+
+    def reverse_pass(self, adj, adj_d, backend, new_ids, sel_ids, sel_d, mask):
+        return reverse_pass(
+            adj, adj_d, backend, new_ids, sel_ids, sel_d, mask, params=self.params
+        )
+
+    # ---- composed: one batch-synchronous layered insert ----------------
+
+    def insert_batch(
+        self, data, adj0, adj0_d, adj_up, adj_up_d, backend, levels,
+        new_ids, entry, mask, *, acct: CostAccount,
+    ):
+        """Insert one batch of P vectors against the frozen current graph."""
+        p = new_ids.shape[0]
+        params = self.params
+        l_top = params.max_layers - 1
+        qctx = jax.vmap(backend.prepare_query)(data[new_ids])  # pytree (P, …)
+        lv = levels[new_ids]
+
+        eps = jnp.full((p,), entry, jnp.int32)  # current per-query entry point
+
+        # ---- upper layers: descend + (maybe) insert ----------------------
+        for l in range(l_top, 0, -1):
+            adj_l, adj_ld = adj_up[l - 1], adj_up_d[l - 1]
+            res = self.acquire(backend, qctx, adj_l, eps)
+            acct = acct.add_beam(res)
+            do = (lv >= l) & mask
+            sel = self.select(backend, res.ids, res.dists, r=params.r_upper)
+            sel_ids = jnp.where(do[:, None], sel.ids, -1)
+            sel_d = jnp.where(do[:, None], sel.dists, INF)
+            adj_l, adj_ld, backend = self.commit_forward(
+                adj_l, adj_ld, backend, new_ids, sel_ids, sel_d, do
+            )
+            adj_l, adj_ld, backend = self.reverse_pass(
+                adj_l, adj_ld, backend, new_ids, sel_ids, sel_d, do
+            )
+            adj_up = adj_up.at[l - 1].set(adj_l)
+            adj_up_d = adj_up_d.at[l - 1].set(adj_ld)
+            # next-layer entry: the closest vertex found at this layer (if any).
+            eps = jnp.where(res.ids[:, 0] >= 0, res.ids[:, 0], eps)
+
+        # ---- base layer --------------------------------------------------
+        res = self.acquire(backend, qctx, adj0, eps)
+        acct = acct.add_beam(res)
+        sel = self.select(backend, res.ids, res.dists, r=params.r_base)
+        sel_ids = jnp.where(mask[:, None], sel.ids, -1)
+        sel_d = jnp.where(mask[:, None], sel.dists, INF)
+        adj0, adj0_d, backend = self.commit_forward(
+            adj0, adj0_d, backend, new_ids, sel_ids, sel_d, mask
+        )
+        adj0, adj0_d, backend = self.reverse_pass(
+            adj0, adj0_d, backend, new_ids, sel_ids, sel_d, mask
+        )
+        return adj0, adj0_d, adj_up, adj_up_d, backend, acct
+
+    # ---- composed: exact sequential seed batch --------------------------
+
+    def bootstrap(self, data, adj0, adj0_d, adj_up, adj_up_d, backend, levels):
+        """Exact sequential insertion of the first batch (connected seed)."""
+        params = self.params
+        p = min(params.batch, data.shape[0])
+        cand_pool = jnp.arange(p, dtype=jnp.int32)
+
+        def body(i, carry):
+            adj0, adj0_d, adj_up, adj_up_d, backend = carry
+            qctx = backend.prepare_query(data[i])
+            d_all = backend.query_dists(qctx, cand_pool)  # (p,)
+            for l in range(params.max_layers - 1, -1, -1):
+                r_l = params.r_base if l == 0 else params.r_upper
+                elig = (cand_pool < i) & (levels[:p] >= l) & (levels[i] >= l)
+                d = jnp.where(elig, d_all, INF)
+                order = jnp.argsort(d)
+                ids_s = jnp.where(jnp.isfinite(d[order]), cand_pool[order], -1)
+                sel = self.select_one(backend, ids_s, d[order], r=r_l)
+                new_ids = jnp.full((1,), i, jnp.int32)
+                m1 = jnp.array([levels[i] >= l])
+                if l == 0:
+                    adj0, adj0_d, backend = self.commit_forward(
+                        adj0, adj0_d, backend, new_ids,
+                        sel.ids[None], sel.dists[None], m1,
+                    )
+                    adj0, adj0_d, backend = self.reverse_pass(
+                        adj0, adj0_d, backend, new_ids,
+                        sel.ids[None], sel.dists[None], m1,
+                    )
+                else:
+                    a, ad = adj_up[l - 1], adj_up_d[l - 1]
+                    a, ad, backend = self.commit_forward(
+                        a, ad, backend, new_ids, sel.ids[None], sel.dists[None], m1
+                    )
+                    a, ad, backend = self.reverse_pass(
+                        a, ad, backend, new_ids, sel.ids[None], sel.dists[None], m1
+                    )
+                    adj_up = adj_up.at[l - 1].set(a)
+                    adj_up_d = adj_up_d.at[l - 1].set(ad)
+            return adj0, adj0_d, adj_up, adj_up_d, backend
+
+        return jax.lax.fori_loop(
+            0, p, body, (adj0, adj0_d, adj_up, adj_up_d, backend)
+        )
+
+    # ---- composed: the whole layered build (HNSW and flat graphs) -------
+
+    def build_layered(self, data, backend, levels, entries):
+        """Batch-synchronous build loop over all of ``data`` (DESIGN.md §2).
+
+        Returns (adj0, adj0_d, adj_up, adj_up_d, backend, CostAccount);
+        callers wrap the arrays into their index type. Not jitted here —
+        algorithm modules jit their wrappers with the engine static.
+        """
+        params = self.params
+        n = data.shape[0]
+        p = params.batch
+        # A 1-layer build allocates a 0-length upper stack, so search-side
+        # layer derivation (adj_up.shape[0] + 1) reports the true depth.
+        l_up = params.max_layers - 1
+        adj0 = jnp.full((n, params.r_base), -1, jnp.int32)
+        adj0_d = jnp.full((n, params.r_base), INF)
+        adj_up = jnp.full((l_up, n, params.r_upper), -1, jnp.int32)
+        adj_up_d = jnp.full((l_up, n, params.r_upper), INF)
+
+        adj0, adj0_d, adj_up, adj_up_d, backend = self.bootstrap(
+            data, adj0, adj0_d, adj_up, adj_up_d, backend, levels
+        )
+
+        nb = -(-n // p)
+
+        def body(b, carry):
+            adj0, adj0_d, adj_up, adj_up_d, backend, acct = carry
+            start = b * p
+            ids = start + jnp.arange(p, dtype=jnp.int32)
+            mask = ids < n
+            ids = jnp.minimum(ids, n - 1)
+            return self.insert_batch(
+                data, adj0, adj0_d, adj_up, adj_up_d, backend, levels,
+                ids, entries[b], mask, acct=acct,
+            )
+
+        adj0, adj0_d, adj_up, adj_up_d, backend, acct = jax.lax.fori_loop(
+            1, nb, body,
+            (adj0, adj0_d, adj_up, adj_up_d, backend, CostAccount.zero()),
+        )
+        return adj0, adj0_d, adj_up, adj_up_d, backend, acct

@@ -13,19 +13,16 @@ synchronously against the frozen prefix graph (vmapped CA/NS), then forward +
 reverse edges are committed. For P ≪ n this matches a legal thread
 interleaving, and recall parity is asserted in tests/benchmarks.
 
-The first batch is bootstrapped exactly (sequential inserts with brute-force
-candidates inside the batch) so the graph is connected from the start.
-
-Everything is one jitted program: a ``lax.fori_loop`` over batches whose body
-vmaps beam search + selection and scatters edge updates; the distance backend
-(fp32 / pq / sq / pca / flash) rides along in the carry so the Flash blocked
-neighbor-code mirror (§3.3.4) stays in sync.
+All of the batched CA+NS machinery lives in :mod:`repro.graph.engine`
+(DESIGN.md §3); this module owns only the HNSW-specific parts — the layered
+index type, level sampling glue, and the layered search. Vamana/NSG and the
+segment-parallel layer build on the same engine, not on this module's
+internals.
 """
 
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
 from typing import NamedTuple
 
 import jax
@@ -33,31 +30,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.graph.beam import INF, beam_search, greedy_descent
-from repro.graph.select import prune_list, select_neighbors
+from repro.graph.engine import (  # noqa: F401 — re-exported public API
+    BuildEngine,
+    BuildParams,
+    BuildStats,
+    CostAccount,
+    prefix_entries,
+    sample_levels,
+)
 
-
-@dataclass(frozen=True)
-class HNSWParams:
-    """Static build hyper-parameters (hashable => jit static arg).
-
-    r_upper:  R on layers ≥ 1 (paper's R).
-    r_base:   R on layer 0 (2·R by default, per paper footnote 3).
-    ef:       C — construction beam width (efConstruction).
-    batch:    P — concurrent inserts per synchronous step.
-    max_layers: total layers L (levels 0..L−1).
-    alpha:    RNG-slack for selection (1.0 = HNSW; >1 = Vamana/τ-MG style).
-    prune_mode: overflow pruning ("heuristic" per paper, "farthest" ablation).
-    max_iters: beam expansion cap (defaults to 4·ef+8 inside beam).
-    """
-
-    r_upper: int = 16
-    r_base: int = 32
-    ef: int = 64
-    batch: int = 32
-    max_layers: int = 3
-    alpha: float = 1.0
-    prune_mode: str = "heuristic"
-    max_iters: int | None = None
+# Canonical name for the paper's Algorithm-1 hyper-parameters; kept as the
+# HNSW-flavoured alias everywhere downstream (benchmarks, examples, tests).
+HNSWParams = BuildParams
 
 
 class HNSWIndex(NamedTuple):
@@ -72,263 +56,26 @@ class HNSWIndex(NamedTuple):
     backend: object  # distance backend (registered pytree)
 
 
-class BuildStats(NamedTuple):
-    n_dists: jax.Array  # () int64-ish f32 — distance evaluations in CA
-    n_hops: jax.Array  # () — beam expansions (≈ random row fetches)
-
-
-def sample_levels(
-    seed: int, n: int, *, r_upper: int, max_layers: int
-) -> np.ndarray:
-    """Exponentially decaying level assignment, mL = 1/ln(R_upper)."""
-    rng = np.random.default_rng(seed)
-    m_l = 1.0 / np.log(max(r_upper, 2))
-    lv = np.floor(-np.log(rng.uniform(1e-12, 1.0, size=n)) * m_l).astype(np.int32)
-    return np.minimum(lv, max_layers - 1)
-
-
-def prefix_entries(levels: np.ndarray, batch: int) -> np.ndarray:
-    """Host-side: entry point (argmax level over the inserted prefix) per batch.
-
-    Batch b inserts ids [b·P, (b+1)·P); its searches start from the highest-
-    level vertex among ids < b·P — exactly hnswlib's enter-point maintenance,
-    precomputed because insertion order is known up front.
-    """
-    n = len(levels)
-    nb = -(-n // batch)
-    ent = np.full((nb,), -1, np.int64)
-    best, best_lv = -1, -1
-    idx = 0
-    for b in range(nb):
-        start = b * batch
-        while idx < start:
-            if levels[idx] > best_lv:
-                best_lv, best = int(levels[idx]), idx
-            idx += 1
-        ent[b] = best
-    return ent.astype(np.int32)
-
-
-# ---------------------------------------------------------------------------
-# Edge commit helpers
-# ---------------------------------------------------------------------------
-
-
-def _commit_forward(adj, adj_d, backend, new_ids, sel_ids, sel_d, mask):
-    """Write the selected neighbor lists of a batch of new vertices.
-
-    Masked-out rows scatter to an out-of-bounds index with mode="drop" —
-    masked ids may be clamped duplicates of real ids, and duplicate scatter
-    order is undefined.
-    """
-    n = adj.shape[0]
-    ids_s = jnp.where(mask, new_ids, n)  # n = out of bounds -> dropped
-    adj = adj.at[ids_s].set(sel_ids, mode="drop")
-    adj_d = adj_d.at[ids_s].set(sel_d, mode="drop")
-    backend = backend.with_updated_edges(ids_s, sel_ids)
-    return adj, adj_d, backend
-
-
-def _reverse_pass(adj, adj_d, backend, new_ids, sel_ids, sel_d, mask, *, params):
-    """Add reverse edges y → x for each x in the batch, pruning overflow.
-
-    Sequential over the P inserts (they may touch the same destination y);
-    vectorized over each insert's ≤R destinations (distinct within one list).
-    """
-    p, r = sel_ids.shape
-
-    def body(i, carry):
-        adj, adj_d, backend = carry
-        x = new_ids[i]
-        nbrs, nd = sel_ids[i], sel_d[i]  # (r,)
-        ok = (nbrs >= 0) & mask[i]
-        safe = jnp.where(ok, nbrs, 0)
-        ex_ids = adj[safe]  # (r, r)
-        ex_d = adj_d[safe]
-        counts = jnp.sum(ex_ids >= 0, axis=1)  # (r,)
-        # Room left → plain append at the first free slot (hnswlib line 7).
-        slot = jnp.arange(r)[None, :] == counts[:, None]
-        app_ids = jnp.where(slot, x, ex_ids)
-        app_d = jnp.where(slot, nd[:, None], ex_d)
-        # Full → heuristic prune over existing ∪ {x} (r+1 candidates).
-        cand_ids = jnp.concatenate([ex_ids, jnp.full((r, 1), x, jnp.int32)], 1)
-        cand_d = jnp.concatenate([ex_d, nd[:, None]], 1)
-        pruned = jax.vmap(
-            lambda ci, cd: prune_list(
-                backend, ci, cd, r=r, alpha=params.alpha, mode=params.prune_mode
-            )
-        )(cand_ids, cand_d)
-        full = counts >= r
-        rows = jnp.where(full[:, None], pruned.ids, app_ids)
-        rows_d = jnp.where(full[:, None], pruned.dists, app_d)
-        n = adj.shape[0]
-        dst = jnp.where(ok, safe, n)  # masked dsts dropped (see _commit_forward)
-        adj = adj.at[dst].set(rows, mode="drop")
-        adj_d = adj_d.at[dst].set(rows_d, mode="drop")
-        backend = backend.with_updated_edges(dst, rows)
-        return adj, adj_d, backend
-
-    return jax.lax.fori_loop(0, p, body, (adj, adj_d, backend))
-
-
-# ---------------------------------------------------------------------------
-# Build
-# ---------------------------------------------------------------------------
-
-
-def _insert_batch(
-    data, adj0, adj0_d, adj_up, adj_up_d, backend, levels, new_ids, entry, mask,
-    *, params: HNSWParams, stats,
-):
-    """Insert one batch of P vectors against the frozen current graph."""
-    p = new_ids.shape[0]
-    l_top = params.max_layers - 1
-    qctx = jax.vmap(backend.prepare_query)(data[new_ids])  # pytree (P, …)
-    lv = levels[new_ids]
-
-    eps = jnp.full((p,), entry, jnp.int32)  # current per-query entry point
-    n_d = stats[0]
-    n_h = stats[1]
-
-    # ---- upper layers: descend + (maybe) insert --------------------------
-    for l in range(l_top, 0, -1):
-        adj_l, adj_ld = adj_up[l - 1], adj_up_d[l - 1]
-        res = jax.vmap(
-            lambda qc, e: beam_search(
-                backend, qc, adj_l, e[None],
-                ef=params.ef, max_iters=params.max_iters,
-            )
-        )(qctx, eps)
-        n_d = n_d + jnp.sum(res.n_dists)
-        n_h = n_h + jnp.sum(res.n_hops)
-        do = (lv >= l) & mask
-        sel = jax.vmap(
-            lambda ids, d: select_neighbors(
-                backend, ids, d, r=params.r_upper, alpha=params.alpha
-            )
-        )(res.ids, res.dists)
-        sel_ids = jnp.where(do[:, None], sel.ids, -1)
-        sel_d = jnp.where(do[:, None], sel.dists, INF)
-        adj_l, adj_ld, backend = _commit_forward(
-            adj_l, adj_ld, backend, new_ids, sel_ids, sel_d, do
-        )
-        adj_l, adj_ld, backend = _reverse_pass(
-            adj_l, adj_ld, backend, new_ids, sel_ids, sel_d, do, params=params
-        )
-        adj_up = adj_up.at[l - 1].set(adj_l)
-        adj_up_d = adj_up_d.at[l - 1].set(adj_ld)
-        # next-layer entry: the closest vertex found at this layer (if any).
-        best = jnp.where(res.ids[:, 0] >= 0, res.ids[:, 0], eps)
-        eps = best
-
-    # ---- base layer -------------------------------------------------------
-    res = jax.vmap(
-        lambda qc, e: beam_search(
-            backend, qc, adj0, e[None], ef=params.ef, max_iters=params.max_iters,
-        )
-    )(qctx, eps)
-    n_d = n_d + jnp.sum(res.n_dists)
-    n_h = n_h + jnp.sum(res.n_hops)
-    sel = jax.vmap(
-        lambda ids, d: select_neighbors(
-            backend, ids, d, r=params.r_base, alpha=params.alpha
-        )
-    )(res.ids, res.dists)
-    sel_ids = jnp.where(mask[:, None], sel.ids, -1)
-    sel_d = jnp.where(mask[:, None], sel.dists, INF)
-    adj0, adj0_d, backend = _commit_forward(
-        adj0, adj0_d, backend, new_ids, sel_ids, sel_d, mask
-    )
-    adj0, adj0_d, backend = _reverse_pass(
-        adj0, adj0_d, backend, new_ids, sel_ids, sel_d, mask, params=params
-    )
-    return adj0, adj0_d, adj_up, adj_up_d, backend, (n_d, n_h)
-
-
-def _bootstrap(data, adj0, adj0_d, adj_up, adj_up_d, backend, levels, *, params):
-    """Exact sequential insertion of the first batch (connected seed graph)."""
-    p = min(params.batch, data.shape[0])
-    cand_pool = jnp.arange(p, dtype=jnp.int32)
-
-    def body(i, carry):
-        adj0, adj0_d, adj_up, adj_up_d, backend = carry
-        qctx = backend.prepare_query(data[i])
-        d_all = backend.query_dists(qctx, cand_pool)  # (p,)
-        for l in range(params.max_layers - 1, -1, -1):
-            r_l = params.r_base if l == 0 else params.r_upper
-            elig = (cand_pool < i) & (levels[:p] >= l) & (levels[i] >= l)
-            d = jnp.where(elig, d_all, INF)
-            order = jnp.argsort(d)
-            ids_s = jnp.where(jnp.isfinite(d[order]), cand_pool[order], -1)
-            sel = select_neighbors(
-                backend, ids_s, d[order], r=r_l, alpha=params.alpha
-            )
-            new_ids = jnp.full((1,), i, jnp.int32)
-            m1 = jnp.array([levels[i] >= l])
-            if l == 0:
-                adj0, adj0_d, backend = _commit_forward(
-                    adj0, adj0_d, backend, new_ids, sel.ids[None], sel.dists[None], m1
-                )
-                adj0, adj0_d, backend = _reverse_pass(
-                    adj0, adj0_d, backend, new_ids, sel.ids[None], sel.dists[None],
-                    m1, params=params,
-                )
-            else:
-                a, ad = adj_up[l - 1], adj_up_d[l - 1]
-                a, ad, backend = _commit_forward(
-                    a, ad, backend, new_ids, sel.ids[None], sel.dists[None], m1
-                )
-                a, ad, backend = _reverse_pass(
-                    a, ad, backend, new_ids, sel.ids[None], sel.dists[None],
-                    m1, params=params,
-                )
-                adj_up = adj_up.at[l - 1].set(a)
-                adj_up_d = adj_up_d.at[l - 1].set(ad)
-        return adj0, adj0_d, adj_up, adj_up_d, backend
-
-    return jax.lax.fori_loop(
-        0, p, body, (adj0, adj0_d, adj_up, adj_up_d, backend)
-    )
-
-
 @functools.partial(jax.jit, static_argnames=("params",))
-def _build_jit(data, backend, levels, entries, *, params: HNSWParams):
-    n = data.shape[0]
-    p = params.batch
-    l_up = max(params.max_layers - 1, 1)
-    adj0 = jnp.full((n, params.r_base), -1, jnp.int32)
-    adj0_d = jnp.full((n, params.r_base), INF)
-    adj_up = jnp.full((l_up, n, params.r_upper), -1, jnp.int32)
-    adj_up_d = jnp.full((l_up, n, params.r_upper), INF)
+def build_hnsw_jit(data, backend, levels, entries, *, params: HNSWParams):
+    """Jitted device build (public: the segment-parallel layer traces this).
 
-    adj0, adj0_d, adj_up, adj_up_d, backend = _bootstrap(
-        data, adj0, adj0_d, adj_up, adj_up_d, backend, levels, params=params
-    )
-
-    nb = -(-n // p)
-
-    def body(b, carry):
-        adj0, adj0_d, adj_up, adj_up_d, backend, stats = carry
-        start = b * p
-        ids = start + jnp.arange(p, dtype=jnp.int32)
-        mask = ids < n
-        ids = jnp.minimum(ids, n - 1)
-        adj0, adj0_d, adj_up, adj_up_d, backend, stats = _insert_batch(
-            data, adj0, adj0_d, adj_up, adj_up_d, backend, levels,
-            ids, entries[b], mask, params=params, stats=stats,
-        )
-        return adj0, adj0_d, adj_up, adj_up_d, backend, stats
-
-    stats0 = (jnp.float32(0), jnp.float32(0))
-    adj0, adj0_d, adj_up, adj_up_d, backend, stats = jax.lax.fori_loop(
-        1, nb, body, (adj0, adj0_d, adj_up, adj_up_d, backend, stats0)
+    ``levels``/``entries`` are precomputed on the host (see
+    :func:`sample_levels` / :func:`prefix_entries`); everything else is one
+    engine-driven ``fori_loop`` program.
+    """
+    engine = BuildEngine(params)
+    adj0, adj0_d, adj_up, adj_up_d, backend, acct = engine.build_layered(
+        data, backend, levels, entries
     )
     entry = jnp.argmax(levels).astype(jnp.int32)
     index = HNSWIndex(
         adj0=adj0, adj0_d=adj0_d, adj_up=adj_up, adj_up_d=adj_up_d,
         levels=levels, entry=entry, backend=backend,
     )
-    return index, BuildStats(n_dists=stats[0].astype(jnp.float32), n_hops=stats[1])
+    return index, BuildStats(
+        n_dists=acct.n_dists.astype(jnp.float32), n_hops=acct.n_hops
+    )
 
 
 def build_hnsw(
@@ -353,7 +100,7 @@ def build_hnsw(
             seed, n, r_upper=params.r_upper, max_layers=params.max_layers
         )
     entries = prefix_entries(levels, params.batch)
-    return _build_jit(
+    return build_hnsw_jit(
         data, backend, jnp.asarray(levels), jnp.asarray(entries), params=params
     )
 
@@ -366,28 +113,44 @@ def build_hnsw(
 class SearchResult(NamedTuple):
     ids: jax.Array  # (Q, k)
     dists: jax.Array  # (Q, k) — backend scale (or exact if reranked)
-    n_dists: jax.Array  # () cost counter
+    n_dists: jax.Array  # () cost counter (descent + base-layer beam)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "ef_search", "max_layers"))
+@functools.partial(
+    jax.jit, static_argnames=("k", "ef_search", "max_layers", "width")
+)
 def search_hnsw(
     index: HNSWIndex,
     queries: jax.Array,
     *,
     k: int,
     ef_search: int = 64,
-    max_layers: int = 3,
+    max_layers: int | None = None,
+    width: int = 1,
     rerank_vectors: jax.Array | None = None,
 ) -> SearchResult:
-    """Layered beam search; optional exact rerank on original vectors."""
+    """Layered beam search; optional exact rerank on original vectors.
+
+    ``max_layers`` defaults to the layer count the index was actually built
+    with (``adj_up.shape[0] + 1``) — passing it is only needed to search a
+    shallower prefix of the hierarchy. ``n_dists`` counts every distance
+    evaluation, including the upper-layer greedy descent.
+    """
     backend = index.backend
+    n_layers = index.adj_up.shape[0] + 1 if max_layers is None else max_layers
 
     def one(q):
         qctx = backend.prepare_query(q)
         ep = index.entry
-        for l in range(max_layers - 1, 0, -1):
-            ep, _ = greedy_descent(backend, qctx, index.adj_up[l - 1], ep)
-        res = beam_search(backend, qctx, index.adj0, ep[None], ef=ef_search)
+        nd = jnp.int32(0)
+        for l in range(n_layers - 1, 0, -1):
+            desc = greedy_descent(backend, qctx, index.adj_up[l - 1], ep)
+            ep = desc.node
+            nd = nd + desc.n_dists
+        res = beam_search(
+            backend, qctx, index.adj0, ep[None], ef=ef_search, width=width
+        )
+        nd = nd + res.n_dists
         if rerank_vectors is not None:
             safe = jnp.maximum(res.ids, 0)
             dv = rerank_vectors[safe] - q[None, :]
@@ -395,8 +158,8 @@ def search_hnsw(
                 res.ids >= 0, jnp.sum(dv * dv, axis=-1), INF
             )
             _, idx = jax.lax.top_k(-exact, k)
-            return res.ids[idx], exact[idx], res.n_dists
-        return res.ids[:k], res.dists[:k], res.n_dists
+            return res.ids[idx], exact[idx], nd
+        return res.ids[:k], res.dists[:k], nd
 
     ids, dists, nd = jax.vmap(one)(queries)
     return SearchResult(ids=ids, dists=dists, n_dists=jnp.sum(nd))

@@ -3,7 +3,9 @@
 NSG (Fu et al., VLDB'19) differs from HNSW in how candidates are acquired:
 it searches a prebuilt approximate k-NN graph from the medoid and applies the
 MRNG edge rule. The CA + NS decomposition is identical — which is exactly the
-paper's generality argument: Flash plugs into the distance layer unchanged.
+paper's generality argument: Flash plugs into the distance layer unchanged,
+and the build composes the shared :class:`repro.graph.engine.BuildEngine`
+stages (acquire → select → commit_forward → reverse_pass, DESIGN.md §3).
 
 Pipeline here: (1) exact k-NN graph (the oracle substitute for NN-descent at
 the scales this container runs), (2) for every vertex, beam-search the k-NN
@@ -18,15 +20,15 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.graph.beam import INF, beam_search
-from repro.graph.hnsw import HNSWParams, _commit_forward, _reverse_pass
+from repro.graph.engine import INF, BuildEngine, BuildParams
+from repro.graph.hnsw import HNSWParams  # noqa: F401 — canonical param alias
 from repro.graph.knn import exact_knn
-from repro.graph.select import select_neighbors
 from repro.graph.vamana import FlatIndex, medoid_id
 
 
 @functools.partial(jax.jit, static_argnames=("params",))
-def _build_nsg_jit(data, backend, knn_adj, entry, *, params: HNSWParams):
+def _build_nsg_jit(data, backend, knn_adj, entry, *, params: BuildParams):
+    engine = BuildEngine(params)
     n = data.shape[0]
     p = params.batch
     r = params.r_base
@@ -40,13 +42,10 @@ def _build_nsg_jit(data, backend, knn_adj, entry, *, params: HNSWParams):
         mask = ids < n
         ids = jnp.minimum(ids, n - 1)
         qctx = jax.vmap(backend.prepare_query)(data[ids])
-        # CA on the kNN graph from the medoid.
-        res = jax.vmap(
-            lambda qc: beam_search(
-                backend, qc, knn_adj, entry[None], ef=params.ef,
-                max_iters=params.max_iters,
-            )
-        )(qctx)
+        # CA on the kNN graph from the medoid (shared entry for the batch).
+        res = engine.acquire(
+            backend, qctx, knn_adj, jnp.full((p,), entry, jnp.int32)
+        )
         # Candidates = beam ∪ own kNN row (NSG uses the search's visited set;
         # the beam is its top slice, the kNN row guarantees local candidates).
         own = knn_adj[ids]  # (P, k)
@@ -67,16 +66,14 @@ def _build_nsg_jit(data, backend, knn_adj, entry, *, params: HNSWParams):
         dup = jnp.any(eq & tri[None], axis=2)
         cand_ids = jnp.where(dup | (cand_ids < 0), -1, cand_ids)
         cand_d = jnp.where(cand_ids < 0, INF, cand_d)
-        sel = jax.vmap(
-            lambda ci, cd: select_neighbors(backend, ci, cd, r=r, alpha=params.alpha)
-        )(cand_ids, cand_d)
+        sel = engine.select(backend, cand_ids, cand_d, r=r)
         sel_ids = jnp.where(mask[:, None], sel.ids, -1)
         sel_d = jnp.where(mask[:, None], sel.dists, INF)
-        adj, adj_d, backend = _commit_forward(
+        adj, adj_d, backend = engine.commit_forward(
             adj, adj_d, backend, ids, sel_ids, sel_d, mask
         )
-        adj, adj_d, backend = _reverse_pass(
-            adj, adj_d, backend, ids, sel_ids, sel_d, mask, params=params
+        adj, adj_d, backend = engine.reverse_pass(
+            adj, adj_d, backend, ids, sel_ids, sel_d, mask
         )
         return adj, adj_d, backend
 
@@ -88,7 +85,7 @@ def build_nsg(
     data,
     backend,
     *,
-    params: HNSWParams = HNSWParams(),
+    params: BuildParams = BuildParams(),
     knn_k: int = 16,
 ):
     """Build an NSG-style index. Returns (FlatIndex, knn_adj)."""

@@ -30,10 +30,18 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+try:  # jax >= 0.5: top-level export, replication check renamed to check_vma
+    _shard_map = jax.shard_map
+    _SHARD_MAP_KW = {"check_vma": False}
+except AttributeError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _SHARD_MAP_KW = {"check_rep": False}
+
 from repro import core
 from repro.graph import backends as bk
 from repro.graph.beam import INF, beam_search
-from repro.graph.hnsw import HNSWIndex, HNSWParams, _build_jit, search_hnsw
+from repro.graph.hnsw import HNSWIndex, HNSWParams, build_hnsw_jit, search_hnsw
 
 
 class SegmentedIndexes(NamedTuple):
@@ -61,10 +69,14 @@ def build_segment(
     *,
     params: HNSWParams,
 ) -> HNSWIndex:
-    """Pure-jax single-segment build (traceable under shard_map/vmap)."""
+    """Pure-jax single-segment build (traceable under shard_map/vmap).
+
+    Each segment runs the same engine-driven program (graph/engine.py);
+    ``params.width`` therefore widens every segment's CA stage at once.
+    """
     codes = core.encode(coder, data_seg)
     backend = bk.FlashBackend(coder, codes)
-    index, _ = _build_jit(data_seg, backend, levels, entries, params=params)
+    index, _ = build_hnsw_jit(data_seg, backend, levels, entries, params=params)
     return index
 
 
@@ -102,12 +114,12 @@ def make_segmented_build_fn(mesh, *, params: HNSWParams, seg_axes=("pod", "data"
         return jax.vmap(f, in_axes=(0, None, 0, 0))(data_seg, coder, levels, entries)
 
     def build(data_segs, coder, levels, entries):
-        return jax.shard_map(
+        return _shard_map(
             per_device,
             mesh=mesh,
             in_specs=(spec_seg, P(), spec_seg, spec_seg),
             out_specs=spec_seg,
-            check_vma=False,
+            **_SHARD_MAP_KW,
         )(data_segs, coder, levels, entries)
 
     return build
@@ -124,8 +136,8 @@ def search_segment(
     *,
     k: int,
     ef_search: int,
-    max_layers: int,
     id_offset: jax.Array,
+    max_layers: int | None = None,
     rerank_vectors: jax.Array | None = None,
 ):
     """Local search; returns globally-offset ids + distances.
@@ -144,7 +156,8 @@ def search_segment(
 
 
 def make_segmented_search_fn(
-    mesh, *, k: int, ef_search: int, max_layers: int, seg_axes=("pod", "data")
+    mesh, *, k: int, ef_search: int, max_layers: int | None = None,
+    seg_axes=("pod", "data"),
 ):
     """shard_map program: fan-out search + two-stage top-k merge.
 
@@ -172,12 +185,12 @@ def make_segmented_search_fn(
         return out_ids, -neg
 
     def search(index_stack, queries, id_offsets, seg_vectors):
-        return jax.shard_map(
+        return _shard_map(
             per_device,
             mesh=mesh,
             in_specs=(spec_seg, P(), spec_seg, spec_seg),
             out_specs=(P(), P()),
-            check_vma=False,
+            **_SHARD_MAP_KW,
         )(index_stack, queries, id_offsets, seg_vectors)
 
     return search
@@ -190,7 +203,7 @@ def search_segments_local(
     *,
     k: int,
     ef_search: int,
-    max_layers: int,
+    max_layers: int | None = None,
     seg_vectors: jax.Array | None = None,
 ):
     """Reference/local merge (vmap over segments + host top-k)."""

@@ -8,7 +8,8 @@ any graph algorithm built from those two stages), differing in:
   * a refinement pass that re-runs CA+NS for every vertex against the built
     graph (DiskANN's two-pass schedule).
 
-Reuses the batched insert machinery from ``repro.graph.hnsw``.
+Built on the shared :class:`repro.graph.engine.BuildEngine` (DESIGN.md §3):
+each pass is the engine's batch-synchronous insert loop with that pass's α.
 """
 
 from __future__ import annotations
@@ -19,17 +20,10 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.graph.beam import INF, beam_search
-from repro.graph.hnsw import (
-    HNSWParams,
-    _commit_forward,
-    _insert_batch,
-    _reverse_pass,
-    _bootstrap,
-)
-from repro.graph.select import select_neighbors
+from repro.graph.engine import BuildEngine, BuildParams, CostAccount
+from repro.graph.hnsw import HNSWParams  # noqa: F401 — canonical param alias
 
 
 class FlatIndex(NamedTuple):
@@ -47,7 +41,7 @@ def medoid_id(data: jax.Array) -> jax.Array:
 
 
 @functools.partial(jax.jit, static_argnames=("params", "two_pass"))
-def _build_flat_jit(data, backend, entry, *, params: HNSWParams, two_pass: bool):
+def _build_flat_jit(data, backend, entry, *, params: BuildParams, two_pass: bool):
     n = data.shape[0]
     p = params.batch
     flat = dataclasses.replace(params, max_layers=1)
@@ -57,30 +51,29 @@ def _build_flat_jit(data, backend, entry, *, params: HNSWParams, two_pass: bool)
     adj_up = jnp.full((1, n, flat.r_upper), -1, jnp.int32)
     adj_up_d = jnp.full((1, n, flat.r_upper), INF)
 
-    adj0, adj0_d, adj_up, adj_up_d, backend = _bootstrap(
-        data, adj0, adj0_d, adj_up, adj_up_d, backend, levels, params=flat
+    adj0, adj0_d, adj_up, adj_up_d, backend = BuildEngine(flat).bootstrap(
+        data, adj0, adj0_d, adj_up, adj_up_d, backend, levels
     )
     nb = -(-n // p)
 
     def pass_body(alpha_pass, adj0, adj0_d, backend, start_batch):
-        pp = dataclasses.replace(flat, alpha=alpha_pass)
+        engine = BuildEngine(dataclasses.replace(flat, alpha=alpha_pass))
 
         def body(b, carry):
-            adj0, adj0_d, backend, stats = carry
+            adj0, adj0_d, backend, acct = carry
             ids = b * p + jnp.arange(p, dtype=jnp.int32)
             mask = ids < n
             ids = jnp.minimum(ids, n - 1)
-            a0, a0d, au, aud, backend, stats = _insert_batch(
+            a0, a0d, au, aud, backend, acct = engine.insert_batch(
                 data, adj0, adj0_d, adj_up, adj_up_d, backend,
-                levels, ids, entry, mask, params=pp, stats=stats,
+                levels, ids, entry, mask, acct=acct,
             )
-            return a0, a0d, backend, stats
+            return a0, a0d, backend, acct
 
-        stats0 = (jnp.float32(0), jnp.float32(0))
-        adj0, adj0_d, backend, stats = jax.lax.fori_loop(
-            start_batch, nb, body, (adj0, adj0_d, backend, stats0)
+        adj0, adj0_d, backend, acct = jax.lax.fori_loop(
+            start_batch, nb, body, (adj0, adj0_d, backend, CostAccount.zero())
         )
-        return adj0, adj0_d, backend, stats
+        return adj0, adj0_d, backend, acct
 
     adj0, adj0_d, backend, s1 = pass_body(1.0, adj0, adj0_d, backend, 1)
     if two_pass:
@@ -96,7 +89,7 @@ def build_vamana(
     data,
     backend,
     *,
-    params: HNSWParams = HNSWParams(alpha=1.2),
+    params: BuildParams = BuildParams(alpha=1.2),
     two_pass: bool = True,
 ):
     data = jnp.asarray(data, jnp.float32)
@@ -104,13 +97,14 @@ def build_vamana(
     return _build_flat_jit(data, backend, entry, params=params, two_pass=two_pass)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "ef_search"))
+@functools.partial(jax.jit, static_argnames=("k", "ef_search", "width"))
 def search_flat(
     index: FlatIndex,
     queries: jax.Array,
     *,
     k: int,
     ef_search: int = 64,
+    width: int = 1,
     rerank_vectors: jax.Array | None = None,
 ):
     """Beam search from the medoid + optional exact rerank."""
@@ -118,7 +112,9 @@ def search_flat(
 
     def one(q):
         qctx = backend.prepare_query(q)
-        res = beam_search(backend, qctx, index.adj, index.entry[None], ef=ef_search)
+        res = beam_search(
+            backend, qctx, index.adj, index.entry[None], ef=ef_search, width=width
+        )
         if rerank_vectors is not None:
             safe = jnp.maximum(res.ids, 0)
             dv = rerank_vectors[safe] - q[None, :]

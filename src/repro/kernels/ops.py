@@ -71,6 +71,27 @@ def flash_scan_blocked(
     )
 
 
+@functools.partial(jax.jit, static_argnames=("impl", "block_g"))
+def flash_scan_batch(
+    rows: jax.Array, adt: jax.Array, *, impl: str = "auto", block_g: int = 8
+) -> jax.Array:
+    """Neighbor-row batch ADT scan: rows (W, R, M), adt (M, K) -> (W, R).
+
+    The multi-expansion beam's entry point: each expanded vertex contributes
+    one contiguous (R, M) neighbor-code row (the §3.3.4 mirror); the W rows
+    are scored in a single blocked-kernel launch. Layout-wise this is exactly
+    ``flash_scan_blocked`` with G = W, B = R — the transpose to (W, M, R)
+    groups codewords by subspace within each block, so one sequential load
+    fetches the R codewords of a single subspace (Figure 5, lower right).
+    """
+    w, r, m = rows.shape
+    m2, _k = adt.shape
+    if m != m2:
+        raise ValueError(f"rows M={m} != adt M={m2}")
+    blocks = jnp.transpose(rows, (0, 2, 1))  # (W, M, R)
+    return flash_scan_blocked(blocks, adt, impl=impl, block_g=block_g)
+
+
 @functools.partial(jax.jit, static_argnames=("impl", "block_n", "block_c"))
 def l2_batch(
     x: jax.Array,

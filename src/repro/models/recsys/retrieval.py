@@ -80,7 +80,7 @@ def search_index(
     *,
     k: int,
     ef_search: int = 128,
-    max_layers: int = 3,
+    max_layers: int | None = None,
 ) -> RetrievalResult:
     """Graph search (sub-linear) + exact rerank; distances → −scores."""
     res = search_hnsw(

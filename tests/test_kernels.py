@@ -100,6 +100,18 @@ class TestFlashScanBlocked:
             np.asarray(blocked).reshape(-1), np.asarray(flat)
         )
 
+    @pytest.mark.parametrize("w,r", [(1, 16), (4, 16), (8, 32)])
+    @pytest.mark.parametrize("impl", ["ref", "interpret"])
+    def test_batch_rows_equal_flat(self, w, r, impl):
+        """flash_scan_batch (the multi-expansion beam's W·R entry point)
+        equals the flat scan row-by-row, on both dispatch paths."""
+        rng = _rng(w * r)
+        rows = jnp.asarray(rng.integers(0, 16, (w, r, 16)), jnp.int32)
+        adt = jnp.asarray(rng.integers(0, 255, (16, 16)), jnp.int32)
+        got = ops.flash_scan_batch(rows, adt, impl=impl)
+        expect = ref.flash_scan_ref(rows.reshape(w * r, 16), adt).reshape(w, r)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(expect))
+
 
 class TestL2Batch:
     @pytest.mark.parametrize(
