@@ -14,8 +14,7 @@ import jax
 from benchmarks.common import DEFAULT_PARAMS, FLASH_KW, bench_data, emit, timeit
 from repro import graph
 from repro.graph.knn import exact_knn, recall_at_k
-from repro.graph.nsg import build_nsg
-from repro.graph.vamana import build_vamana, search_flat
+from repro.index import AnnIndex
 
 
 def run() -> dict:
@@ -24,23 +23,22 @@ def run() -> dict:
     key = jax.random.PRNGKey(0)
     params = dataclasses.replace(DEFAULT_PARAMS, r_base=24, ef=64, alpha=1.2)
     out = {}
+    algo_kw = {"vamana": {}, "nsg": dict(knn_k=24)}
 
-    def build_vam(be):
-        return build_vamana(data, be, params=params)[0]
+    for algo in ("vamana", "nsg"):
+        def build(be):  # noqa: B023 — rebound per algo iteration
+            return AnnIndex.build(
+                data, algo=algo, backend=be, params=params, **algo_kw[algo]
+            )
 
-    def build_nsg_(be):
-        (index, _knn) = build_nsg(data, be, params=params, knn_k=24)
-        return index
-
-    for algo, build in [("vamana", build_vam), ("nsg", build_nsg_)]:
         t_fp = timeit(
-            lambda: build(graph.make_backend("fp32", data)).adj, repeats=1
+            lambda: build(graph.make_backend("fp32", data)).graph.adj, repeats=1
         )
         be_fl = graph.make_backend("flash", data, key, **FLASH_KW)
-        t_fl = timeit(lambda: build(be_fl).adj, repeats=1)
+        t_fl = timeit(lambda: build(be_fl).graph.adj, repeats=1)
         idx = build(be_fl)
-        ids, _ = search_flat(idx, queries, k=10, ef_search=128, rerank_vectors=data)
-        rec = recall_at_k(ids, tids, 10)
+        res = idx.search(queries, k=10, ef=128, rerank=True)
+        rec = recall_at_k(res.ids, tids, 10)
         out[algo] = dict(fp32=t_fp, flash=t_fl, recall=rec)
         emit(
             f"generality/{algo}", t_fl * 1e6,

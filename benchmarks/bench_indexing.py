@@ -1,12 +1,15 @@
 """Paper Figures 6 & 7 + Table 4 — indexing time, index size, coding time.
 
 Builds the same HNSW with every backend (fp32 baseline, PQ, SQ, PCA, Flash,
-Flash+blocked-layout) and reports:
+Flash+blocked-layout) through the ``repro.index`` facade and reports:
   * wall-clock build time (+ speedup vs fp32),
   * coding/preprocessing time (CT) vs total indexing time (TIT, Table 4),
   * index size in bytes (compression ratio, Figure 7),
   * post-build search recall (quality gate — a fast build that ruins recall
-    is the HNSW-PQ failure mode the paper highlights).
+    is the HNSW-PQ failure mode the paper highlights),
+plus — beyond the paper — the dynamic-maintenance suite (DESIGN.md §8):
+``update_bench`` measures ``AnnIndex.add`` throughput/cost against a full
+rebuild and post-delete recall, written into BENCH_indexing.json.
 """
 
 from __future__ import annotations
@@ -22,6 +25,7 @@ from benchmarks.common import DEFAULT_PARAMS, FLASH_KW, bench_data, emit, timeit
 from repro import graph
 from repro.graph.hnsw import build_hnsw, search_hnsw
 from repro.graph.knn import exact_knn, recall_at_k
+from repro.index import AnnIndex
 from repro.utils import tree_bytes
 
 
@@ -121,20 +125,19 @@ def run() -> dict:
         jax.block_until_ready(jax.tree_util.tree_leaves(be)[0])
         ct = time.perf_counter() - t0
 
-        build = lambda: build_hnsw(data, be, params=DEFAULT_PARAMS)
+        build = lambda: AnnIndex.build(  # noqa: B023
+            data, algo="hnsw", backend=be, params=DEFAULT_PARAMS
+        )
         # one timed cold build (compile cached across same-shape backends of
         # equal pytree structure only, so report warm build too)
         t0 = time.perf_counter()
-        index, stats = build()
-        jax.block_until_ready(index.adj0)
+        idx = build()
+        jax.block_until_ready(idx.graph.adj0)
         cold = time.perf_counter() - t0
-        warm = timeit(lambda: build()[0].adj0, repeats=2, warmup=0)
-        res = search_hnsw(
-            index, queries, k=10, ef_search=96, max_layers=3,
-            rerank_vectors=None if kind == "fp32" else data,
-        )
+        warm = timeit(lambda: build().graph.adj0, repeats=2, warmup=0)
+        res = idx.search(queries, k=10, ef=96, rerank=(kind != "fp32"))
         rec = recall_at_k(res.ids, tids, 10)
-        size = index_bytes(index, kind, n, d)
+        size = index_bytes(idx.graph, kind, n, d)
         if kind == "fp32":
             base_time, base_size = warm, size
         results[kind] = dict(
@@ -147,6 +150,81 @@ def run() -> dict:
             f"size={size/1e6:.2f}MB CT={ct:.2f}s TIT={ct + warm:.2f}s",
         )
     return results
+
+
+def update_bench(
+    *, n: int = 2400, d: int = 48, grow_frac: float = 0.25, n_delete: int = 64
+) -> dict:
+    """Dynamic maintenance (DESIGN.md §8): add-throughput and post-delete
+    recall on a flash_blocked HNSW index, vs a from-scratch rebuild.
+
+    The acceptance bar this reports on (and tests/test_index.py asserts):
+    adding a 25% growth batch reaches recall@10 within 0.02 of the full
+    rebuild over the union at < 50% of its distance evaluations.
+    """
+    m = int(n * grow_frac)
+    data, queries = bench_data(n + m, d)
+    base, extra = data[:n], data[n:]
+    tids, _ = exact_knn(queries, data, k=10)
+    kw = dict(FLASH_KW)
+
+    # From-scratch build over the union (the thing add() must not rebuild).
+    t0 = time.perf_counter()
+    full = AnnIndex.build(
+        data, algo="hnsw", backend="flash_blocked",
+        params=DEFAULT_PARAMS, backend_kwargs=kw,
+    )
+    jax.block_until_ready(full.graph.adj0)
+    t_full = time.perf_counter() - t0
+    nd_full = float(full.last_stats.n_dists)
+    rec_full = recall_at_k(full.search(queries, k=10, ef=96).ids, tids, 10)
+
+    # Incremental: build the base, then add the growth batch in place.
+    inc = AnnIndex.build(
+        base, algo="hnsw", backend="flash_blocked",
+        params=DEFAULT_PARAMS, backend_kwargs=kw,
+    )
+    jax.block_until_ready(inc.graph.adj0)
+    t0 = time.perf_counter()
+    add_stats = inc.add(extra)
+    jax.block_until_ready(inc.graph.adj0)
+    t_add = time.perf_counter() - t0
+    nd_add = float(add_stats.n_dists)
+    rec_add = recall_at_k(inc.search(queries, k=10, ef=96).ids, tids, 10)
+    emit(
+        "update/add", t_add * 1e6,
+        f"vectors={m} adds_per_s={m / t_add:.0f} "
+        f"n_dists_vs_rebuild={nd_add / nd_full:.3f} "
+        f"recall={rec_add:.3f} rebuild_recall={rec_full:.3f}",
+    )
+
+    # Delete: tombstone the hottest vertices (every query's true top-1s).
+    victims = np.unique(np.asarray(tids[:, :1]))[:n_delete]
+    inc.delete(victims)
+    res = inc.search(queries, k=10, ef=96)
+    leaked = int(np.isin(np.asarray(res.ids), victims).sum())
+    active = np.setdiff1d(np.arange(n + m), victims)
+    t_act, _ = exact_knn(queries, data[active], k=10)
+    t_glob = jnp.asarray(active)[t_act]
+    rec_del = recall_at_k(res.ids, t_glob, 10)
+    emit(
+        "update/delete", 0.0,
+        f"deleted={len(victims)} tombstones_returned={leaked} "
+        f"post_delete_recall={rec_del:.3f}",
+    )
+    return dict(
+        bench="dynamic_update",
+        n=n, d=d, grow=m, deleted=int(len(victims)),
+        rebuild=dict(seconds=t_full, n_dists=nd_full, recall_at_10=rec_full),
+        add=dict(
+            seconds=t_add, adds_per_s=m / t_add, n_dists=nd_add,
+            n_dists_vs_rebuild=nd_add / nd_full, recall_at_10=rec_add,
+            recall_delta=rec_add - rec_full,
+        ),
+        delete=dict(
+            tombstones_returned=leaked, post_delete_recall_at_10=rec_del
+        ),
+    )
 
 
 if __name__ == "__main__":

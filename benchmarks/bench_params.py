@@ -11,17 +11,17 @@ import jax
 
 from benchmarks.common import DEFAULT_PARAMS, bench_data, emit, timeit
 from repro import core, graph
-from repro.graph.hnsw import build_hnsw, search_hnsw
 from repro.graph.knn import exact_knn, recall_at_k
+from repro.index import AnnIndex
 
 
 def _recall_of(kind, kw, data, queries, tids, key):
     be = graph.make_backend(kind, data, key, **kw)
-    t = timeit(lambda: build_hnsw(data, be, params=DEFAULT_PARAMS)[0].adj0,
-               repeats=1)
-    index, _ = build_hnsw(data, be, params=DEFAULT_PARAMS)
-    res = search_hnsw(index, queries, k=10, ef_search=96, max_layers=3,
-                      rerank_vectors=data)
+    build = lambda: AnnIndex.build(
+        data, algo="hnsw", backend=be, params=DEFAULT_PARAMS
+    )
+    t = timeit(lambda: build().graph.adj0, repeats=1)
+    res = build().search(queries, k=10, ef=96, rerank=True)
     return t, recall_at_k(res.ids, tids, 10)
 
 

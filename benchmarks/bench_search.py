@@ -11,8 +11,8 @@ import jax
 
 from benchmarks.common import DEFAULT_PARAMS, FLASH_KW, bench_data, emit, timeit
 from repro import graph
-from repro.graph.hnsw import build_hnsw, search_hnsw
 from repro.graph.knn import average_distance_ratio, exact_knn, recall_at_k
+from repro.index import AnnIndex
 
 
 def run() -> dict:
@@ -28,13 +28,10 @@ def run() -> dict:
         ("flash", dict(FLASH_KW)),
     ]:
         be = graph.make_backend(kind, data, key, **kw)
-        index, _ = build_hnsw(data, be, params=DEFAULT_PARAMS)
+        index = AnnIndex.build(data, algo="hnsw", backend=be, params=DEFAULT_PARAMS)
         curve = []
         for ef in (16, 32, 64, 128):
-            f = lambda: search_hnsw(
-                index, queries, k=10, ef_search=ef, max_layers=3,
-                rerank_vectors=data,
-            )
+            f = lambda: index.search(queries, k=10, ef=ef, rerank=True)  # noqa: B023
             dt = timeit(lambda: f().ids, repeats=3)
             res = f()
             rec = recall_at_k(res.ids, tids, 10)

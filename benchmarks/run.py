@@ -3,7 +3,9 @@
 Default mode prints ``name,us_per_call,derived`` CSV rows
 (benchmarks.common.emit) for every bench module.
 
-``--json PATH`` instead runs the machine-readable perf-trajectory suite and
+``--json PATH`` instead runs the machine-readable perf-trajectory suite —
+the width sweep plus the dynamic-maintenance ``update`` section
+(add-throughput vs rebuild, post-delete recall; DESIGN.md §8) — and
 writes it to PATH (CI uploads ``BENCH_indexing.json``):
 
     python benchmarks/run.py --json BENCH_indexing.json
@@ -23,8 +25,14 @@ Roofline terms per (arch × shape) come from the dry-run, not this harness:
 
 import argparse
 import json
+import pathlib
 import sys
 import traceback
+
+# `python benchmarks/run.py` puts benchmarks/ (not the repo root) first on
+# sys.path, which breaks the `benchmarks.*` package imports below; anchor
+# the root explicitly so the documented CI invocation works from anywhere.
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
 
 
 def run_json(path: str, only: str) -> None:
@@ -35,9 +43,17 @@ def run_json(path: str, only: str) -> None:
         raise SystemExit(f"unknown --only {only!r} (have: indexing_widths)")
     print("name,us_per_call,derived")
     payload = bench_indexing.width_sweep()
+    payload["update"] = bench_indexing.update_bench()
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
     print(f"wrote {path}", file=sys.stderr)
+    upd = payload["update"]["add"]
+    if upd["n_dists_vs_rebuild"] >= 0.5:
+        print(
+            f"WARNING: add() cost {upd['n_dists_vs_rebuild']:.2f} of a full "
+            "rebuild's distance evaluations (acceptance bar: < 0.5)",
+            file=sys.stderr,
+        )
     widths = payload["widths"]
     base = widths.get("1")
     if base:

@@ -54,10 +54,32 @@ def main():
 
     gids, gd = seg.search_segments_local(
         built, queries, np.full(n_segments, seg_size),
-        k=10, ef_search=96, max_layers=3, seg_vectors=segs,
+        k=10, ef_search=96, seg_vectors=segs,
     )
     tids, _ = exact_knn(queries, data, k=10)
     print(f"fan-out search recall@10 = {recall_at_k(gids, tids, 10):.3f}")
+
+    # ---- the serving form: per-segment facades + routed growth ----------
+    # (DESIGN.md §8) Each segment is a full repro.index.AnnIndex, so the
+    # collection can grow and tombstone in place; new vectors route to the
+    # nearest-centroid segment.
+    seg_idx = seg.SegmentedAnnIndex.build(
+        segs, algo="hnsw", backend="flash", params=params,
+        backend_kwargs=dict(d_f=32, m_f=16, kmeans_iters=12),
+    )
+    res = seg_idx.search(queries, k=10, ef=96)
+    print(f"facade fan-out recall@10 = {recall_at_k(res.ids, tids, 10):.3f}")
+
+    new_vecs = data[:128] + 0.01 * np.asarray(
+        jax.random.normal(key, (128, d)), np.float32
+    )
+    new_gids = seg_idx.add(new_vecs)
+    hit = jnp.mean(
+        (seg_idx.search(new_vecs, k=1, ef=96).ids[:, 0]
+         == jnp.asarray(new_gids)).astype(jnp.float32)
+    )
+    print(f"routed add of 128 vectors: self-hit@1 = {float(hit):.3f} "
+          f"(collection now {seg_idx.n_active} vectors)")
 
 
 if __name__ == "__main__":

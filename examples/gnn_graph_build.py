@@ -15,9 +15,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import graph
-from repro.graph.hnsw import HNSWParams, build_hnsw, search_hnsw
+from repro.graph.hnsw import HNSWParams
 from repro.graph.knn import exact_knn
+from repro.index import AnnIndex
 from repro.models.gnn.common import GraphBatch
 from repro.models.gnn.egnn import EGNNConfig, egnn_forward, init_egnn
 
@@ -31,11 +31,12 @@ def main():
     desc = jnp.asarray(rng.normal(size=(n_atoms, d_desc)), jnp.float32)
 
     t0 = time.perf_counter()
-    be = graph.make_backend("flash", desc, key, d_f=32, m_f=16, kmeans_iters=10)
-    index, _ = build_hnsw(
-        desc, be, params=HNSWParams(r_upper=8, r_base=16, ef=48, batch=32)
+    index = AnnIndex.build(
+        desc, algo="hnsw", backend="flash",
+        params=HNSWParams(r_upper=8, r_base=16, ef=48, batch=32),
+        backend_kwargs=dict(d_f=32, m_f=16, kmeans_iters=10),
     )
-    res = search_hnsw(index, desc, k=k + 1, ef_search=64, rerank_vectors=desc)
+    res = index.search(desc, k=k + 1, ef=64, rerank=True)
     t_ann = time.perf_counter() - t0
     nbrs = res.ids[:, 1:]  # drop self
 

@@ -1,61 +1,74 @@
-"""Quickstart: build an HNSW index with Flash compact coding and search it.
+"""Quickstart: the unified `repro.index` facade — build, search, and grow
+an ANN index (the canonical snippet; DESIGN.md §8).
 
     PYTHONPATH=src python examples/quickstart.py
 
-Builds the same index with full-precision distances and with Flash codes,
-then compares build cost and search recall — the paper's core trade in ~60
-lines.
+Builds the same HNSW graph with full-precision distances and with Flash
+compact codes (the paper's core trade), then exercises dynamic maintenance:
+`add()` grows the frozen graph in place at a fraction of a rebuild's
+distance evaluations, `delete()` tombstones without disconnecting anything.
 """
 
 import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
-from repro import graph
 from repro.data.synthetic import vector_dataset
-from repro.graph.hnsw import HNSWParams, build_hnsw, search_hnsw
+from repro.graph.hnsw import HNSWParams
 from repro.graph.knn import exact_knn, recall_at_k
+from repro.index import AnnIndex
 
 
 def main():
-    key = jax.random.PRNGKey(0)
-    n, d = 8000, 96
-    data = jnp.asarray(vector_dataset(0, n=n + 100, d=d, n_clusters=64))
-    data, queries = data[:n], data[n:]
+    n, m, d = 6000, 1500, 96  # base build + a 25% growth batch
+    data = vector_dataset(0, n=n + m + 100, d=d, n_clusters=64)
+    base, extra, queries = data[:n], data[n : n + m], data[n + m :]
     params = HNSWParams(r_upper=8, r_base=16, ef=48, batch=32, max_layers=3)
 
-    print(f"dataset: {n} x {d} float32 ({n * d * 4 / 1e6:.0f} MB)")
-    tids, _ = exact_knn(queries, data, k=10)
+    print(f"dataset: {n} x {d} float32 (+{m} to add later)")
+    tids, _ = exact_knn(queries, base, k=10)
 
     for kind, kw in [
         ("fp32", {}),
-        ("flash", dict(d_f=48, m_f=16, l_f=4, h=8, kmeans_iters=12)),
+        ("flash_blocked", dict(d_f=48, m_f=16, l_f=4, h=8, kmeans_iters=12)),
     ]:
         t0 = time.perf_counter()
-        backend = graph.make_backend(kind, data, key, **kw)
-        jax.block_until_ready(jax.tree_util.tree_leaves(backend)[0])
-        t_code = time.perf_counter() - t0
-
-        t0 = time.perf_counter()
-        index, stats = build_hnsw(data, backend, params=params)
-        jax.block_until_ready(index.adj0)
+        index = AnnIndex.build(
+            base, algo="hnsw", backend=kind, params=params,
+            backend_kwargs=kw,
+        )
+        jax.block_until_ready(index.graph.adj0)
         t_build = time.perf_counter() - t0
-
-        res = search_hnsw(
-            index, queries, k=10, ef_search=96, max_layers=3,
-            rerank_vectors=None if kind == "fp32" else data,
-        )
+        res = index.search(queries, k=10, ef=96, rerank=(kind != "fp32"))
         rec = recall_at_k(res.ids, tids, 10)
-        payload = (
-            n * d * 4 if kind == "fp32"
-            else int(backend.codes.shape[0] * backend.coder.code_bytes)
-        )
+        nd_build = float(index.last_stats.n_dists)
         print(
-            f"{kind:6s} coding {t_code:5.1f}s  build {t_build:6.1f}s "
-            f"({float(stats.n_dists):.2e} dists)  recall@10 {rec:.3f}  "
-            f"vector payload {payload / 1e6:6.2f} MB"
+            f"{kind:14s} build {t_build:6.1f}s ({nd_build:.2e} dists)  "
+            f"recall@10 {rec:.3f}"
         )
+
+    # ---- dynamic maintenance on the Flash-blocked index -----------------
+    t0 = time.perf_counter()
+    add_stats = index.add(extra)  # no rebuild, no coder refit
+    jax.block_until_ready(index.graph.adj0)
+    t_add = time.perf_counter() - t0
+    tids_all, _ = exact_knn(queries, data[: n + m], k=10)
+    rec_add = recall_at_k(index.search(queries, k=10, ef=96).ids, tids_all, 10)
+    print(
+        f"add {m} vectors  {t_add:6.1f}s ({float(add_stats.n_dists):.2e} "
+        f"dists, {float(add_stats.n_dists) / nd_build:.0%} of the base "
+        f"build)  recall@10 {rec_add:.3f}"
+    )
+
+    victims = np.asarray(tids_all[:, 0])  # every query's true top-1
+    index.delete(victims)
+    res = index.search(queries, k=10, ef=96)
+    leaked = np.isin(np.asarray(res.ids), victims).sum()
+    print(
+        f"delete {len(np.unique(victims))} vectors: tombstones returned = "
+        f"{leaked} (active {index.n_active}/{index.n})"
+    )
 
 
 if __name__ == "__main__":

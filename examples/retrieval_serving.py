@@ -12,7 +12,8 @@ import jax
 import jax.numpy as jnp
 
 from repro import core, graph
-from repro.graph.hnsw import HNSWParams, build_hnsw
+from repro.graph.hnsw import HNSWParams
+from repro.index import AnnIndex
 from repro.models.recsys import bert4rec as b4r
 from repro.models.recsys import retrieval
 
@@ -45,15 +46,22 @@ def main():
           f"{retrieval.retrieval_recall(fl, exact, 10):.3f} "
           f"({cfg.n_items * coder.code_bytes / 1e6:.0f} MB scanned)")
 
-    be = graph.FlashBackend(coder, codes)
-    index, _ = build_hnsw(
-        table, be, params=HNSWParams(r_upper=8, r_base=16, ef=48, batch=32)
+    # reuse the scan's coder/codes as a prebuilt backend for the facade
+    index = AnnIndex.build(
+        table, algo="hnsw", backend=graph.FlashBackend(coder, codes),
+        params=HNSWParams(r_upper=8, r_base=16, ef=48, batch=32),
     )
     gr = retrieval.search_index(q, index, table, k=10, ef_search=96)
     t = _bench(lambda: retrieval.search_index(
         q, index, table, k=10, ef_search=96).ids)
     print(f"hnsw-flash     : {t * 1e3 / 64:7.3f} ms/req  recall "
           f"{retrieval.retrieval_recall(gr, exact, 10):.3f} (sub-linear)")
+
+    # the serving index is mutable: list a fresh item batch in place
+    new_items = table[:256] + 0.01 * jax.random.normal(key, (256, cfg.embed_dim))
+    index.add(new_items)
+    print(f"added 256 items in place -> index now {index.n_active} active "
+          f"(no rebuild, no coder refit)")
 
 
 def _bench(fn, repeats=3):

@@ -1,6 +1,7 @@
 """Graph-index substrate: HNSW/Vamana/NSG builds over pluggable distance
 backends, the shared batched CA+NS build engine, multi-expansion beam search
-(CA), heuristic selection (NS), exact-kNN oracle."""
+(CA), heuristic selection (NS), exact-kNN oracle — fronted by the unified
+``repro.index`` facade (``AnnIndex``: build/search/add/delete/compact)."""
 
 from repro.graph.backends import (  # noqa: F401
     FlashBackend,
@@ -9,6 +10,7 @@ from repro.graph.backends import (  # noqa: F401
     PCABackend,
     PQBackend,
     SQBackend,
+    kinds,
     make_backend,
 )
 from repro.graph.beam import (  # noqa: F401
@@ -34,3 +36,18 @@ from repro.graph.hnsw import (  # noqa: F401
 )
 from repro.graph.knn import average_distance_ratio, exact_knn, recall_at_k  # noqa: F401
 from repro.graph.select import Selection, prune_list, select_neighbors  # noqa: F401
+from repro.graph.vamana import (  # noqa: F401
+    FlatIndex,
+    build_vamana,
+    search_flat,
+    search_flat_result,
+)
+
+# The facade composes the modules above, so it imports last.
+from repro.graph.index import (  # noqa: E402, F401
+    AlgoSpec,
+    AnnIndex,
+    SearchResult,
+    algos,
+    register_algo,
+)

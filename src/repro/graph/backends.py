@@ -25,6 +25,12 @@ L2, or a monotone affine image of it; never mixed across backends):
                                   instead of W·R random gathers.
     pair_dists(ids_a, ids_b)    -> f32    distances between stored ids
     with_updated_edges(ids, nbr_ids) -> backend   commit hook (blocked layout)
+    extend(new_vectors)         -> backend  dynamic growth (DESIGN.md §8):
+                                  encode new raw vectors with the FROZEN
+                                  coder and append their codes (and, for the
+                                  blocked layout, empty mirror rows) — the
+                                  hook ``repro.index.AnnIndex.add`` uses to
+                                  grow an index without refitting anything.
 
 Backends are registered pytrees so whole index builds jit/vmap/shard cleanly.
 """
@@ -53,6 +59,11 @@ class _Base:
 
     def with_updated_edges(self, ids, nbr_ids):  # noqa: ARG002
         return self
+
+    def extend(self, new_vectors):
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support dynamic growth"
+        )
 
     def tree_flatten(self):
         children = tuple(getattr(self, name) for name in self._fields)
@@ -89,6 +100,10 @@ class FP32Backend(_Base):
         ids_a, ids_b = jnp.broadcast_arrays(ids_a, ids_b)
         return _l2(self.vectors[ids_a], self.vectors[ids_b])
 
+    def extend(self, new_vectors):
+        new = jnp.asarray(new_vectors, jnp.float32)
+        return FP32Backend(jnp.concatenate([self.vectors, new]))
+
 
 @jax.tree_util.register_pytree_node_class
 class PCABackend(_Base):
@@ -113,6 +128,11 @@ class PCABackend(_Base):
     def pair_dists(self, ids_a, ids_b):
         ids_a, ids_b = jnp.broadcast_arrays(ids_a, ids_b)
         return _l2(self.z[ids_a], self.z[ids_b])
+
+    def extend(self, new_vectors):
+        new = jnp.asarray(new_vectors, jnp.float32)
+        z_new = core.pca_encode(self.coder, new)
+        return PCABackend(self.coder, jnp.concatenate([self.z, z_new]))
 
 
 @jax.tree_util.register_pytree_node_class
@@ -139,6 +159,11 @@ class SQBackend(_Base):
         ids_a, ids_b = jnp.broadcast_arrays(ids_a, ids_b)
         return core.sq_dist(self.coder, self.codes[ids_a], self.codes[ids_b])
 
+    def extend(self, new_vectors):
+        new = jnp.asarray(new_vectors, jnp.float32)
+        codes_new = core.sq_encode(self.coder, new)
+        return SQBackend(self.coder, jnp.concatenate([self.codes, codes_new]))
+
 
 @jax.tree_util.register_pytree_node_class
 class PQBackend(_Base):
@@ -164,6 +189,11 @@ class PQBackend(_Base):
         return core.pq_sdc_lookup(
             self.coder, self.codes[ids_a], self.codes[ids_b]
         ).astype(jnp.float32)
+
+    def extend(self, new_vectors):
+        new = jnp.asarray(new_vectors, jnp.float32)
+        codes_new = core.pq_encode(self.coder, new)
+        return PQBackend(self.coder, jnp.concatenate([self.codes, codes_new]))
 
 
 @jax.tree_util.register_pytree_node_class
@@ -195,6 +225,11 @@ class FlashBackend(_Base):
         return core.sdc_lookup(
             self.coder, self.codes[ids_a], self.codes[ids_b]
         ).astype(jnp.float32)
+
+    def extend(self, new_vectors):
+        new = jnp.asarray(new_vectors, jnp.float32)
+        codes_new = core.encode(self.coder, new)
+        return FlashBackend(self.coder, jnp.concatenate([self.codes, codes_new]))
 
 
 @jax.tree_util.register_pytree_node_class
@@ -242,10 +277,34 @@ class FlashBlockedBackend(FlashBackend):
         nbr_codes = self.nbr_codes.at[ids].set(rows, mode="drop")
         return FlashBlockedBackend(self.coder, self.codes, nbr_codes)
 
+    def extend(self, new_vectors):
+        """Append codes for the new vectors plus all-empty mirror rows; the
+        rows fill in as the growing build commits edges through
+        ``with_updated_edges``."""
+        new = jnp.asarray(new_vectors, jnp.float32)
+        codes_new = core.encode(self.coder, new)
+        mirror_new = jnp.zeros(
+            (new.shape[0],) + self.nbr_codes.shape[1:], self.nbr_codes.dtype
+        )
+        return FlashBlockedBackend(
+            self.coder,
+            jnp.concatenate([self.codes, codes_new]),
+            jnp.concatenate([self.nbr_codes, mirror_new]),
+        )
+
 
 # ---------------------------------------------------------------------------
 # Factory
 # ---------------------------------------------------------------------------
+
+#: Valid ``make_backend`` kinds, in paper order. The ``repro.index`` facade
+#: registry validates against this same tuple (see :func:`kinds`).
+KINDS = ("fp32", "pq", "sq", "pca", "flash", "flash_blocked")
+
+
+def kinds() -> tuple[str, ...]:
+    """The backend kinds :func:`make_backend` accepts."""
+    return KINDS
 
 
 def make_backend(
@@ -258,13 +317,20 @@ def make_backend(
 ):
     """Fit a coder on ``data`` and wrap it with its backend.
 
-    kind ∈ {fp32, pq, sq, pca, flash, flash_blocked}. ``coder_kwargs`` are
-    forwarded to the fitter (e.g. d_f/m_f for flash, m/l_pq for pq…).
+    kind ∈ :func:`kinds`. ``coder_kwargs`` are forwarded to the fitter
+    (e.g. d_f/m_f for flash, m/l_pq for pq…); fp32 stores raw vectors and
+    takes none.
     """
     if key is None:
         key = jax.random.PRNGKey(0)
     data = jnp.asarray(data, jnp.float32)
     if kind == "fp32":
+        if coder_kwargs:
+            raise ValueError(
+                "fp32 stores raw vectors and takes no coder options; got "
+                f"{sorted(coder_kwargs)} (did you mean another kind of "
+                f"{', '.join(KINDS)}?)"
+            )
         return FP32Backend(data)
     if kind == "pca":
         coder = core.fit_pca_coder(data, **coder_kwargs)
@@ -286,4 +352,6 @@ def make_backend(
             (data.shape[0], r_for_blocked, coder.m_f), jnp.int32
         )
         return FlashBlockedBackend(coder, codes, nbr_codes)
-    raise ValueError(f"unknown backend kind {kind!r}")
+    raise ValueError(
+        f"unknown backend kind {kind!r}; valid kinds: {', '.join(KINDS)}"
+    )

@@ -71,6 +71,7 @@ def beam_search(
     width: int = 1,
     max_iters: int | None = None,
     visited0: jax.Array | None = None,
+    banned: jax.Array | None = None,
 ) -> BeamResult:
     """Greedy multi-expansion beam search over one adjacency (one layer).
 
@@ -82,6 +83,12 @@ def beam_search(
     width      W — vertices expanded per iteration (1 = classic beam).
     max_iters  iteration cap; defaults to ⌈(4·ef+8)/W⌉ so the total
                expansion budget is width-independent.
+    banned     optional (n,) bool tombstone mask (DESIGN.md §8): banned
+               vertices participate in traversal exactly as before (they are
+               expanded, their adjacency rows are followed, their distances
+               are evaluated and counted) but are struck from the returned
+               beam — deleted vertices stay navigable without ever being
+               results.
     """
     n, r = adjacency.shape
     e = entry_ids.shape[0]
@@ -165,6 +172,15 @@ def beam_search(
         cond, body, state
     )
     del visited, beam_exp, it
+    if banned is not None:
+        # Strike tombstoned vertices from the results (traversal above was
+        # oblivious to the mask, so counters and expansion order are the
+        # same as an unmasked search).
+        dead = (beam_ids >= 0) & banned[jnp.maximum(beam_ids, 0)]
+        beam_d = jnp.where(dead, INF, beam_d)
+        beam_ids = jnp.where(dead, -1, beam_ids)
+        order = jnp.argsort(beam_d)
+        beam_ids, beam_d = beam_ids[order], beam_d[order]
     return BeamResult(ids=beam_ids, dists=beam_d, n_hops=nh, n_dists=nd)
 
 
@@ -177,6 +193,11 @@ def greedy_descent(
     while it improves; a beam of 1 without a visited set. Distance
     evaluations are counted (``n_dists``) so callers can fold the descent
     cost into their accounting — previously these were silently dropped.
+
+    Tombstones (DESIGN.md §8) need no mask here: the descent's output only
+    seeds the next layer's search and is never user-visible, and tombstoned
+    vertices are by design fully traversable — result filtering happens in
+    :func:`beam_search` via ``banned``.
     """
 
     def cond(state):

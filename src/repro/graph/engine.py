@@ -116,21 +116,28 @@ def sample_levels(
     return np.minimum(lv, max_layers - 1)
 
 
-def prefix_entries(levels: np.ndarray, batch: int) -> np.ndarray:
+def prefix_entries(
+    levels: np.ndarray, batch: int, *, start: int = 0, entry0: int = -1
+) -> np.ndarray:
     """Host-side: entry point (argmax level over the inserted prefix) per batch.
 
-    Batch b inserts ids [b·P, (b+1)·P); its searches start from the highest-
-    level vertex among ids < b·P — exactly hnswlib's enter-point maintenance,
-    precomputed because insertion order is known up front.
+    Batch b inserts ids [start + b·P, start + (b+1)·P); its searches start
+    from the highest-level vertex among all earlier ids — exactly hnswlib's
+    enter-point maintenance, precomputed because insertion order is known up
+    front. A fresh build uses the defaults (start=0, no prior entry);
+    dynamic growth (``repro.index.AnnIndex.add``, DESIGN.md §8) passes the
+    old size as ``start`` and the live graph's entry as ``entry0`` so the
+    plan continues from the built prefix instead of rescanning it.
     """
     n = len(levels)
-    nb = -(-n // batch)
+    nb = -(-(n - start) // batch)
     ent = np.full((nb,), -1, np.int64)
-    best, best_lv = -1, -1
-    idx = 0
+    best = int(entry0)
+    best_lv = int(levels[best]) if best >= 0 else -1
+    idx = start if best >= 0 else 0
     for b in range(nb):
-        start = b * batch
-        while idx < start:
+        bstart = start + b * batch
+        while idx < bstart:
             if levels[idx] > best_lv:
                 best_lv, best = int(levels[idx]), idx
             idx += 1
@@ -165,6 +172,9 @@ def reverse_pass(
 
     Sequential over the P inserts (they may touch the same destination y);
     vectorized over each insert's ≤R destinations (distinct within one list).
+    Destinations that already list x are skipped — a no-op for fresh builds
+    (x has no incoming edges yet) that makes *re*-insertion of an existing
+    vertex (``repro.index`` compaction, DESIGN.md §8) duplicate-free.
     """
     p, r = sel_ids.shape
 
@@ -176,6 +186,7 @@ def reverse_pass(
         safe = jnp.where(ok, nbrs, 0)
         ex_ids = adj[safe]  # (r, r)
         ex_d = adj_d[safe]
+        ok &= ~jnp.any(ex_ids == x, axis=1)  # y already lists x -> skip
         counts = jnp.sum(ex_ids >= 0, axis=1)  # (r,)
         # Room left → plain append at the first free slot (hnswlib line 7).
         slot = jnp.arange(r)[None, :] == counts[:, None]
@@ -200,6 +211,26 @@ def reverse_pass(
         return adj, adj_d, backend
 
     return jax.lax.fori_loop(0, p, body, (adj, adj_d, backend))
+
+
+def _drop_self(cand_ids, cand_d, new_ids):
+    """Strike each inserted vertex from its own candidate list.
+
+    A fresh build can never acquire the vertex being inserted (it has no
+    incoming edges yet), so this is bit-exact no-op there — the stable
+    argsort of an already-sorted list is the identity. Re-inserting an
+    EXISTING vertex (``repro.index`` compaction, DESIGN.md §8) does find
+    itself at distance ~0, and without this mask would select itself as its
+    own closest neighbor.
+    """
+    self_hit = cand_ids == new_ids[:, None]
+    d = jnp.where(self_hit, INF, cand_d)
+    ids = jnp.where(self_hit, -1, cand_ids)
+    order = jnp.argsort(d, axis=1)
+    return (
+        jnp.take_along_axis(ids, order, axis=1),
+        jnp.take_along_axis(d, order, axis=1),
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -290,7 +321,8 @@ class BuildEngine:
             res = self.acquire(backend, qctx, adj_l, eps)
             acct = acct.add_beam(res)
             do = (lv >= l) & mask
-            sel = self.select(backend, res.ids, res.dists, r=params.r_upper)
+            cand_ids, cand_d = _drop_self(res.ids, res.dists, new_ids)
+            sel = self.select(backend, cand_ids, cand_d, r=params.r_upper)
             sel_ids = jnp.where(do[:, None], sel.ids, -1)
             sel_d = jnp.where(do[:, None], sel.dists, INF)
             adj_l, adj_ld, backend = self.commit_forward(
@@ -307,7 +339,8 @@ class BuildEngine:
         # ---- base layer --------------------------------------------------
         res = self.acquire(backend, qctx, adj0, eps)
         acct = acct.add_beam(res)
-        sel = self.select(backend, res.ids, res.dists, r=params.r_base)
+        cand_ids, cand_d = _drop_self(res.ids, res.dists, new_ids)
+        sel = self.select(backend, cand_ids, cand_d, r=params.r_base)
         sel_ids = jnp.where(mask[:, None], sel.ids, -1)
         sel_d = jnp.where(mask[:, None], sel.dists, INF)
         adj0, adj0_d, backend = self.commit_forward(

@@ -128,13 +128,16 @@ def search_hnsw(
     max_layers: int | None = None,
     width: int = 1,
     rerank_vectors: jax.Array | None = None,
+    banned: jax.Array | None = None,
 ) -> SearchResult:
     """Layered beam search; optional exact rerank on original vectors.
 
     ``max_layers`` defaults to the layer count the index was actually built
     with (``adj_up.shape[0] + 1``) — passing it is only needed to search a
     shallower prefix of the hierarchy. ``n_dists`` counts every distance
-    evaluation, including the upper-layer greedy descent.
+    evaluation, including the upper-layer greedy descent. ``banned`` is the
+    (n,) tombstone mask of DESIGN.md §8: tombstoned vertices stay traversable
+    but are never returned.
     """
     backend = index.backend
     n_layers = index.adj_up.shape[0] + 1 if max_layers is None else max_layers
@@ -148,7 +151,8 @@ def search_hnsw(
             ep = desc.node
             nd = nd + desc.n_dists
         res = beam_search(
-            backend, qctx, index.adj0, ep[None], ef=ef_search, width=width
+            backend, qctx, index.adj0, ep[None], ef=ef_search, width=width,
+            banned=banned,
         )
         nd = nd + res.n_dists
         if rerank_vectors is not None:

@@ -1,0 +1,623 @@
+"""`repro.index` — the unified ANN index facade (DESIGN.md §8).
+
+The paper motivates Flash with indexing time becoming critical under
+"dynamic index maintenance demand"; this module is the repo's answer to that
+demand. One registry-backed type, :class:`AnnIndex`, fronts every graph
+algorithm (HNSW / Vamana / NSG) over every distance backend
+(``graph.backends.kinds()``), with one ``SearchResult`` shape for flat and
+layered graphs — and, the new capability, **in-place maintenance**:
+
+    index = AnnIndex.build(data, algo="hnsw", backend="flash_blocked")
+    res   = index.search(queries, k=10, ef=96)        # one result shape
+    index.add(new_vectors)      # grow the FROZEN graph: no coder refit,
+                                # no rebuild — batch re-insertion through
+                                # BuildEngine.insert_batch (A1's model)
+    index.delete(ids)           # tombstone: traversable, never returned
+    index.compact()             # purge tombstones + rewire around them
+
+Why this shape (DESIGN.md §8):
+
+  * ``add`` is exactly one more synchronous batch of the same build program
+    the index was constructed with — the batch-synchronous insertion model
+    (A1) makes incremental growth *free*: an add batch against the frozen
+    current graph is indistinguishable from the next batch of the original
+    build. The distance backend grows through ``backend.extend`` (codes for
+    the new vectors under the frozen coder; for the Flash blocked layout
+    also fresh mirror rows that fill in as edges commit).
+  * ``delete`` tombstones: the mask is honored by ``beam_search`` at result
+    extraction, so deleted vertices keep carrying traffic (removing them
+    eagerly would disconnect the graph) but are never returned.
+  * ``compact`` purges tombstones from every adjacency row and batch
+    re-inserts the affected vertices — again the same engine program, made
+    safe for re-insertion by the engine's self-exclusion and
+    already-present reverse-edge guards.
+
+New algorithms plug in by registering an :class:`AlgoSpec`; the facade never
+reaches into algorithm internals (no underscore-private imports — lint-
+enforced in tests).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph import backends as bk
+from repro.graph.engine import (
+    BuildEngine,
+    BuildParams,
+    BuildStats,
+    CostAccount,
+    prefix_entries,
+    sample_levels,
+)
+from repro.graph.hnsw import SearchResult, build_hnsw, search_hnsw
+from repro.graph.nsg import build_nsg
+from repro.graph.vamana import build_vamana, search_flat_result
+
+__all__ = [
+    "AlgoSpec",
+    "AnnIndex",
+    "SearchResult",
+    "algos",
+    "grow_index",
+    "register_algo",
+]
+
+
+# ---------------------------------------------------------------------------
+# Algorithm registry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AlgoSpec:
+    """One pluggable graph algorithm.
+
+    builder(data, backend, params, seed, **algo_kwargs) -> (graph, stats)
+    where ``graph`` is the algorithm's index pytree (HNSWIndex for layered,
+    FlatIndex otherwise) and ``stats`` is anything with n_dists/n_hops (or
+    None). ``layered`` selects the search routine and whether levels are
+    sampled for added vectors.
+    """
+
+    name: str
+    layered: bool
+    default_params: BuildParams
+    builder: Callable[..., tuple]
+
+
+_REGISTRY: dict[str, AlgoSpec] = {}
+
+
+def register_algo(spec: AlgoSpec) -> AlgoSpec:
+    """Register (or replace) an algorithm; returns the spec for chaining."""
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def algos() -> tuple[str, ...]:
+    """Registered algorithm names, registration order."""
+    return tuple(_REGISTRY)
+
+
+def _build_hnsw_adapter(data, backend, params, seed, *, levels=None):
+    return build_hnsw(data, backend, params=params, seed=seed, levels=levels)
+
+
+def _build_vamana_adapter(data, backend, params, seed, *, two_pass=True):
+    del seed  # vamana's schedule is deterministic (medoid entry)
+    return build_vamana(data, backend, params=params, two_pass=two_pass)
+
+
+def _build_nsg_adapter(data, backend, params, seed, *, knn_k=16):
+    del seed
+    index, _knn_adj = build_nsg(data, backend, params=params, knn_k=knn_k)
+    return index, None
+
+
+register_algo(AlgoSpec(
+    name="hnsw", layered=True,
+    default_params=BuildParams(), builder=_build_hnsw_adapter,
+))
+register_algo(AlgoSpec(
+    name="vamana", layered=False,
+    default_params=BuildParams(alpha=1.2), builder=_build_vamana_adapter,
+))
+register_algo(AlgoSpec(
+    name="nsg", layered=False,
+    default_params=BuildParams(), builder=_build_nsg_adapter,
+))
+
+# Exact-type -> make_backend kind, for prebuilt backend instances (subclass
+# lookup would misfile FlashBlockedBackend under "flash").
+_KIND_OF_TYPE: dict[type, str] = {
+    bk.FP32Backend: "fp32",
+    bk.PCABackend: "pca",
+    bk.SQBackend: "sq",
+    bk.PQBackend: "pq",
+    bk.FlashBackend: "flash",
+    bk.FlashBlockedBackend: "flash_blocked",
+}
+
+
+# ---------------------------------------------------------------------------
+# The device-side growth program (shared by add() and compact())
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("engine",))
+def grow_index(
+    engine: BuildEngine, data, adj0, adj0_d, adj_up, adj_up_d, backend,
+    levels, ids, entries, mask,
+):
+    """Run ``engine.insert_batch`` over a (nb, P) id schedule against an
+    existing graph — the whole of dynamic maintenance, expressed as more
+    batches of the original build program (DESIGN.md §8).
+
+    ids/mask (nb, P): padded id batches; entries (nb,): per-batch entry
+    point. Returns the updated graph arrays, backend, and a CostAccount of
+    the growth's distance evaluations.
+    """
+
+    def body(b, carry):
+        adj0, adj0_d, adj_up, adj_up_d, backend, acct = carry
+        return engine.insert_batch(
+            data, adj0, adj0_d, adj_up, adj_up_d, backend, levels,
+            ids[b], entries[b], mask[b], acct=acct,
+        )
+
+    return jax.lax.fori_loop(
+        0, ids.shape[0], body,
+        (adj0, adj0_d, adj_up, adj_up_d, backend, CostAccount.zero()),
+    )
+
+
+def _batch_schedule(ids: np.ndarray, batch: int):
+    """Pad a flat id list to full (nb, P) batches + validity mask."""
+    n = len(ids)
+    nb = -(-n // batch)
+    pad = nb * batch - n
+    ids_p = np.concatenate([ids, np.full(pad, ids[-1] if n else 0, np.int32)])
+    mask = np.concatenate([np.ones(n, bool), np.zeros(pad, bool)])
+    return ids_p.reshape(nb, batch).astype(np.int32), mask.reshape(nb, batch)
+
+
+def _purge_rows(adj: np.ndarray, adj_d: np.ndarray, dead: np.ndarray):
+    """Drop dead ids from every row (shift survivors left, order kept) and
+    clear dead vertices' own rows. Returns (adj', adj_d', affected) where
+    affected marks live rows that lost at least one neighbor."""
+    keep = (adj >= 0) & ~dead[np.maximum(adj, 0)]
+    affected = ((adj >= 0) & ~keep).any(axis=1) & ~dead
+    order = np.argsort(~keep, axis=1, kind="stable")  # kept slots first
+    adj2 = np.take_along_axis(np.where(keep, adj, -1), order, axis=1)
+    adj_d2 = np.take_along_axis(np.where(keep, adj_d, np.inf), order, axis=1)
+    adj2[dead] = -1
+    adj_d2[dead] = np.inf
+    return adj2, adj_d2.astype(np.float32), affected
+
+
+def _as_stats(raw) -> BuildStats | None:
+    if raw is None:
+        return None
+    return BuildStats(
+        n_dists=jnp.asarray(raw.n_dists, jnp.float32),
+        n_hops=jnp.asarray(raw.n_hops, jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# The facade
+# ---------------------------------------------------------------------------
+
+
+class AnnIndex:
+    """One index API over every registered algorithm and backend.
+
+    Construct through :meth:`build`; the instance owns the algorithm's graph
+    pytree, the raw vectors (for exact rerank), and the tombstone mask. Ids
+    are stable insertion-order positions: the i-th vector ever given to the
+    index (build data first, then ``add`` batches in order) is id i, and
+    deletions never renumber.
+    """
+
+    def __init__(self, *, spec, params, graph, data, backend_kind, seed,
+                 stats=None):
+        self._spec = spec
+        self.params = params
+        self._graph = graph
+        self._data = data
+        self.backend_kind = backend_kind
+        self._seed = seed
+        self._n_adds = 0
+        self._tombs = np.zeros(int(data.shape[0]), bool)
+        self._retired = np.zeros(int(data.shape[0]), bool)
+        self._banned_dev = None  # device copy of _tombs, built lazily
+        self.last_stats = stats
+
+    # ---- construction ---------------------------------------------------
+
+    @classmethod
+    def build(
+        cls,
+        data,
+        *,
+        algo: str = "hnsw",
+        backend: str | Any = "flash_blocked",
+        params: BuildParams | None = None,
+        seed: int = 0,
+        backend_kwargs: dict | None = None,
+        **algo_kwargs,
+    ) -> "AnnIndex":
+        """Build an index over ``data``.
+
+        algo      one of :func:`algos` (``hnsw`` | ``vamana`` | ``nsg``).
+        backend   a ``graph.backends.kinds()`` name (the coder is fitted on
+                  ``data`` with ``backend_kwargs``) or a prebuilt backend
+                  instance (then ``backend_kwargs`` must be empty).
+        params    BuildParams; defaults to the algorithm's registered set.
+        algo_kwargs  forwarded to the algorithm builder (e.g. ``knn_k`` for
+                  nsg, ``two_pass`` for vamana, ``levels`` for hnsw).
+        """
+        spec = _REGISTRY.get(algo)
+        if spec is None:
+            raise ValueError(
+                f"unknown algo {algo!r}; registered: {', '.join(algos())}"
+            )
+        data = jnp.asarray(data, jnp.float32)
+        params = spec.default_params if params is None else params
+        if isinstance(backend, str):
+            if backend not in bk.kinds():
+                raise ValueError(
+                    f"unknown backend kind {backend!r}; valid kinds: "
+                    f"{', '.join(bk.kinds())}"
+                )
+            kw = dict(backend_kwargs or {})
+            if backend == "flash_blocked":
+                kw.setdefault("r_for_blocked", params.r_base)
+            be = bk.make_backend(backend, data, jax.random.PRNGKey(seed), **kw)
+            kind = backend
+        else:
+            if backend_kwargs:
+                raise ValueError(
+                    "backend_kwargs only apply when backend is a kind "
+                    "string; got a prebuilt backend instance"
+                )
+            be = backend
+            kind = _KIND_OF_TYPE.get(type(backend), "custom")
+        graph, raw_stats = spec.builder(data, be, params, seed, **algo_kwargs)
+        return cls(
+            spec=spec, params=params, graph=graph, data=data,
+            backend_kind=kind, seed=seed, stats=_as_stats(raw_stats),
+        )
+
+    # ---- introspection --------------------------------------------------
+
+    @property
+    def algo(self) -> str:
+        return self._spec.name
+
+    @property
+    def graph(self):
+        """The underlying algorithm index pytree (HNSWIndex / FlatIndex)."""
+        return self._graph
+
+    @property
+    def backend(self):
+        return self._graph.backend
+
+    @property
+    def data(self) -> jax.Array:
+        """Raw vectors in id order (the rerank corpus)."""
+        return self._data
+
+    @property
+    def n(self) -> int:
+        """Total id slots ever allocated (including tombstoned/retired)."""
+        return int(self._data.shape[0])
+
+    @property
+    def n_active(self) -> int:
+        return int(self.n - (self._tombs | self._retired).sum())
+
+    @property
+    def deleted_ids(self) -> np.ndarray:
+        return np.nonzero(self._tombs)[0]
+
+    def __len__(self) -> int:
+        return self.n
+
+    def __repr__(self) -> str:
+        return (
+            f"AnnIndex(algo={self.algo!r}, backend={self.backend_kind!r}, "
+            f"n={self.n}, active={self.n_active})"
+        )
+
+    # ---- search ---------------------------------------------------------
+
+    def search(
+        self,
+        queries,
+        k: int = 10,
+        *,
+        ef: int = 64,
+        width: int = 1,
+        rerank: bool = True,
+    ) -> SearchResult:
+        """Batched top-k search; one result shape for every algorithm.
+
+        rerank=True re-scores the beam on the stored raw vectors (exact
+        squared L2) — the paper's §3.3.6 pipeline and the right default for
+        every compact-code backend; pass False to stay on backend-scale
+        distances. ``ef`` is clamped to at least ``k``.
+        """
+        queries = jnp.asarray(queries, jnp.float32)
+        single = queries.ndim == 1
+        if single:
+            queries = queries[None]
+        ef = max(ef, k)
+        rr = self._data if rerank else None
+        if self._banned_dev is None and self._tombs.any():
+            self._banned_dev = jnp.asarray(self._tombs)
+        banned = self._banned_dev
+        if self._spec.layered:
+            res = search_hnsw(
+                self._graph, queries, k=k, ef_search=ef, width=width,
+                rerank_vectors=rr, banned=banned,
+            )
+        else:
+            res = search_flat_result(
+                self._graph, queries, k=k, ef_search=ef, width=width,
+                rerank_vectors=rr, banned=banned,
+            )
+        if single:
+            res = SearchResult(
+                ids=res.ids[0], dists=res.dists[0], n_dists=res.n_dists
+            )
+        return res
+
+    # ---- dynamic maintenance -------------------------------------------
+
+    def _maint_params(self) -> BuildParams:
+        """Engine params for maintenance: flat algorithms insert as a
+        single-layer build regardless of the user's max_layers."""
+        if self._spec.layered:
+            return self.params
+        return dataclasses.replace(self.params, max_layers=1)
+
+    def _graph_arrays(self):
+        """(adj0, adj0_d, adj_up, adj_up_d) in engine layout; flat graphs
+        get a zero-length upper stack."""
+        g = self._graph
+        if self._spec.layered:
+            return g.adj0, g.adj0_d, g.adj_up, g.adj_up_d
+        params = self._maint_params()
+        n = g.adj.shape[0]
+        adj_up = jnp.zeros((0, n, params.r_upper), jnp.int32)
+        adj_up_d = jnp.zeros((0, n, params.r_upper), jnp.float32)
+        return g.adj, g.adj_d, adj_up, adj_up_d
+
+    def add(self, new_vectors) -> BuildStats:
+        """Insert a batch of vectors into the existing frozen graph.
+
+        No rebuild, no coder refit: the backend grows via
+        ``backend.extend`` (new codes under the frozen coder) and the new
+        vertices run through ``BuildEngine.insert_batch`` exactly like the
+        next batches of the original build (DESIGN.md §8). Returns the
+        growth's build stats (distance evaluations, hops); new ids are
+        ``range(old_n, old_n + m)`` in input order.
+
+        Cost note: ``grow_index`` is shape-specialized, so an add with a new
+        (n, m) pair pays one XLA trace+compile; steady-state pipelines
+        should batch adds (or keep batch sizes uniform) to amortize it.
+        """
+        new = jnp.asarray(new_vectors, jnp.float32)
+        if new.ndim == 1:
+            new = new[None]
+        if new.shape[-1] != self._data.shape[1]:
+            raise ValueError(
+                f"dim mismatch: index is d={self._data.shape[1]}, "
+                f"got d={new.shape[-1]}"
+            )
+        m = int(new.shape[0])
+        zero = BuildStats(n_dists=jnp.float32(0), n_hops=jnp.float32(0))
+        if m == 0:
+            return zero
+        n_old = self.n
+        params = self._maint_params()
+        g = self._graph
+        self._n_adds += 1
+
+        # Levels + per-batch entry plan (prefix_entries continued from the
+        # built prefix, seeded with the live graph's entry point).
+        if self._spec.layered:
+            lv_old = np.asarray(g.levels)
+            lv_new = sample_levels(
+                self._seed + 7919 * self._n_adds, m,
+                r_upper=params.r_upper, max_layers=params.max_layers,
+            )
+            levels_all = np.concatenate([lv_old, lv_new]).astype(np.int32)
+        else:
+            levels_all = np.zeros(n_old + m, np.int32)
+        cur = int(g.entry)
+        ent = prefix_entries(
+            levels_all, params.batch, start=n_old, entry0=cur
+        )
+        # Final entry: a new vertex displaces the current entry only if it
+        # strictly out-levels it (ties keep the incumbent; retired vertices
+        # have level 0 and can never win a strict comparison).
+        cand = int(np.argmax(levels_all))
+        best = cand if levels_all[cand] > levels_all[cur] else cur
+
+        ids, mask = _batch_schedule(
+            np.arange(n_old, n_old + m, dtype=np.int32), params.batch
+        )
+
+        # Grow the graph arrays and the backend, then run the insert loop.
+        adj0, adj0_d, adj_up, adj_up_d = self._graph_arrays()
+        r_base = adj0.shape[1]
+        adj0 = jnp.concatenate([adj0, jnp.full((m, r_base), -1, jnp.int32)])
+        adj0_d = jnp.concatenate(
+            [adj0_d, jnp.full((m, r_base), jnp.inf, adj0_d.dtype)]
+        )
+        l_up, _, r_up = adj_up.shape
+        adj_up = jnp.concatenate(
+            [adj_up, jnp.full((l_up, m, r_up), -1, jnp.int32)], axis=1
+        )
+        adj_up_d = jnp.concatenate(
+            [adj_up_d, jnp.full((l_up, m, r_up), jnp.inf, adj_up_d.dtype)],
+            axis=1,
+        )
+        backend = g.backend.extend(new)
+        data_all = jnp.concatenate([self._data, new])
+
+        adj0, adj0_d, adj_up, adj_up_d, backend, acct = grow_index(
+            BuildEngine(params), data_all, adj0, adj0_d, adj_up, adj_up_d,
+            backend, jnp.asarray(levels_all), jnp.asarray(ids),
+            jnp.asarray(ent), jnp.asarray(mask),
+        )
+
+        if self._spec.layered:
+            self._graph = g._replace(
+                adj0=adj0, adj0_d=adj0_d, adj_up=adj_up, adj_up_d=adj_up_d,
+                levels=jnp.asarray(levels_all),
+                entry=jnp.int32(best), backend=backend,
+            )
+        else:
+            # Medoid drift from growth is accepted (recomputed on compact).
+            self._graph = g._replace(adj=adj0, adj_d=adj0_d, backend=backend)
+        self._data = data_all
+        self._tombs = np.concatenate([self._tombs, np.zeros(m, bool)])
+        self._retired = np.concatenate([self._retired, np.zeros(m, bool)])
+        self._banned_dev = None  # mask length changed
+        stats = BuildStats(
+            n_dists=acct.n_dists.astype(jnp.float32), n_hops=acct.n_hops
+        )
+        self.last_stats = stats
+        return stats
+
+    def delete(self, ids) -> int:
+        """Tombstone vertices: still traversable (they keep carrying search
+        traffic so the graph stays connected) but never returned by
+        :meth:`search`. Returns the number newly tombstoned; idempotent."""
+        ids = np.atleast_1d(np.asarray(ids, np.int64))
+        if ids.size == 0:
+            return 0
+        if ids.min() < 0 or ids.max() >= self.n:
+            raise IndexError(
+                f"delete ids must be in [0, {self.n}); got "
+                f"[{ids.min()}, {ids.max()}]"
+            )
+        newly = int((~(self._tombs | self._retired)[ids]).sum())
+        self._tombs[ids] = True
+        self._banned_dev = None
+        return newly
+
+    def compact(self) -> BuildStats:
+        """Physically rewire around tombstones.
+
+        Purges tombstoned ids from every adjacency row (and the Flash
+        blocked mirror), clears their own rows, then batch re-inserts every
+        vertex that lost a neighbor through the same engine program as
+        :meth:`add` — tombstoned slots become permanently retired
+        (disconnected; ids are never reused). Returns the rewiring's build
+        stats."""
+        zero = BuildStats(n_dists=jnp.float32(0), n_hops=jnp.float32(0))
+        if not self._tombs.any():
+            return zero
+        g = self._graph
+        params = self._maint_params()
+        dead = self._tombs.copy()
+        gone = dead | self._retired
+        active = ~gone
+
+        # Host-side purge of every layer's rows.
+        adj0, adj0_d, aff0 = _purge_rows(
+            np.asarray(g.adj0 if self._spec.layered else g.adj),
+            np.asarray(g.adj0_d if self._spec.layered else g.adj_d),
+            dead,
+        )
+        affected = aff0
+        up_layers = []
+        if self._spec.layered:
+            for l in range(g.adj_up.shape[0]):
+                a, d, aff = _purge_rows(
+                    np.asarray(g.adj_up[l]), np.asarray(g.adj_up_d[l]), dead
+                )
+                up_layers.append((a, d))
+                affected |= aff
+        affected &= active
+
+        # New entry point over the survivors.
+        if self._spec.layered:
+            levels = np.asarray(g.levels).copy()
+            levels[gone] = 0
+            entry = (
+                int(np.argmax(np.where(active, levels, -1)))
+                if active.any() else int(g.entry)
+            )
+        else:
+            levels = np.zeros(self.n, np.int32)
+            entry = int(g.entry)
+            if gone[entry] and active.any():
+                data_np = np.asarray(self._data)
+                mean = data_np[active].mean(axis=0)
+                d = ((data_np - mean) ** 2).sum(axis=1)
+                d[gone] = np.inf
+                entry = int(np.argmin(d))
+
+        adj0_j = jnp.asarray(adj0)
+        adj0_d_j = jnp.asarray(adj0_d)
+        if self._spec.layered:
+            adj_up_j = (
+                jnp.stack([jnp.asarray(a) for a, _ in up_layers])
+                if up_layers else g.adj_up[:0]
+            )
+            adj_up_d_j = (
+                jnp.stack([jnp.asarray(d) for _, d in up_layers])
+                if up_layers else g.adj_up_d[:0]
+            )
+        else:
+            adj_up_j = jnp.zeros((0, self.n, params.r_upper), jnp.int32)
+            adj_up_d_j = jnp.zeros((0, self.n, params.r_upper), jnp.float32)
+        # Resync the blocked neighbor-code mirror with the purged base layer
+        # (no-op hook for every other backend).
+        backend = g.backend.with_updated_edges(
+            jnp.arange(self.n, dtype=jnp.int32), adj0_j
+        )
+
+        acct_stats = zero
+        aff_ids = np.nonzero(affected)[0].astype(np.int32)
+        if aff_ids.size:
+            ids, mask = _batch_schedule(aff_ids, params.batch)
+            ent = np.full((ids.shape[0],), entry, np.int32)
+            adj0_j, adj0_d_j, adj_up_j, adj_up_d_j, backend, acct = grow_index(
+                BuildEngine(params), self._data, adj0_j, adj0_d_j, adj_up_j,
+                adj_up_d_j, backend, jnp.asarray(levels), jnp.asarray(ids),
+                jnp.asarray(ent), jnp.asarray(mask),
+            )
+            acct_stats = BuildStats(
+                n_dists=acct.n_dists.astype(jnp.float32), n_hops=acct.n_hops
+            )
+
+        if self._spec.layered:
+            self._graph = g._replace(
+                adj0=adj0_j, adj0_d=adj0_d_j, adj_up=adj_up_j,
+                adj_up_d=adj_up_d_j, levels=jnp.asarray(levels),
+                entry=jnp.int32(entry), backend=backend,
+            )
+        else:
+            self._graph = g._replace(
+                adj=adj0_j, adj_d=adj0_d_j, entry=jnp.int32(entry),
+                backend=backend,
+            )
+        self._retired |= dead
+        self._tombs = np.zeros(self.n, bool)
+        self._banned_dev = None
+        self.last_stats = acct_stats
+        return acct_stats

@@ -41,7 +41,14 @@ except AttributeError:  # jax 0.4.x
 from repro import core
 from repro.graph import backends as bk
 from repro.graph.beam import INF, beam_search
-from repro.graph.hnsw import HNSWIndex, HNSWParams, build_hnsw_jit, search_hnsw
+from repro.graph.hnsw import (
+    HNSWIndex,
+    HNSWParams,
+    SearchResult,
+    build_hnsw_jit,
+    search_hnsw,
+)
+from repro.graph.index import AnnIndex
 
 
 class SegmentedIndexes(NamedTuple):
@@ -194,6 +201,156 @@ def make_segmented_search_fn(
         )(index_stack, queries, id_offsets, seg_vectors)
 
     return search
+
+
+# ---------------------------------------------------------------------------
+# Per-segment facade with cross-segment maintenance (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+
+class SegmentedAnnIndex:
+    """S independent :class:`repro.index.AnnIndex` facades + a coordinator.
+
+    The dynamic-maintenance face of the distributed layer: each segment is a
+    full facade (so it can grow and tombstone in place), and this class owns
+    the cross-segment concerns — global id assignment (stable insertion
+    order across the whole collection), fan-out search with top-k merge,
+    and **add routing**: new vectors go to the segment whose build-time
+    centroid is nearest, i.e. growth preserves the locality the sharding
+    started with. Centroids are frozen at build (like the shared coder);
+    drift is absorbed by each segment's own maintenance.
+
+    The mesh deployment above (``make_segmented_build_fn``) keeps the
+    stacked/shard_map form for static fleets; this facade is the host-side
+    serving form where segments evolve independently.
+    """
+
+    def __init__(self, segments, centroids, global_of, locate):
+        self.segments = segments          # list[AnnIndex]
+        self._centroids = centroids       # (S, D) routing table (frozen)
+        self._global_of = global_of       # list[np int64]: local -> global
+        self._locate = locate             # np (N, 2): global -> (seg, local)
+
+    @classmethod
+    def build(
+        cls,
+        data_segs,
+        *,
+        algo: str = "hnsw",
+        backend: str = "flash",
+        params: HNSWParams | None = None,
+        seed: int = 0,
+        backend_kwargs: dict | None = None,
+        **algo_kwargs,
+    ) -> "SegmentedAnnIndex":
+        """data_segs: (S, n_s, D) array or list of per-segment (n_s, D)
+        arrays. Each segment fits its own coder (offline shared-coder
+        deployments should build per-segment ``AnnIndex`` objects themselves
+        and pass prebuilt backends)."""
+        segs = [jnp.asarray(s, jnp.float32) for s in data_segs]
+        segments, global_of, locate = [], [], []
+        next_gid = 0
+        for s, seg_data in enumerate(segs):
+            segments.append(AnnIndex.build(
+                seg_data, algo=algo, backend=backend, params=params,
+                seed=seed + s, backend_kwargs=backend_kwargs, **algo_kwargs,
+            ))
+            n_s = int(seg_data.shape[0])
+            global_of.append(np.arange(next_gid, next_gid + n_s, dtype=np.int64))
+            locate.extend((s, j) for j in range(n_s))
+            next_gid += n_s
+        centroids = jnp.stack([s.mean(axis=0) for s in segs])
+        return cls(segments, centroids, global_of, np.asarray(locate, np.int64))
+
+    @property
+    def n(self) -> int:
+        return int(self._locate.shape[0])
+
+    @property
+    def n_active(self) -> int:
+        return sum(s.n_active for s in self.segments)
+
+    def __len__(self) -> int:
+        return self.n
+
+    def search(
+        self, queries, k: int = 10, *, ef: int = 64, width: int = 1,
+        rerank: bool = True,
+    ) -> SearchResult:
+        """Fan out to every segment, merge global top-k (the coordinator).
+
+        rerank=True is the meaningful default here: quantized sums are only
+        comparison-valid within one coder, so a cross-segment merge needs
+        exact distances (DESIGN.md §5).
+        """
+        queries = jnp.asarray(queries, jnp.float32)
+        all_ids, all_d, nd = [], [], jnp.float32(0)
+        for s, seg in enumerate(self.segments):
+            res = seg.search(queries, k, ef=ef, width=width, rerank=rerank)
+            gids = jnp.asarray(self._global_of[s])
+            all_ids.append(jnp.where(
+                res.ids >= 0, gids[jnp.maximum(res.ids, 0)], -1
+            ))
+            all_d.append(jnp.where(res.ids >= 0, res.dists, INF))
+            nd = nd + jnp.asarray(res.n_dists, jnp.float32)
+        cat_ids = jnp.concatenate(all_ids, axis=1)  # (Q, S*k)
+        cat_d = jnp.concatenate(all_d, axis=1)
+        neg, pos = jax.lax.top_k(-cat_d, k)
+        return SearchResult(
+            ids=jnp.take_along_axis(cat_ids, pos, axis=1).astype(jnp.int32),
+            dists=-neg, n_dists=nd,
+        )
+
+    def add(self, new_vectors) -> np.ndarray:
+        """Route each new vector to the nearest-centroid segment and grow
+        that segment in place. Returns the global ids assigned (input
+        order)."""
+        new = jnp.asarray(new_vectors, jnp.float32)
+        if new.ndim == 1:
+            new = new[None]
+        d = jnp.sum(
+            (new[:, None, :] - self._centroids[None, :, :]) ** 2, axis=-1
+        )
+        route = np.asarray(jnp.argmin(d, axis=1))
+        m = int(new.shape[0])
+        gids = self.n + np.arange(m, dtype=np.int64)
+        new_locate = np.empty((m, 2), np.int64)
+        for s, seg in enumerate(self.segments):
+            rows = np.nonzero(route == s)[0]
+            if rows.size == 0:
+                continue
+            local0 = seg.n
+            seg.add(new[jnp.asarray(rows)])
+            self._global_of[s] = np.concatenate(
+                [self._global_of[s], gids[rows]]
+            )
+            new_locate[rows, 0] = s
+            new_locate[rows, 1] = local0 + np.arange(rows.size)
+        self._locate = np.concatenate([self._locate, new_locate])
+        return gids
+
+    def delete(self, global_ids) -> int:
+        """Tombstone by global id; returns the number newly tombstoned."""
+        gids = np.atleast_1d(np.asarray(global_ids, np.int64))
+        if gids.size == 0:
+            return 0
+        if gids.min() < 0 or gids.max() >= self.n:
+            raise IndexError(
+                f"global ids must be in [0, {self.n}); got "
+                f"[{gids.min()}, {gids.max()}]"
+            )
+        n_new = 0
+        loc = self._locate[gids]
+        for s, seg in enumerate(self.segments):
+            local = loc[loc[:, 0] == s, 1]
+            if local.size:
+                n_new += seg.delete(local)
+        return n_new
+
+    def compact(self) -> None:
+        """Compact every segment (purge + rewire, see AnnIndex.compact)."""
+        for seg in self.segments:
+            seg.compact()
 
 
 def search_segments_local(

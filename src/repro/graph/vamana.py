@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from repro.graph.beam import INF, beam_search
 from repro.graph.engine import BuildEngine, BuildParams, CostAccount
 from repro.graph.hnsw import HNSWParams  # noqa: F401 — canonical param alias
+from repro.graph.hnsw import SearchResult
 
 
 class FlatIndex(NamedTuple):
@@ -98,6 +99,43 @@ def build_vamana(
 
 
 @functools.partial(jax.jit, static_argnames=("k", "ef_search", "width"))
+def search_flat_result(
+    index: FlatIndex,
+    queries: jax.Array,
+    *,
+    k: int,
+    ef_search: int = 64,
+    width: int = 1,
+    rerank_vectors: jax.Array | None = None,
+    banned: jax.Array | None = None,
+) -> SearchResult:
+    """Beam search from the medoid + optional exact rerank.
+
+    The flat-graph counterpart of ``search_hnsw`` — same ``SearchResult``
+    shape (the ``repro.index`` facade relies on that), same ``banned``
+    tombstone semantics (traversable, never returned), and ``n_dists`` cost
+    accounting.
+    """
+    backend = index.backend
+
+    def one(q):
+        qctx = backend.prepare_query(q)
+        res = beam_search(
+            backend, qctx, index.adj, index.entry[None], ef=ef_search,
+            width=width, banned=banned,
+        )
+        if rerank_vectors is not None:
+            safe = jnp.maximum(res.ids, 0)
+            dv = rerank_vectors[safe] - q[None, :]
+            exact = jnp.where(res.ids >= 0, jnp.sum(dv * dv, -1), INF)
+            _, idx = jax.lax.top_k(-exact, k)
+            return res.ids[idx], exact[idx], res.n_dists
+        return res.ids[:k], res.dists[:k], res.n_dists
+
+    ids, dists, nd = jax.vmap(one)(queries)
+    return SearchResult(ids=ids, dists=dists, n_dists=jnp.sum(nd))
+
+
 def search_flat(
     index: FlatIndex,
     queries: jax.Array,
@@ -107,21 +145,11 @@ def search_flat(
     width: int = 1,
     rerank_vectors: jax.Array | None = None,
 ):
-    """Beam search from the medoid + optional exact rerank."""
-    backend = index.backend
-
-    def one(q):
-        qctx = backend.prepare_query(q)
-        res = beam_search(
-            backend, qctx, index.adj, index.entry[None], ef=ef_search, width=width
-        )
-        if rerank_vectors is not None:
-            safe = jnp.maximum(res.ids, 0)
-            dv = rerank_vectors[safe] - q[None, :]
-            exact = jnp.where(res.ids >= 0, jnp.sum(dv * dv, -1), INF)
-            _, idx = jax.lax.top_k(-exact, k)
-            return res.ids[idx], exact[idx]
-        return res.ids[:k], res.dists[:k]
-
-    ids, dists = jax.vmap(one)(queries)
-    return ids, dists
+    """Deprecated thin wrapper around :func:`search_flat_result`, kept for
+    call sites that unpack ``(ids, dists)``; new code should use the
+    ``repro.index`` facade (or ``search_flat_result`` directly)."""
+    res = search_flat_result(
+        index, queries, k=k, ef_search=ef_search, width=width,
+        rerank_vectors=rerank_vectors,
+    )
+    return res.ids, res.dists

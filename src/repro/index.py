@@ -1,0 +1,22 @@
+"""``repro.index`` — canonical import path for the unified ANN index facade.
+
+The implementation lives in :mod:`repro.graph.index` (it is part of the
+graph substrate); this alias keeps the public spelling short:
+
+    from repro.index import AnnIndex
+
+    index = AnnIndex.build(data, algo="hnsw", backend="flash_blocked")
+    res   = index.search(queries, k=10, ef=96)
+    index.add(new_vectors); index.delete(ids); index.compact()
+
+See DESIGN.md §8 for the dynamic-maintenance semantics.
+"""
+
+from repro.graph.index import (  # noqa: F401
+    AlgoSpec,
+    AnnIndex,
+    SearchResult,
+    algos,
+    grow_index,
+    register_algo,
+)

@@ -10,8 +10,11 @@ retrieval_cand scores 1 query against 10⁶ candidates. Three scorers:
     resident), ``flash_scan`` over the candidates' 4-bit codes, exact rerank
     of the top-k′. ~8 bytes/candidate instead of 4·D — the paper's CA stage
     as a serving kernel.
-  * ``search_index``  — full HNSW-Flash graph search (sub-linear; for when
-    even a linear compact scan is too slow).
+  * ``search_index``  — graph search through the ``repro.index`` facade
+    (sub-linear; for when even a linear compact scan is too slow). Because
+    the serving index is an ``AnnIndex``, the candidate store supports
+    dynamic maintenance — new items ``add()`` in, delisted items
+    ``delete()`` out — without a rebuild (DESIGN.md §8).
 """
 
 from __future__ import annotations
@@ -75,18 +78,31 @@ def score_flash(
 
 def search_index(
     query: jax.Array,
-    index: HNSWIndex,
+    index,
     item_embed: jax.Array,
     *,
     k: int,
     ef_search: int = 128,
     max_layers: int | None = None,
 ) -> RetrievalResult:
-    """Graph search (sub-linear) + exact rerank; distances → −scores."""
-    res = search_hnsw(
-        index, query, k=k, ef_search=ef_search, max_layers=max_layers,
-        rerank_vectors=item_embed,
-    )
+    """Graph search (sub-linear) + exact rerank; distances → −scores.
+
+    ``index`` is a ``repro.index.AnnIndex`` facade (canonical — reranks on
+    its stored vectors and honors tombstones); a bare ``HNSWIndex`` is still
+    accepted for legacy call sites and reranks on ``item_embed``.
+    """
+    if isinstance(index, HNSWIndex):  # legacy path
+        res = search_hnsw(
+            index, query, k=k, ef_search=ef_search, max_layers=max_layers,
+            rerank_vectors=item_embed,
+        )
+    else:
+        if max_layers is not None:
+            raise ValueError(
+                "max_layers only applies to legacy HNSWIndex inputs; the "
+                "AnnIndex facade always searches the depth it was built with"
+            )
+        res = index.search(query, k, ef=ef_search, rerank=True)
     return RetrievalResult(ids=res.ids, scores=-res.dists)
 
 

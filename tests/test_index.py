@@ -1,0 +1,276 @@
+"""Tests for the unified `repro.index` facade (DESIGN.md §8).
+
+Four contracts:
+  1. The facade is a faithful front: building/searching through ``AnnIndex``
+     gives exactly the direct ``build_hnsw``/``search_hnsw`` results, flat
+     algorithms return the same ``SearchResult`` shape, and the registries
+     (algos, backend kinds) raise informative errors.
+  2. ``add()`` — the ISSUE's acceptance bar: a 25% growth batch on a
+     flash_blocked HNSW index reaches recall@10 within 0.02 of a
+     from-scratch build over the union at < 50% of its distance
+     evaluations, keeps the blocked mirror consistent, and assigns stable
+     appended ids.
+  3. ``delete()`` tombstones are traversable but never returned, before and
+     after ``compact()``; compaction rewires around the holes.
+  4. Hygiene: no consumer of the facade imports underscore-private helpers.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import graph
+from repro.graph.hnsw import HNSWParams, build_hnsw, search_hnsw
+from repro.graph.knn import exact_knn, recall_at_k
+from repro.graph.segmented import SegmentedAnnIndex
+from repro.index import AnnIndex, SearchResult, algos
+
+PARAMS = HNSWParams(r_upper=8, r_base=16, ef=32, batch=16, max_layers=3)
+FLASH_KW = dict(d_f=32, m_f=16, l_f=4, h=8, kmeans_iters=10)
+N_BASE = 1600  # of small_data's 2000: the last 400 are the growth batch
+
+
+@pytest.fixture(scope="module")
+def truth(small_data):
+    data, queries = small_data
+    return exact_knn(queries, data, k=10)
+
+
+@pytest.fixture(scope="module")
+def flash_union(small_data):
+    """From-scratch flash_blocked build over the full vector set."""
+    data, _ = small_data
+    return AnnIndex.build(
+        data, algo="hnsw", backend="flash_blocked", params=PARAMS,
+        backend_kwargs=FLASH_KW,
+    )
+
+@pytest.fixture(scope="module")
+def flash_grown(small_data):
+    """Base build on the first N_BASE vectors + add() of the rest; returns
+    (index, add_stats)."""
+    data, _ = small_data
+    idx = AnnIndex.build(
+        data[:N_BASE], algo="hnsw", backend="flash_blocked", params=PARAMS,
+        backend_kwargs=FLASH_KW,
+    )
+    stats = idx.add(data[N_BASE:])
+    return idx, stats
+
+
+class TestFacade:
+    def test_registry(self):
+        assert set(algos()) >= {"hnsw", "vamana", "nsg"}
+        with pytest.raises(ValueError, match="vamana"):
+            AnnIndex.build(np.zeros((4, 2), np.float32), algo="nope")
+
+    def test_backend_kinds_helper(self):
+        assert graph.kinds() == graph.backends.KINDS
+        assert "flash_blocked" in graph.kinds()
+
+    def test_unknown_kind_error_lists_kinds(self, small_data):
+        data, _ = small_data
+        with pytest.raises(ValueError, match="flash_blocked"):
+            graph.make_backend("nope", data)
+        with pytest.raises(ValueError, match="flash_blocked"):
+            AnnIndex.build(data, backend="nope")
+
+    def test_fp32_rejects_coder_kwargs(self, small_data):
+        data, _ = small_data
+        with pytest.raises(ValueError, match="no coder options"):
+            graph.make_backend("fp32", data, d_f=16)
+
+    def test_facade_matches_direct_build(self, small_data, truth):
+        """AnnIndex is a front, not a fork: same graph, same results."""
+        data, queries = small_data
+        idx = AnnIndex.build(
+            data[:800], algo="hnsw", backend="fp32", params=PARAMS, seed=0
+        )
+        be = graph.make_backend("fp32", data[:800])
+        direct, _ = build_hnsw(data[:800], be, params=PARAMS, seed=0)
+        np.testing.assert_array_equal(
+            np.asarray(idx.graph.adj0), np.asarray(direct.adj0)
+        )
+        res_f = idx.search(queries, k=10, ef=64, rerank=False)
+        res_d = search_hnsw(direct, queries, k=10, ef_search=64)
+        np.testing.assert_array_equal(
+            np.asarray(res_f.ids), np.asarray(res_d.ids)
+        )
+
+    def test_flat_algo_same_result_shape(self, small_data, truth):
+        data, queries = small_data
+        idx = AnnIndex.build(
+            data[:800], algo="vamana", backend="fp32",
+            params=HNSWParams(r_upper=8, r_base=24, ef=64, batch=16, alpha=1.2),
+        )
+        res = idx.search(queries, k=10, ef=96)
+        assert isinstance(res, SearchResult)
+        assert res.ids.shape == (queries.shape[0], 10)
+        assert float(res.n_dists) > 0
+        t800, _ = exact_knn(queries, data[:800], k=10)
+        assert recall_at_k(res.ids, t800, 10) >= 0.85
+
+    def test_single_query_shape(self, small_data, flash_union):
+        data, queries = small_data
+        res = flash_union.search(queries[0], k=5, ef=32)
+        assert res.ids.shape == (5,)
+
+
+class TestAdd:
+    def test_acceptance_recall_and_cost(
+        self, small_data, truth, flash_union, flash_grown
+    ):
+        """ISSUE acceptance: 25% growth via add() — recall within 0.02 of a
+        full rebuild over the union, < 50% of its distance evaluations."""
+        data, queries = small_data
+        grown, add_stats = flash_grown
+        rec_full = recall_at_k(
+            flash_union.search(queries, k=10, ef=128).ids, truth[0], 10
+        )
+        rec_add = recall_at_k(
+            grown.search(queries, k=10, ef=128).ids, truth[0], 10
+        )
+        assert rec_add >= rec_full - 0.02, (rec_add, rec_full)
+        nd_add = float(add_stats.n_dists)
+        nd_full = float(flash_union.last_stats.n_dists)
+        assert nd_add < 0.5 * nd_full, (nd_add, nd_full)
+
+    def test_added_ids_stable_and_searchable(self, small_data, flash_grown):
+        """New vectors get appended ids and find themselves top-1."""
+        data, queries = small_data
+        grown, _ = flash_grown
+        assert grown.n == data.shape[0]
+        probes = jnp.asarray(data[N_BASE : N_BASE + 32])
+        res = grown.search(probes, k=1, ef=64)
+        hit = np.mean(
+            np.asarray(res.ids)[:, 0] == np.arange(N_BASE, N_BASE + 32)
+        )
+        assert hit >= 0.9
+
+    def test_blocked_mirror_consistent_after_add(self, flash_grown):
+        """The §3.3.4 neighbor-code mirror must track the grown adjacency."""
+        grown, _ = flash_grown
+        adj = np.asarray(grown.graph.adj0)
+        nbrc = np.asarray(grown.backend.nbr_codes)
+        codes = np.asarray(grown.backend.codes)
+        for v in range(0, grown.n, 89):
+            for slot, u in enumerate(adj[v]):
+                if u >= 0:
+                    np.testing.assert_array_equal(nbrc[v, slot], codes[u])
+
+    def test_flat_add(self, small_data):
+        data, queries = small_data
+        idx = AnnIndex.build(
+            data[:600], algo="vamana", backend="fp32",
+            params=HNSWParams(r_upper=8, r_base=24, ef=64, batch=16, alpha=1.2),
+        )
+        idx.add(data[600:800])
+        t800, _ = exact_knn(queries, data[:800], k=10)
+        res = idx.search(queries, k=10, ef=96)
+        assert recall_at_k(res.ids, t800, 10) >= 0.85
+
+    def test_add_dim_mismatch_raises(self, flash_grown):
+        grown, _ = flash_grown
+        with pytest.raises(ValueError, match="dim mismatch"):
+            grown.add(np.zeros((3, 7), np.float32))
+
+
+class TestDelete:
+    @pytest.fixture()
+    def fp32_idx(self, small_data):
+        data, _ = small_data
+        return AnnIndex.build(
+            data[:800], algo="hnsw", backend="fp32", params=PARAMS
+        )
+
+    def test_delete_compact_flow(self, small_data, fp32_idx):
+        """Tombstones are never returned; compact purges and rewires."""
+        data, queries = small_data
+        t800, _ = exact_knn(queries, data[:800], k=10)
+        victims = np.unique(np.asarray(t800[:, 0]))  # every true top-1
+        assert fp32_idx.delete(victims) == len(victims)
+        assert fp32_idx.delete(victims) == 0  # idempotent
+        res = fp32_idx.search(queries, k=10, ef=64)
+        assert not np.isin(np.asarray(res.ids), victims).any()
+        # recall against the surviving ground truth stays high
+        active = np.setdiff1d(np.arange(800), victims)
+        t_act, _ = exact_knn(queries, data[:800][active], k=10)
+        t_glob = jnp.asarray(active)[t_act]
+        assert recall_at_k(res.ids, t_glob, 10) >= 0.85
+
+        fp32_idx.compact()
+        assert fp32_idx.n_active == 800 - len(victims)
+        res2 = fp32_idx.search(queries, k=10, ef=64)
+        assert not np.isin(np.asarray(res2.ids), victims).any()
+        assert recall_at_k(res2.ids, t_glob, 10) >= 0.85
+        # retired vertices are fully unlinked
+        adj = np.asarray(fp32_idx.graph.adj0)
+        assert not np.isin(adj, victims).any()
+        assert (adj[victims] == -1).all()
+        # no duplicate neighbors introduced by the rewiring
+        for row in adj[::17]:
+            v = row[row >= 0]
+            assert len(np.unique(v)) == len(v)
+
+    def test_delete_validation(self, fp32_idx):
+        with pytest.raises(IndexError):
+            fp32_idx.delete([800])
+        assert fp32_idx.delete(np.array([], np.int64)) == 0
+
+
+class TestSegmented:
+    def test_build_search_add_delete(self, small_data, truth):
+        data, queries = small_data
+        S, ns = 4, 400
+        segs = np.asarray(data[: S * ns]).reshape(S, ns, -1)
+        seg_idx = SegmentedAnnIndex.build(
+            segs, algo="hnsw", backend="fp32", params=PARAMS
+        )
+        t_all, _ = exact_knn(queries, data[: S * ns], k=10)
+        res = seg_idx.search(queries, k=10, ef=64)
+        assert recall_at_k(res.ids, t_all, 10) >= 0.9
+
+        extra = np.asarray(data[S * ns : S * ns + 32])
+        gids = seg_idx.add(extra)
+        assert seg_idx.n == S * ns + 32
+        self_hit = np.mean(
+            np.asarray(seg_idx.search(extra, k=1, ef=64).ids)[:, 0] == gids
+        )
+        assert self_hit >= 0.9
+
+        assert seg_idx.delete(gids[:8]) == 8
+        res2 = seg_idx.search(extra[:8], k=5, ef=64)
+        assert not np.isin(np.asarray(res2.ids), gids[:8]).any()
+        seg_idx.compact()
+        res3 = seg_idx.search(extra[:8], k=5, ef=64)
+        assert not np.isin(np.asarray(res3.ids), gids[:8]).any()
+
+
+class TestFacadeHygiene:
+    def test_no_private_imports_around_the_facade(self):
+        """The facade composes public API only — and its consumers use its
+        public API only (no `from repro.graph.index import _x` anywhere,
+        no `from repro.graph.<mod> import _x` inside index.py)."""
+        root = pathlib.Path(__file__).resolve().parents[1]
+        private_from_index = re.compile(
+            r"from\s+repro(\.graph)?\.index\s+import\s+[^#\n]*(?<![\w])_[a-z]"
+        )
+        offenders = []
+        for base in ("src", "benchmarks", "examples"):
+            for py in (root / base).rglob("*.py"):
+                for line in py.read_text().splitlines():
+                    if private_from_index.search(line):
+                        offenders.append(f"{py}: {line.strip()}")
+        facade = (root / "src/repro/graph/index.py").read_text()
+        private_into_facade = re.compile(
+            r"from\s+repro\.graph\.\w+\s+import\s+[^#\n]*(?<![\w])_[a-z]"
+        )
+        for line in facade.splitlines():
+            if private_into_facade.search(line):
+                offenders.append(f"index.py: {line.strip()}")
+        assert not offenders, "\n".join(offenders)
