@@ -23,7 +23,6 @@ import numpy as np
 
 from benchmarks.common import DEFAULT_PARAMS, FLASH_KW, bench_data, emit, timeit
 from repro import graph
-from repro.graph.hnsw import build_hnsw, search_hnsw
 from repro.graph.knn import exact_knn, recall_at_k
 from repro.index import AnnIndex
 from repro.utils import tree_bytes
@@ -72,17 +71,17 @@ def width_sweep(widths=(1, 4, 8), *, n: int = 3000, d: int = 48) -> dict:
     out = {}
     for w in widths:
         params = dataclasses.replace(DEFAULT_PARAMS, width=w)
-        build = lambda: build_hnsw(data, be, params=params)  # noqa: B023
-        index, stats = build()
-        jax.block_until_ready(index.adj0)
+        build = lambda: AnnIndex.build(  # noqa: B023
+            data, algo="hnsw", backend=be, params=params
+        )
+        index = build()
+        jax.block_until_ready(index.graph.adj0)
         # single-core container: medians over several warm repeats, or the
         # per-width comparison drowns in scheduler/GC noise (the stats build
         # above already served as the warmup)
-        warm = timeit(lambda: build()[0].adj0, repeats=5, warmup=0)  # noqa: B023
-        n_dists = float(stats.n_dists)
-        res = search_hnsw(
-            index, queries, k=10, ef_search=96, rerank_vectors=data
-        )
+        warm = timeit(lambda: build().graph.adj0, repeats=5, warmup=0)  # noqa: B023
+        n_dists = float(index.last_stats.n_dists)
+        res = index.search(queries, k=10, ef=96)
         rec = float(recall_at_k(res.ids, tids, 10))
         out[str(w)] = dict(
             width=w,

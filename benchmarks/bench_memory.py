@@ -22,7 +22,7 @@ import numpy as np
 from benchmarks.common import DEFAULT_PARAMS, FLASH_KW, bench_data, emit, timeit
 from repro import graph
 from repro.graph.backends import FP32Backend
-from repro.graph.hnsw import build_hnsw
+from repro.index import AnnIndex
 
 
 @jax.tree_util.register_pytree_node_class
@@ -45,14 +45,15 @@ def run() -> dict:
 
     # --- profile: distance share of build time (Fig 1 vs Fig 15) ----------
     t_fp = timeit(
-        lambda: build_hnsw(data, graph.make_backend("fp32", data),
-                           params=DEFAULT_PARAMS)[0].adj0, repeats=1)
+        lambda: AnnIndex.build(data, algo="hnsw", backend="fp32",
+                               params=DEFAULT_PARAMS).graph.adj0, repeats=1)
     t_null = timeit(
-        lambda: build_hnsw(data, NullBackend(data),
-                           params=DEFAULT_PARAMS)[0].adj0, repeats=1)
+        lambda: AnnIndex.build(data, algo="hnsw", backend=NullBackend(data),
+                               params=DEFAULT_PARAMS).graph.adj0, repeats=1)
     be_fl = graph.make_backend("flash", data, key, **FLASH_KW)
     t_fl = timeit(
-        lambda: build_hnsw(data, be_fl, params=DEFAULT_PARAMS)[0].adj0,
+        lambda: AnnIndex.build(data, algo="hnsw", backend=be_fl,
+                               params=DEFAULT_PARAMS).graph.adj0,
         repeats=1)
     share_fp = max(t_fp - t_null, 0.0) / t_fp
     share_fl = max(t_fl - t_null, 0.0) / max(t_fl, 1e-9)
@@ -78,9 +79,9 @@ def run() -> dict:
         f"(Eqs.10-11, R={r})",
     )
     # per-build bytes touched by distance computations (beam stats × bytes)
-    _, stats = build_hnsw(data, graph.make_backend("fp32", data),
-                          params=DEFAULT_PARAMS)
-    nd = float(stats.n_dists)
+    idx_fp = AnnIndex.build(data, algo="hnsw", backend="fp32",
+                            params=DEFAULT_PARAMS)
+    nd = float(idx_fp.last_stats.n_dists)
     emit(
         "memory/build_bytes_touched", 0.0,
         f"fp32={nd * bytes_fp32 / 1e6:.0f}MB flash={nd * bytes_flash / 1e6:.0f}MB "

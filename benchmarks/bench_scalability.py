@@ -14,9 +14,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import DEFAULT_PARAMS, FLASH_KW, bench_data, emit, timeit
-from repro import graph
+from repro.graph import prefix_entries, sample_levels
 from repro.graph import segmented as seg
-from repro.graph.hnsw import build_hnsw, prefix_entries, sample_levels
+from repro.index import AnnIndex
 
 
 def run() -> dict:
@@ -25,16 +25,16 @@ def run() -> dict:
     for n in (1000, 2000, 4000, 8000):
         data, _ = bench_data(n=n)
         t_fp = timeit(
-            lambda d=data: build_hnsw(
-                d, graph.make_backend("fp32", d), params=DEFAULT_PARAMS
-            )[0].adj0,
+            lambda d=data: AnnIndex.build(
+                d, algo="hnsw", backend="fp32", params=DEFAULT_PARAMS
+            ).graph.adj0,
             repeats=1,
         )
         t_fl = timeit(
-            lambda d=data: build_hnsw(
-                d, graph.make_backend("flash", d, key, **FLASH_KW),
-                params=DEFAULT_PARAMS,
-            )[0].adj0,
+            lambda d=data: AnnIndex.build(
+                d, algo="hnsw", backend="flash", params=DEFAULT_PARAMS,
+                backend_kwargs=FLASH_KW,
+            ).graph.adj0,
             repeats=1,
         )
         out["volume"].append(dict(n=n, fp32=t_fp, flash=t_fl))

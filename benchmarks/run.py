@@ -3,12 +3,12 @@
 Default mode prints ``name,us_per_call,derived`` CSV rows
 (benchmarks.common.emit) for every bench module.
 
-``--json PATH`` instead runs the machine-readable perf-trajectory suite —
-the width sweep plus the dynamic-maintenance ``update`` section
-(add-throughput vs rebuild, post-delete recall; DESIGN.md §8) — and
-writes it to PATH (CI uploads ``BENCH_indexing.json``):
+``--json PATH`` instead runs a machine-readable suite and writes it to PATH;
+``--only`` picks which one (CI uploads both artifacts):
 
-    python benchmarks/run.py --json BENCH_indexing.json
+    python benchmarks/run.py --json BENCH_indexing.json   # width sweep +
+                                                          # dynamic update
+    python benchmarks/run.py --json BENCH_serving.json --only serving
 
   bench_indexing     Figures 6, 7 + Table 4   (build time / size / coding time)
   bench_search       Figures 8, 9             (QPS-Recall, QPS-ADR)
@@ -18,6 +18,9 @@ writes it to PATH (CI uploads ``BENCH_indexing.json``):
   bench_memory       Table 2 + Figures 1, 15  (NMA/bytes model, time profile)
   bench_params       Figures 3, 4, 16         (parameter sensitivity)
   bench_retrieval    beyond-paper             (retrieval_cand serving cell)
+  bench_serving      beyond-paper             (repro.serve: snapshot +
+                                              shape-bucketed QPS + batching
+                                              speedup, DESIGN.md §9)
 
 Roofline terms per (arch × shape) come from the dry-run, not this harness:
 ``python -m repro.launch.dryrun`` (see EXPERIMENTS.md §Roofline).
@@ -36,11 +39,35 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
 
 
 def run_json(path: str, only: str) -> None:
-    """Machine-readable perf snapshot (build-time trajectory across PRs)."""
+    """Machine-readable perf snapshot (build/serve trajectory across PRs)."""
+    if only == "serving":
+        from benchmarks import bench_serving
+
+        print("name,us_per_call,derived")
+        payload = bench_serving.serving_bench()
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"wrote {path}", file=sys.stderr)
+        if payload["engine"]["recompiles_after_warmup"]:
+            print(
+                "WARNING: serving engine recompiled after warmup "
+                f"({payload['engine']['recompiles_after_warmup']} traces)",
+                file=sys.stderr,
+            )
+        speedup = payload["batching"]["speedup"]
+        if speedup < bench_serving.SPEEDUP_BAR:
+            print(
+                f"WARNING: batched serving speedup {speedup:.2f}x below the "
+                f"{bench_serving.SPEEDUP_BAR:.0f}x acceptance bar",
+                file=sys.stderr,
+            )
+        return
     from benchmarks import bench_indexing
 
     if only != "indexing_widths":
-        raise SystemExit(f"unknown --only {only!r} (have: indexing_widths)")
+        raise SystemExit(
+            f"unknown --only {only!r} (have: indexing_widths, serving)"
+        )
     print("name,us_per_call,derived")
     payload = bench_indexing.width_sweep()
     payload["update"] = bench_indexing.update_bench()
@@ -78,6 +105,7 @@ def run_csv() -> None:
         bench_retrieval,
         bench_scalability,
         bench_search,
+        bench_serving,
         bench_simd,
     )
 
@@ -86,6 +114,7 @@ def run_csv() -> None:
     for mod in (
         bench_indexing, bench_search, bench_scalability, bench_simd,
         bench_generality, bench_memory, bench_params, bench_retrieval,
+        bench_serving,
     ):
         try:
             mod.run()

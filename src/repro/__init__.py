@@ -9,7 +9,8 @@ graph/       graph-index substrate (HNSW / Vamana / NSG, beam search, selection)
 models/      assigned architecture zoo (LMs, MoE, GNNs, recsys)
 data/        synthetic generators, neighbor sampler, sharded pipeline
 train/       optimizer, train loop, checkpointing, gradient compression
-serve/       decode + retrieval serving
+serve/       serving runtime: snapshots, shape-bucketed SearchEngine,
+             micro-batching scheduler, segment router (DESIGN.md §9)
 distributed/ sharding rules, pipeline parallelism
 configs/     one config per assigned architecture (+ the paper's own workloads)
 launch/      production mesh, multi-pod dry-run, train/serve/build drivers

@@ -31,17 +31,55 @@ L2, or a monotone affine image of it; never mixed across backends):
                                   blocked layout, empty mirror rows) — the
                                   hook ``repro.index.AnnIndex.add`` uses to
                                   grow an index without refitting anything.
+    state_dict()                -> dict[str, np.ndarray]  full serializable
+                                  state (codes + coder params, nested keys
+                                  dotted); ``from_state(state)`` rebuilds the
+                                  backend bit-exactly — the snapshot hooks
+                                  ``repro.serve`` persists an index through
+                                  (DESIGN.md §9).
 
 Backends are registered pytrees so whole index builds jit/vmap/shard cleanly.
 """
 
 from __future__ import annotations
 
+import typing
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import core
 from repro.kernels import ops
+
+
+def _flatten_state(prefix: str, val, out: dict) -> None:
+    """Recursively flatten a backend field into dotted-key numpy arrays.
+
+    Coders are NamedTuple pytrees of arrays (possibly nested, e.g.
+    ``SQCoder.params``), so structure is encoded purely in the key path."""
+    if isinstance(val, tuple) and hasattr(val, "_fields"):
+        for f in val._fields:
+            _flatten_state(f"{prefix}.{f}", getattr(val, f), out)
+    else:
+        out[prefix] = np.asarray(val)
+
+
+def _unflatten_state(prefix: str, state, nt_cls):
+    """Inverse of :func:`_flatten_state`; ``nt_cls`` names the NamedTuple
+    class to rebuild (None = plain array leaf). Nested NamedTuple fields are
+    discovered through resolved type hints."""
+    if nt_cls is None:
+        if prefix not in state:
+            raise KeyError(f"backend state missing array {prefix!r}")
+        return jnp.asarray(state[prefix])
+    hints = typing.get_type_hints(nt_cls)
+    vals = []
+    for f in nt_cls._fields:
+        hint = hints.get(f)
+        sub = hint if isinstance(hint, type) and hasattr(hint, "_fields") else None
+        vals.append(_unflatten_state(f"{prefix}.{f}", state, sub))
+    return nt_cls(*vals)
 
 
 def _l2(a: jax.Array, b: jax.Array) -> jax.Array:
@@ -51,6 +89,10 @@ def _l2(a: jax.Array, b: jax.Array) -> jax.Array:
 
 class _Base:
     """Shared default implementations."""
+
+    #: structured (NamedTuple coder) fields: name -> class; everything else
+    #: in ``_fields`` is a plain array. Subclasses override as needed.
+    _coder_fields: dict = {}
 
     def neighbor_dists_batch(self, qctx, nodes, ids):  # noqa: ARG002
         # Default: one batched gather-and-score; every backend's query_dists
@@ -64,6 +106,26 @@ class _Base:
         raise NotImplementedError(
             f"{type(self).__name__} does not support dynamic growth"
         )
+
+    def state_dict(self) -> dict:
+        """Full serializable state: flat ``{dotted_key: np.ndarray}``.
+
+        Covers codes AND fitted coder parameters, so
+        ``type(b).from_state(b.state_dict())`` reproduces identical
+        distances (the ``repro.serve`` snapshot contract)."""
+        out: dict = {}
+        for name in self._fields:
+            _flatten_state(name, getattr(self, name), out)
+        return out
+
+    @classmethod
+    def from_state(cls, state) -> "_Base":
+        """Rebuild a backend from :meth:`state_dict` output (bit-exact)."""
+        vals = [
+            _unflatten_state(name, state, cls._coder_fields.get(name))
+            for name in cls._fields
+        ]
+        return cls(*vals)
 
     def tree_flatten(self):
         children = tuple(getattr(self, name) for name in self._fields)
@@ -110,6 +172,7 @@ class PCABackend(_Base):
     """HNSW-PCA: exact L2 on the first d_PCA principal components."""
 
     _fields = ("coder", "z")
+    _coder_fields = {"coder": core.PCACoder}
 
     def __init__(self, coder: core.PCACoder, z: jax.Array):
         self.coder = coder
@@ -140,6 +203,7 @@ class SQBackend(_Base):
     """HNSW-SQ: quantized-domain scaled L2, no decode of either operand."""
 
     _fields = ("coder", "codes")
+    _coder_fields = {"coder": core.SQCoder}
 
     def __init__(self, coder: core.SQCoder, codes: jax.Array):
         self.coder = coder
@@ -170,6 +234,7 @@ class PQBackend(_Base):
     """HNSW-PQ: float ADC table per query (CA), SDC centroid tables (NS)."""
 
     _fields = ("coder", "codes")
+    _coder_fields = {"coder": core.PQCoder}
 
     def __init__(self, coder: core.PQCoder, codes: jax.Array):
         self.coder = coder
@@ -206,6 +271,7 @@ class FlashBackend(_Base):
     """
 
     _fields = ("coder", "codes")
+    _coder_fields = {"coder": core.FlashCoder}
 
     def __init__(self, coder: core.FlashCoder, codes: jax.Array):
         self.coder = coder
@@ -246,6 +312,7 @@ class FlashBlockedBackend(FlashBackend):
     """
 
     _fields = ("coder", "codes", "nbr_codes")
+    _coder_fields = {"coder": core.FlashCoder}
 
     def __init__(self, coder: core.FlashCoder, codes: jax.Array, nbr_codes: jax.Array):
         super().__init__(coder, codes)
@@ -300,6 +367,16 @@ class FlashBlockedBackend(FlashBackend):
 #: Valid ``make_backend`` kinds, in paper order. The ``repro.index`` facade
 #: registry validates against this same tuple (see :func:`kinds`).
 KINDS = ("fp32", "pq", "sq", "pca", "flash", "flash_blocked")
+
+#: Backend classes by class name — what ``repro.serve`` snapshot manifests
+#: record, so ``load`` can route state back to the right ``from_state``.
+CLASSES: dict[str, type] = {
+    c.__name__: c
+    for c in (
+        FP32Backend, PCABackend, SQBackend, PQBackend,
+        FlashBackend, FlashBlockedBackend,
+    )
+}
 
 
 def kinds() -> tuple[str, ...]:

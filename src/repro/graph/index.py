@@ -56,9 +56,9 @@ from repro.graph.engine import (
     prefix_entries,
     sample_levels,
 )
-from repro.graph.hnsw import SearchResult, build_hnsw, search_hnsw
+from repro.graph.hnsw import HNSWIndex, SearchResult, build_hnsw, search_hnsw
 from repro.graph.nsg import build_nsg
-from repro.graph.vamana import build_vamana, search_flat_result
+from repro.graph.vamana import FlatIndex, build_vamana, search_flat_result
 
 __all__ = [
     "AlgoSpec",
@@ -303,6 +303,16 @@ class AnnIndex:
         return self._spec.name
 
     @property
+    def layered(self) -> bool:
+        """Whether the graph is layered (HNSW-style) or flat (Vamana/NSG)."""
+        return self._spec.layered
+
+    @property
+    def tombstones(self) -> np.ndarray:
+        """Copy of the (n,) tombstone mask (True = deleted, not compacted)."""
+        return self._tombs.copy()
+
+    @property
     def graph(self):
         """The underlying algorithm index pytree (HNSWIndex / FlatIndex)."""
         return self._graph
@@ -380,6 +390,99 @@ class AnnIndex:
                 ids=res.ids[0], dists=res.dists[0], n_dists=res.n_dists
             )
         return res
+
+    # ---- snapshot hooks (repro.serve, DESIGN.md §9) ---------------------
+
+    def export_state(self) -> tuple[dict, dict]:
+        """Everything needed to rebuild this index bit-exactly.
+
+        Returns ``(meta, arrays)``: ``meta`` is JSON-serializable (algo,
+        backend identity, build params, maintenance counters); ``arrays`` is
+        a flat name → ``np.ndarray`` dict covering the graph arrays, raw
+        vectors, tombstone/retired masks, and the full backend state
+        (``backend.*``-prefixed, via ``backend.state_dict``). The file
+        format around this lives in :mod:`repro.serve.snapshot`."""
+        meta = {
+            "algo": self.algo,
+            "layered": self._spec.layered,
+            "backend_kind": self.backend_kind,
+            "backend_class": type(self.backend).__name__,
+            "params": dataclasses.asdict(self.params),
+            "seed": int(self._seed),
+            "n_adds": int(self._n_adds),
+        }
+        g = self._graph
+        arrays = {
+            "data": np.asarray(self._data),
+            "tombs": self._tombs.copy(),
+            "retired": self._retired.copy(),
+            "entry": np.asarray(g.entry),
+        }
+        if self._spec.layered:
+            arrays.update(
+                adj0=np.asarray(g.adj0), adj0_d=np.asarray(g.adj0_d),
+                adj_up=np.asarray(g.adj_up), adj_up_d=np.asarray(g.adj_up_d),
+                levels=np.asarray(g.levels),
+            )
+        else:
+            arrays.update(adj=np.asarray(g.adj), adj_d=np.asarray(g.adj_d))
+        for name, arr in self.backend.state_dict().items():
+            arrays[f"backend.{name}"] = arr
+        return meta, arrays
+
+    @classmethod
+    def restore(cls, meta: dict, arrays: dict) -> "AnnIndex":
+        """Inverse of :meth:`export_state` — rebuilds a live index whose
+        ``search`` results are identical to the exported instance's."""
+        spec = _REGISTRY.get(meta["algo"])
+        if spec is None:
+            raise ValueError(
+                f"snapshot needs unregistered algo {meta['algo']!r}; "
+                f"registered: {', '.join(algos())}"
+            )
+        if bool(meta["layered"]) != spec.layered:
+            raise ValueError(
+                f"algo {meta['algo']!r} is registered as "
+                f"{'layered' if spec.layered else 'flat'} but the snapshot "
+                f"was taken from a {'layered' if meta['layered'] else 'flat'} "
+                "index"
+            )
+        be_cls = bk.CLASSES.get(meta["backend_class"])
+        if be_cls is None:
+            raise ValueError(
+                f"unknown backend class {meta['backend_class']!r}; custom "
+                "backends must be registered in graph.backends.CLASSES to "
+                "be restorable"
+            )
+        backend = be_cls.from_state({
+            name[len("backend."):]: arr
+            for name, arr in arrays.items() if name.startswith("backend.")
+        })
+        entry = jnp.asarray(arrays["entry"], jnp.int32)
+        if spec.layered:
+            graph = HNSWIndex(
+                adj0=jnp.asarray(arrays["adj0"]),
+                adj0_d=jnp.asarray(arrays["adj0_d"]),
+                adj_up=jnp.asarray(arrays["adj_up"]),
+                adj_up_d=jnp.asarray(arrays["adj_up_d"]),
+                levels=jnp.asarray(arrays["levels"]),
+                entry=entry, backend=backend,
+            )
+        else:
+            graph = FlatIndex(
+                adj=jnp.asarray(arrays["adj"]),
+                adj_d=jnp.asarray(arrays["adj_d"]),
+                entry=entry, backend=backend,
+            )
+        obj = cls(
+            spec=spec, params=BuildParams(**meta["params"]), graph=graph,
+            data=jnp.asarray(arrays["data"]),
+            backend_kind=meta["backend_kind"], seed=int(meta["seed"]),
+        )
+        obj._n_adds = int(meta["n_adds"])
+        obj._tombs = np.asarray(arrays["tombs"], bool).copy()
+        obj._retired = np.asarray(arrays["retired"], bool).copy()
+        return obj
 
     # ---- dynamic maintenance -------------------------------------------
 

@@ -270,6 +270,44 @@ class SegmentedAnnIndex:
     def n_active(self) -> int:
         return sum(s.n_active for s in self.segments)
 
+    @property
+    def centroids(self) -> jax.Array:
+        """(S, D) frozen routing table (build-time segment means)."""
+        return self._centroids
+
+    def global_ids(self, s: int) -> np.ndarray:
+        """Copy of segment ``s``'s local→global id map (``repro.serve``'s
+        router maps per-segment results back to collection ids with this)."""
+        return np.asarray(self._global_of[s], np.int64).copy()
+
+    # ---- snapshot hooks (repro.serve, DESIGN.md §9) ---------------------
+
+    def export_state(self) -> tuple[dict, dict, list]:
+        """(meta, coordinator arrays, per-segment ``AnnIndex.export_state``
+        tuples) — the cross-segment state is just the routing table and the
+        global↔local id maps; each segment snapshots itself."""
+        meta = {"n_segments": len(self.segments)}
+        arrays = {
+            "centroids": np.asarray(self._centroids),
+            "locate": self._locate.copy(),
+        }
+        for s, gids in enumerate(self._global_of):
+            arrays[f"global_of.{s}"] = np.asarray(gids, np.int64)
+        return meta, arrays, [seg.export_state() for seg in self.segments]
+
+    @classmethod
+    def restore(cls, meta: dict, arrays: dict, segments: list) -> "SegmentedAnnIndex":
+        """Inverse of :meth:`export_state`."""
+        segs = [AnnIndex.restore(m, a) for m, a in segments]
+        global_of = [
+            np.asarray(arrays[f"global_of.{s}"], np.int64)
+            for s in range(int(meta["n_segments"]))
+        ]
+        return cls(
+            segs, jnp.asarray(arrays["centroids"]), global_of,
+            np.asarray(arrays["locate"], np.int64),
+        )
+
     def __len__(self) -> int:
         return self.n
 

@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import NamedTuple
 
 import jax
@@ -148,6 +149,13 @@ def search_flat(
     """Deprecated thin wrapper around :func:`search_flat_result`, kept for
     call sites that unpack ``(ids, dists)``; new code should use the
     ``repro.index`` facade (or ``search_flat_result`` directly)."""
+    warnings.warn(
+        "search_flat is deprecated: use the repro.index facade "
+        "(AnnIndex.search) or search_flat_result, which return a "
+        "SearchResult with cost accounting",
+        DeprecationWarning,
+        stacklevel=2,
+    )
     res = search_flat_result(
         index, queries, k=k, ef_search=ef_search, width=width,
         rerank_vectors=rerank_vectors,

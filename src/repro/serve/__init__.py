@@ -1,0 +1,52 @@
+"""``repro.serve`` — the serving runtime around a built index (DESIGN.md §9).
+
+The paper accelerates *building* the index; this package is the other half
+of the ROADMAP's north star ("serve heavy traffic"): turning a built
+:class:`repro.index.AnnIndex` / ``SegmentedAnnIndex`` into a long-lived
+service whose unit of work is a request stream, not an array.
+
+    snapshot   atomic, format-versioned, checksummed save/load — build once,
+               serve forever; round-trips bit-exact search results
+    engine     SearchEngine: pre-jitted search callables per padded Q-shape
+               bucket, warmup(), QPS/latency/compile telemetry
+    scheduler  MicroBatcher: coalesces single-query requests into the next
+               shape bucket under a max-wait deadline (the serving twin of
+               the build beam's width-W argument)
+    router     SegmentRouter: nearest-centroid fan-out over segments + exact
+               top-k merge
+
+Quickstart::
+
+    from repro.index import AnnIndex
+    from repro import serve
+
+    index = AnnIndex.build(data, algo="hnsw", backend="flash_blocked")
+    serve.save_index("/var/idx/v1", index)          # build once …
+    index = serve.load_index("/var/idx/v1")         # … serve forever
+    engine = serve.SearchEngine(index, k=10, ef=64).warmup()
+    res = engine.search(queries)                    # zero recompiles
+    with serve.MicroBatcher(engine) as mb:          # single-query traffic
+        fut = mb.submit(one_query)
+        print(fut.result().ids)
+"""
+
+from repro.serve.engine import DEFAULT_BUCKETS, SearchEngine  # noqa: F401
+from repro.serve.router import SegmentRouter  # noqa: F401
+from repro.serve.scheduler import MicroBatcher  # noqa: F401
+from repro.serve.snapshot import (  # noqa: F401
+    FORMAT_VERSION,
+    load_index,
+    save_index,
+    snapshot_bytes,
+)
+
+__all__ = [
+    "DEFAULT_BUCKETS",
+    "FORMAT_VERSION",
+    "MicroBatcher",
+    "SearchEngine",
+    "SegmentRouter",
+    "load_index",
+    "save_index",
+    "snapshot_bytes",
+]

@@ -1,0 +1,262 @@
+"""Pre-jitted, shape-bucketed query runtime (DESIGN.md §9).
+
+XLA compiles one executable per input shape, so a naive serving loop that
+passes whatever query-block size arrives recompiles constantly — the serving
+twin of the build-side problem the paper solves with dense distance blocks.
+:class:`SearchEngine` fixes the shapes once: incoming blocks are padded up to
+the next configured Q bucket (default 1 / 8 / 32), each (bucket, k, ef,
+width) pair is traced exactly once (eagerly via :meth:`warmup`, else on first
+use), and steady-state serving never touches the compiler again — asserted
+by a compile counter that ticks only at trace time.
+
+Telemetry is first-class: per-call wall latency (p50/p99), QPS, distance
+evaluations per query, and the compile-vs-cache-hit counters the zero-
+recompile contract is tested against (tests/test_serve.py).
+
+The engine reads the index's graph pytree per call, so in-place maintenance
+(``add``/``delete``/``compact``) is picked up immediately; call
+:meth:`refresh` after maintenance to re-sync the device-side tombstone mask
+(and note a changed vector count changes array shapes, which legitimately
+costs one recompile per bucket — the same cost model as ``AnnIndex.add``).
+"""
+
+from __future__ import annotations
+
+import collections
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.hnsw import SearchResult, search_hnsw
+from repro.graph.vamana import search_flat_result
+
+#: Default padded-shape buckets: singles, small coalesced blocks, full blocks.
+DEFAULT_BUCKETS = (1, 8, 32)
+
+
+class SearchEngine:
+    """Long-lived search runtime over a built :class:`repro.index.AnnIndex`.
+
+    One engine serves one (k, ef, width, rerank) configuration — the common
+    production shape where a deployment pins its quality knobs and the
+    runtime's job is throughput. Construct, :meth:`warmup`, then
+    :meth:`search` arbitrary query blocks; blocks larger than the biggest
+    bucket are served in bucket-sized chunks.
+    """
+
+    def __init__(
+        self,
+        index,
+        *,
+        k: int = 10,
+        ef: int = 64,
+        width: int = 1,
+        rerank: bool = True,
+        q_buckets: tuple = DEFAULT_BUCKETS,
+    ):
+        buckets = tuple(sorted({int(b) for b in q_buckets}))
+        if not buckets or buckets[0] < 1:
+            raise ValueError(f"q_buckets must be positive ints, got {q_buckets}")
+        self.index = index
+        self.k = int(k)
+        self.ef = max(int(ef), self.k)
+        self.width = int(width)
+        self.rerank = bool(rerank)
+        self.q_buckets = buckets
+        self._fns: dict = {}  # bucket -> jitted callable
+        self._compiled: set = set()  # buckets that have executed once
+        self._banned = None
+        # telemetry
+        self._n_compiles = 0
+        self._n_hits = 0           # recorded dispatches on a warm bucket
+        self._n_calls = 0          # search() invocations
+        self._n_blocks = 0         # padded-block dispatches
+        self._n_queries = 0        # real queries served
+        self._n_padded = 0         # padded queries dispatched (>= real)
+        self._dists = 0.0
+        self._time_total = 0.0     # all-time busy seconds (for qps)
+        # bounded window: a long-lived server must not grow per-call state
+        self._lat: collections.deque = collections.deque(maxlen=4096)
+        self._bucket_hits = {b: 0 for b in buckets}
+        self.refresh()
+
+    # ---- lifecycle ------------------------------------------------------
+
+    def refresh(self) -> "SearchEngine":
+        """Re-sync the device tombstone mask with the index (call after
+        ``delete``/``add``/``compact``)."""
+        mask = np.zeros(self.index.n, bool)
+        mask[self.index.deleted_ids] = True
+        self._banned = jnp.asarray(mask)
+        return self
+
+    def warmup(self) -> "SearchEngine":
+        """Compile every configured bucket now (off the request path), so
+        steady-state serving starts at zero recompiles."""
+        d = int(self.index.data.shape[1])
+        for b in self.q_buckets:
+            dummy = jnp.zeros((b, d), jnp.float32)
+            jax.block_until_ready(self._dispatch(b, dummy).ids)
+        return self
+
+    # ---- the pre-jitted search path -------------------------------------
+
+    def _fn(self, bucket: int):
+        fn = self._fns.get(bucket)
+        if fn is None:
+            layered = self.index.layered
+            k, ef, width = self.k, self.ef, self.width
+
+            def raw(graph, queries, banned, rerank_vectors):
+                # Trace-time side effect: ticks once per XLA compile of this
+                # bucket, never on a warm call — the compile counter the
+                # zero-recompile contract is asserted against.
+                self._n_compiles += 1
+                search = search_hnsw if layered else search_flat_result
+                return search(
+                    graph, queries, k=k, ef_search=ef, width=width,
+                    rerank_vectors=rerank_vectors, banned=banned,
+                )
+
+            fn = jax.jit(raw)
+            self._fns[bucket] = fn
+        return fn
+
+    def _dispatch(
+        self, bucket: int, queries_padded, *, record: bool = False
+    ) -> SearchResult:
+        rr = self.index.data if self.rerank else None
+        # a grown index changes array shapes: this dispatch retraces, so it
+        # is not a cache hit even though the bucket fn exists
+        key = (bucket, self.index.n)
+        hit = key in self._compiled
+        res = self._fn(bucket)(
+            self.index.graph, queries_padded, self._banned, rr
+        )
+        self._compiled.add(key)
+        if record and hit:
+            self._n_hits += 1
+        return res
+
+    def _bucket_for(self, q: int) -> int:
+        for b in self.q_buckets:
+            if q <= b:
+                return b
+        return self.q_buckets[-1]
+
+    def padded_queries(self, q: int) -> int:
+        """How many padded query slots a block of ``q`` real queries
+        dispatches (chunking included) — the denominator for accurate
+        per-query cost accounting (the scheduler uses this)."""
+        total, off = 0, 0
+        while off < q:
+            c = min(q - off, self.q_buckets[-1])
+            total += self._bucket_for(c)
+            off += c
+        return total
+
+    # ---- serving --------------------------------------------------------
+
+    def search(self, queries, *, record: bool = True) -> SearchResult:
+        """Serve one query block (1D single query or (Q, d) batch).
+
+        Pads Q up to the bucket shape (padding replicates the first query —
+        same per-query program, results sliced away), chunks blocks larger
+        than the top bucket, and folds latency/cost into the telemetry."""
+        queries = jnp.asarray(queries, jnp.float32)
+        single = queries.ndim == 1
+        if single:
+            queries = queries[None]
+        q_total = int(queries.shape[0])
+        if q_total == 0:
+            raise ValueError("empty query block")
+        if int(self._banned.shape[0]) != self.index.n:
+            # index grew since the last refresh(): a stale mask would be
+            # clamp-gathered against new ids and silently misclassify them
+            self.refresh()
+        t0 = time.perf_counter()
+        out_ids, out_dists, nd = [], [], 0.0
+        off = 0
+        while off < q_total:
+            q = min(q_total - off, self.q_buckets[-1])
+            chunk = queries[off:off + q]
+            bucket = self._bucket_for(q)
+            if q < bucket:
+                pad = jnp.broadcast_to(chunk[:1], (bucket - q,) + chunk.shape[1:])
+                chunk = jnp.concatenate([chunk, pad])
+            res = self._dispatch(bucket, chunk, record=record)
+            out_ids.append(res.ids[:q])
+            out_dists.append(res.dists[:q])
+            nd += float(res.n_dists)  # also syncs the dispatch
+            if record:
+                self._n_blocks += 1
+                self._n_padded += bucket
+                self._bucket_hits[bucket] += 1
+            off += q
+        ids = out_ids[0] if len(out_ids) == 1 else jnp.concatenate(out_ids)
+        dists = out_dists[0] if len(out_dists) == 1 else jnp.concatenate(out_dists)
+        jax.block_until_ready(ids)
+        if record:
+            elapsed = time.perf_counter() - t0
+            self._lat.append(elapsed)
+            self._time_total += elapsed
+            self._n_calls += 1
+            self._n_queries += q_total
+            self._dists += nd
+        if single:
+            return SearchResult(
+                ids=ids[0], dists=dists[0], n_dists=jnp.float32(nd)
+            )
+        return SearchResult(ids=ids, dists=dists, n_dists=jnp.float32(nd))
+
+    # ---- telemetry ------------------------------------------------------
+
+    @property
+    def n_compiles(self) -> int:
+        return self._n_compiles
+
+    def stats(self) -> dict:
+        """Serving telemetry since construction (warmup excluded).
+
+        qps counts *real* queries (padding excluded); n_dists_per_query is
+        averaged over padded queries (each padded row runs the same program,
+        so the per-row cost is uniform); cache_hits are dispatches that found
+        their bucket already compiled at the current index shape. Latency
+        percentiles cover the most recent 4096 calls (bounded window)."""
+        lat = np.asarray(self._lat, np.float64)
+        total = self._time_total
+        return {
+            "calls": self._n_calls,
+            "blocks": self._n_blocks,
+            "queries": self._n_queries,
+            "padded_queries": self._n_padded,
+            "compiles": self._n_compiles,
+            "cache_hits": self._n_hits,
+            "qps": self._n_queries / total if total > 0 else 0.0,
+            "p50_ms": float(np.percentile(lat, 50) * 1e3) if lat.size else 0.0,
+            "p99_ms": float(np.percentile(lat, 99) * 1e3) if lat.size else 0.0,
+            "n_dists_per_query": (
+                self._dists / self._n_padded if self._n_padded else 0.0
+            ),
+            "bucket_hits": dict(self._bucket_hits),
+        }
+
+    def reset_stats(self) -> "SearchEngine":
+        """Zero the latency/throughput counters (compile counter kept — it
+        tracks the engine's whole compilation history)."""
+        self._n_calls = self._n_blocks = self._n_hits = 0
+        self._n_queries = self._n_padded = 0
+        self._dists = 0.0
+        self._time_total = 0.0
+        self._lat = collections.deque(maxlen=4096)
+        self._bucket_hits = {b: 0 for b in self.q_buckets}
+        return self
+
+    def __repr__(self) -> str:
+        return (
+            f"SearchEngine(index={self.index!r}, k={self.k}, ef={self.ef}, "
+            f"width={self.width}, buckets={self.q_buckets}, "
+            f"compiles={self._n_compiles})"
+        )

@@ -1,0 +1,148 @@
+"""Segmented serving: centroid-routed fan-out + top-k merge (DESIGN.md §9).
+
+``SegmentedAnnIndex.search`` fans every query to every segment — correct,
+but at serving time most segments can't contain a query's neighbors.
+:class:`SegmentRouter` probes only the ``n_probe`` nearest build-time
+segment centroids per query (the same routing table ``add`` uses for
+growth), batches each segment's routed queries through that segment's own
+pre-jitted :class:`~repro.serve.engine.SearchEngine`, and merges the
+candidates into a global top-k.
+
+Merge rule: candidates from different segments are only comparable on
+*exact* distances (quantized sums are coder-local — DESIGN.md §5), so
+engines default to ``rerank=True`` and the merge is a plain sort on exact
+squared L2 with global ids carried along. ``n_probe = S`` reproduces the
+full fan-out semantics; smaller ``n_probe`` trades recall for fewer
+segment dispatches — the standard IVF-style serving knob.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.graph.hnsw import SearchResult
+from repro.serve.engine import DEFAULT_BUCKETS, SearchEngine
+
+
+class SegmentRouter:
+    """Serving coordinator over a :class:`repro.graph.segmented.SegmentedAnnIndex`.
+
+    Owns one :class:`SearchEngine` per segment (shared shape buckets, shared
+    quality knobs) plus the routing/merge logic. ``warmup()`` pre-compiles
+    every segment × bucket pair.
+    """
+
+    def __init__(
+        self,
+        seg_index,
+        *,
+        n_probe: int = 1,
+        k: int = 10,
+        ef: int = 64,
+        width: int = 1,
+        rerank: bool = True,
+        q_buckets: tuple = DEFAULT_BUCKETS,
+    ):
+        n_seg = len(seg_index.segments)
+        if not 1 <= n_probe <= n_seg:
+            raise ValueError(
+                f"n_probe must be in [1, {n_seg}] for {n_seg} segments, "
+                f"got {n_probe}"
+            )
+        self.seg_index = seg_index
+        self.n_probe = int(n_probe)
+        self.k = int(k)
+        self.engines = [
+            SearchEngine(
+                seg, k=k, ef=ef, width=width, rerank=rerank,
+                q_buckets=q_buckets,
+            )
+            for seg in seg_index.segments
+        ]
+        self._centroids = np.asarray(seg_index.centroids, np.float64)
+
+    def warmup(self) -> "SegmentRouter":
+        for engine in self.engines:
+            engine.warmup()
+        return self
+
+    def refresh(self) -> "SegmentRouter":
+        """Re-sync every segment engine after maintenance on the index."""
+        for engine in self.engines:
+            engine.refresh()
+        return self
+
+    def route(self, queries) -> np.ndarray:
+        """(Q, n_probe) segment ids, nearest build-time centroid first."""
+        q = np.asarray(queries, np.float64)
+        d2 = ((q[:, None, :] - self._centroids[None, :, :]) ** 2).sum(axis=-1)
+        if self.n_probe == 1:
+            return np.argmin(d2, axis=1)[:, None]
+        return np.argsort(d2, axis=1, kind="stable")[:, : self.n_probe]
+
+    def search(self, queries, k: int | None = None) -> SearchResult:
+        """Fan a block out across probed segments, merge global top-k.
+
+        Returns a ``SearchResult`` with *global* ids (−1 padding where a
+        probe set yields fewer than k candidates) and the engines' exact
+        (reranked) distances; ``n_dists`` sums the probed segments' work."""
+        queries = np.asarray(queries, np.float32)
+        single = queries.ndim == 1
+        if single:
+            queries = queries[None]
+        k = self.k if k is None else int(k)
+        if k > self.k:
+            raise ValueError(
+                f"k={k} exceeds the engines' configured k={self.k}"
+            )
+        n_q = queries.shape[0]
+        probe = self.route(queries)
+        width = self.n_probe * self.k
+        cand_ids = np.full((n_q, width), -1, np.int64)
+        cand_d = np.full((n_q, width), np.inf, np.float32)
+        n_dists = 0.0
+        for s, engine in enumerate(self.engines):
+            hit = (probe == s).any(axis=1)
+            rows = np.nonzero(hit)[0]
+            if rows.size == 0:
+                continue
+            res = engine.search(queries[rows])
+            n_dists += float(res.n_dists)
+            gids = self.seg_index.global_ids(s)
+            ids = np.asarray(res.ids)
+            dists = np.asarray(res.dists)
+            # probe slot of segment s for each routed query (fancy indexing
+            # copies, so write into the sub-block and assign it back)
+            slot = np.argmax(probe[rows] == s, axis=1)
+            cols = slot[:, None] * self.k + np.arange(self.k)[None, :]
+            valid = ids >= 0
+            sub_ids, sub_d = cand_ids[rows], cand_d[rows]
+            np.put_along_axis(
+                sub_ids, cols, np.where(valid, gids[np.maximum(ids, 0)], -1),
+                axis=1,
+            )
+            np.put_along_axis(
+                sub_d, cols, np.where(valid, dists, np.inf), axis=1
+            )
+            cand_ids[rows], cand_d[rows] = sub_ids, sub_d
+        order = np.argsort(cand_d, axis=1, kind="stable")[:, :k]
+        out_ids = np.take_along_axis(cand_ids, order, axis=1)
+        out_d = np.take_along_axis(cand_d, order, axis=1)
+        out_ids[~np.isfinite(out_d)] = -1
+        if single:
+            out_ids, out_d = out_ids[0], out_d[0]
+        return SearchResult(
+            ids=out_ids.astype(np.int32), dists=out_d,
+            n_dists=np.float32(n_dists),
+        )
+
+    def stats(self) -> dict:
+        """Aggregate per-segment engine telemetry."""
+        per = [e.stats() for e in self.engines]
+        return {
+            "segments": len(self.engines),
+            "n_probe": self.n_probe,
+            "compiles": sum(p["compiles"] for p in per),
+            "queries": sum(p["queries"] for p in per),
+            "per_segment": per,
+        }

@@ -1,0 +1,155 @@
+"""Micro-batching request scheduler (DESIGN.md §9).
+
+Serving traffic arrives as single queries; the hardware (and the whole
+compact-code pipeline) wants dense blocks. This is the serving twin of the
+build engine's width-W beam: where the beam batches W vertex expansions into
+one (W·R, M) distance block, the scheduler coalesces up to ``max_batch``
+concurrent requests into one padded (Q, d) block through the
+:class:`~repro.serve.engine.SearchEngine` — one dense pass through
+``flash_scan_batch`` instead of Q slivers.
+
+Deadline semantics: the FIRST request of a forming batch starts a
+``max_wait_ms`` clock. The batch is dispatched as soon as it reaches
+``max_batch`` *or* the clock expires — so an isolated request pays at most
+``max_wait_ms`` of queueing latency, and a busy stream pays ~none (the
+bucket fills first). Requests never starve: every submitted query is served
+exactly once, in arrival order, including on :meth:`close` (the queue drains
+before the worker exits).
+
+Thread model: one daemon worker owns the engine call; ``submit`` is
+thread-safe and returns a ``concurrent.futures.Future`` resolving to a
+per-request ``SearchResult`` (ids (k,), dists (k,), n_dists = the batch's
+per-query average).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import Future
+
+import numpy as np
+
+from repro.graph.hnsw import SearchResult
+
+
+class MicroBatcher:
+    """Coalesce single-query requests into engine-sized blocks.
+
+    Usage::
+
+        engine = SearchEngine(index, k=10, ef=64).warmup()
+        with MicroBatcher(engine, max_wait_ms=2.0) as mb:
+            futs = [mb.submit(q) for q in queries]
+            results = [f.result() for f in futs]
+    """
+
+    def __init__(self, engine, *, max_wait_ms: float = 2.0, max_batch: int | None = None):
+        if max_wait_ms < 0:
+            raise ValueError(f"max_wait_ms must be >= 0, got {max_wait_ms}")
+        self.engine = engine
+        self.max_wait = float(max_wait_ms) / 1e3
+        self.max_batch = int(max_batch or engine.q_buckets[-1])
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self._cv = threading.Condition()
+        self._pending: list = []  # (query np (d,), Future)
+        self._closed = False
+        self._n_batches = 0
+        self._batch_sizes: list = []
+        self._worker = threading.Thread(
+            target=self._loop, name="microbatcher", daemon=True
+        )
+        self._worker.start()
+
+    # ---- client side ----------------------------------------------------
+
+    def submit(self, query) -> Future:
+        """Enqueue one query vector; returns a Future of its SearchResult."""
+        q = np.asarray(query, np.float32)
+        if q.ndim != 1:
+            raise ValueError(
+                f"submit takes a single (d,) query, got shape {q.shape}; "
+                "batches go straight to SearchEngine.search"
+            )
+        fut: Future = Future()
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("MicroBatcher is closed")
+            self._pending.append((q, fut))
+            self._cv.notify_all()
+        return fut
+
+    def search(self, query, timeout: float | None = None) -> SearchResult:
+        """Blocking convenience wrapper around :meth:`submit`."""
+        return self.submit(query).result(timeout)
+
+    # ---- worker side ----------------------------------------------------
+
+    def _loop(self) -> None:
+        while True:
+            with self._cv:
+                while not self._pending and not self._closed:
+                    self._cv.wait()
+                if not self._pending and self._closed:
+                    return
+                # First request of the batch starts the deadline clock.
+                deadline = time.perf_counter() + self.max_wait
+                while len(self._pending) < self.max_batch and not self._closed:
+                    left = deadline - time.perf_counter()
+                    if left <= 0:
+                        break
+                    self._cv.wait(left)
+                batch = self._pending[: self.max_batch]
+                del self._pending[: self.max_batch]
+            self._serve(batch)
+
+    def _serve(self, batch: list) -> None:
+        try:
+            block = np.stack([q for q, _ in batch])
+            res = self.engine.search(block)
+            ids = np.asarray(res.ids)
+            dists = np.asarray(res.dists)
+            # n_dists covers the padded block; every padded row runs the
+            # same program, so the honest per-query cost divides by the
+            # dispatched slot count, not the real batch size
+            per_query = float(res.n_dists) / self.engine.padded_queries(
+                len(batch)
+            )
+            self._n_batches += 1
+            self._batch_sizes.append(len(batch))
+            for i, (_, fut) in enumerate(batch):
+                fut.set_result(
+                    SearchResult(
+                        ids=ids[i], dists=dists[i],
+                        n_dists=np.float32(per_query),
+                    )
+                )
+        except BaseException as exc:  # noqa: BLE001 — fail the waiters, not the worker
+            for _, fut in batch:
+                if not fut.done():
+                    fut.set_exception(exc)
+
+    # ---- lifecycle / telemetry ------------------------------------------
+
+    def close(self) -> None:
+        """Drain the queue, serve everything pending, stop the worker."""
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+        self._worker.join()
+
+    def __enter__(self) -> "MicroBatcher":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def stats(self) -> dict:
+        sizes = np.asarray(self._batch_sizes, np.float64)
+        return {
+            "batches": self._n_batches,
+            "requests": int(sizes.sum()) if sizes.size else 0,
+            "mean_batch": float(sizes.mean()) if sizes.size else 0.0,
+            "max_batch_seen": int(sizes.max()) if sizes.size else 0,
+        }

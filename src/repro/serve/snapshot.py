@@ -1,0 +1,179 @@
+"""Atomic index snapshots — build once, serve forever (DESIGN.md §9).
+
+A snapshot is a directory:
+
+    <path>/
+      manifest.json     format_version, index kind, AnnIndex meta, and
+                        per-array {shape, dtype, crc32}
+      arrays.npz        every array of ``AnnIndex.export_state`` — graph
+                        arrays, raw vectors, tombstone/retired masks, and the
+                        full backend state (codes + coder params)
+      seg_000/ …        (segmented snapshots only) one AnnIndex snapshot per
+                        segment, beside the coordinator's routing arrays
+
+Write protocol reuses the checkpoint idiom (train/checkpoint.py): everything
+goes to ``<path>.tmp`` first, then one ``os.replace`` publishes it — a crash
+mid-save never corrupts the last good snapshot. Every array carries a CRC32
+so bitrot/torn writes fail loudly on load instead of silently serving a
+corrupt graph.
+
+The contract (asserted in tests/test_serve.py): for every registered
+algo × backend, ``load_index(save_index(p, idx)).search(q)`` returns ids and
+distances *identical* to the live index — including after ``add()`` and
+``delete()`` (tombstones and maintenance counters are part of the state).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import zlib
+from typing import Any
+
+import numpy as np
+
+from repro.graph.index import AnnIndex
+from repro.graph.segmented import SegmentedAnnIndex
+
+#: Bump on any incompatible layout change; ``load_index`` refuses newer
+#: formats with an informative error instead of misreading them.
+FORMAT_VERSION = 1
+
+_MANIFEST = "manifest.json"
+_ARRAYS = "arrays.npz"
+
+
+def _write_payload(dirpath: str, manifest: dict, arrays: dict) -> None:
+    entries = {}
+    stored = {}
+    for i, (name, arr) in enumerate(sorted(arrays.items())):
+        # NB: ascontiguousarray promotes 0-d to 1-d, so it is used only for
+        # the CRC byte view — the stored array keeps its exact shape.
+        arr = np.asarray(arr)
+        key = f"a{i}"
+        stored[key] = arr
+        entries[key] = {
+            "name": name,
+            "shape": list(arr.shape),
+            "dtype": str(arr.dtype),
+            "crc": zlib.crc32(np.ascontiguousarray(arr).tobytes()),
+        }
+    np.savez(os.path.join(dirpath, _ARRAYS), **stored)
+    manifest = dict(manifest, format_version=FORMAT_VERSION, arrays=entries)
+    with open(os.path.join(dirpath, _MANIFEST), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+
+
+def _read_payload(dirpath: str, *, verify: bool) -> tuple[dict, dict]:
+    with open(os.path.join(dirpath, _MANIFEST)) as f:
+        manifest = json.load(f)
+    version = manifest.get("format_version")
+    if version is None or version > FORMAT_VERSION:
+        raise ValueError(
+            f"snapshot at {dirpath} has format_version={version!r}; this "
+            f"build reads <= {FORMAT_VERSION} (upgrade repro.serve to load it)"
+        )
+    arrays = {}
+    with np.load(os.path.join(dirpath, _ARRAYS)) as data:
+        for key, meta in manifest["arrays"].items():
+            arr = data[key]
+            if verify:
+                crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+                if crc != meta["crc"]:
+                    raise IOError(
+                        f"checksum mismatch for {meta['name']!r} in snapshot "
+                        f"{dirpath} (torn write or bitrot)"
+                    )
+            arrays[meta["name"]] = arr
+    return manifest, arrays
+
+
+def save_index(path: str, index: Any, *, overwrite: bool = True) -> str:
+    """Atomically snapshot an :class:`AnnIndex` or :class:`SegmentedAnnIndex`.
+
+    Writes to ``<path>.tmp`` then publishes with one ``os.replace``; with
+    ``overwrite`` (default) an existing snapshot at ``path`` is swapped out
+    only after the new one is fully on disk. Returns ``path``."""
+    if not isinstance(index, (AnnIndex, SegmentedAnnIndex)):
+        raise TypeError(
+            f"save_index expects AnnIndex or SegmentedAnnIndex, got "
+            f"{type(index).__name__}"
+        )
+    path = os.path.abspath(path)
+    if os.path.lexists(path) and not overwrite:
+        raise FileExistsError(f"snapshot already exists at {path}")
+    tmp = path + ".tmp"
+    if os.path.lexists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    try:
+        if isinstance(index, SegmentedAnnIndex):
+            meta, arrays, segments = index.export_state()
+            manifest = {"kind": "segmented_ann_index", "meta": meta}
+            _write_payload(tmp, manifest, arrays)
+            for s, (seg_meta, seg_arrays) in enumerate(segments):
+                seg_dir = os.path.join(tmp, f"seg_{s:03d}")
+                os.makedirs(seg_dir)
+                _write_payload(
+                    seg_dir, {"kind": "ann_index", "meta": seg_meta}, seg_arrays
+                )
+        else:
+            meta, arrays = index.export_state()
+            _write_payload(tmp, {"kind": "ann_index", "meta": meta}, arrays)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    if os.path.lexists(path):
+        # Two renames are needed to swap directories, so there is an instant
+        # with nothing at ``path``; the previous snapshot survives it at
+        # ``<path>.old``, which ``load_index`` falls back to — a crash in
+        # the window still leaves a loadable last-good snapshot.
+        old = path + ".old"
+        shutil.rmtree(old, ignore_errors=True)
+        os.replace(path, old)
+        os.replace(tmp, path)
+        shutil.rmtree(old, ignore_errors=True)
+    else:
+        os.replace(tmp, path)  # atomic on POSIX
+    return path
+
+
+def load_index(path: str, *, verify: bool = True):
+    """Load a snapshot written by :func:`save_index`.
+
+    Returns the same concrete type that was saved; ``verify`` (default)
+    checks every array's CRC32. The restored index is fully live — it
+    searches bit-identically to the saved instance and accepts further
+    ``add``/``delete``/``compact``. If ``path`` is missing but a
+    ``<path>.old`` exists (an overwriting save crashed mid-swap), the
+    previous snapshot is loaded from there."""
+    path = os.path.abspath(path)
+    if not os.path.isdir(path):
+        old = path + ".old"
+        if os.path.isdir(old):
+            path = old  # crashed overwrite: fall back to the last good copy
+        else:
+            raise FileNotFoundError(f"no snapshot directory at {path}")
+    manifest, arrays = _read_payload(path, verify=verify)
+    kind = manifest.get("kind")
+    if kind == "ann_index":
+        return AnnIndex.restore(manifest["meta"], arrays)
+    if kind == "segmented_ann_index":
+        n_seg = int(manifest["meta"]["n_segments"])
+        segments = []
+        for s in range(n_seg):
+            seg_dir = os.path.join(path, f"seg_{s:03d}")
+            seg_manifest, seg_arrays = _read_payload(seg_dir, verify=verify)
+            segments.append((seg_manifest["meta"], seg_arrays))
+        return SegmentedAnnIndex.restore(manifest["meta"], arrays, segments)
+    raise ValueError(f"snapshot at {path} has unknown kind {kind!r}")
+
+
+def snapshot_bytes(path: str) -> int:
+    """Total on-disk size of a snapshot directory (benchmark reporting)."""
+    total = 0
+    for root, _dirs, files in os.walk(path):
+        for name in files:
+            total += os.path.getsize(os.path.join(root, name))
+    return total

@@ -26,7 +26,7 @@ from repro.graph.engine import BuildEngine, BuildParams, CostAccount
 from repro.graph.hnsw import HNSWParams, build_hnsw, search_hnsw
 from repro.graph.knn import exact_knn, recall_at_k
 from repro.graph.nsg import build_nsg
-from repro.graph.vamana import build_vamana, search_flat
+from repro.graph.vamana import build_vamana, search_flat_result
 
 PARAMS = HNSWParams(r_upper=8, r_base=16, ef=32, batch=16, max_layers=3)
 
@@ -256,8 +256,8 @@ class TestEngineRecallFloors:
             data, be,
             params=HNSWParams(r_upper=8, r_base=24, ef=96, batch=16, alpha=1.2),
         )
-        ids, _ = search_flat(idx, queries, k=10, ef_search=96)
-        assert recall_at_k(ids, truth[0], 10) >= 0.9
+        res = search_flat_result(idx, queries, k=10, ef_search=96)
+        assert recall_at_k(res.ids, truth[0], 10) >= 0.9
 
     def test_nsg_floor(self, small_data, key, truth):
         data, queries = small_data
@@ -267,10 +267,10 @@ class TestEngineRecallFloors:
         idx, _knn = build_nsg(
             data, be, params=HNSWParams(r_base=24, ef=96, batch=16), knn_k=24
         )
-        ids, _ = search_flat(
+        res = search_flat_result(
             idx, queries, k=10, ef_search=128, rerank_vectors=data
         )
-        assert recall_at_k(ids, truth[0], 10) >= 0.8
+        assert recall_at_k(res.ids, truth[0], 10) >= 0.8
 
 
 # ---------------------------------------------------------------------------

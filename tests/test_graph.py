@@ -25,7 +25,7 @@ from repro.graph.hnsw import (
 from repro.graph.knn import average_distance_ratio, exact_knn, recall_at_k
 from repro.graph.nsg import build_nsg
 from repro.graph.select import select_neighbors
-from repro.graph.vamana import build_vamana, search_flat
+from repro.graph.vamana import build_vamana, search_flat_result
 
 PARAMS = HNSWParams(r_upper=8, r_base=16, ef=32, batch=16, max_layers=3)
 
@@ -258,16 +258,16 @@ class TestGenerality:
         be = graph.make_backend("fp32", data)
         idx, _ = build_vamana(data, be, params=HNSWParams(
             r_upper=8, r_base=24, ef=96, batch=16, alpha=1.2))
-        ids, _ = search_flat(idx, queries, k=10, ef_search=96)
-        assert recall_at_k(ids, truth[0], 10) >= 0.9
+        res = search_flat_result(idx, queries, k=10, ef_search=96)
+        assert recall_at_k(res.ids, truth[0], 10) >= 0.9
 
     def test_vamana_flash(self, small_data, key, truth):
         data, queries = small_data
         be = graph.make_backend("flash", data, key, d_f=32, m_f=16, kmeans_iters=10)
         idx, _ = build_vamana(data, be, params=HNSWParams(
             r_upper=8, r_base=24, ef=96, batch=16, alpha=1.2))
-        ids, _ = search_flat(idx, queries, k=10, ef_search=128, rerank_vectors=data)
-        assert recall_at_k(ids, truth[0], 10) >= 0.9
+        res = search_flat_result(idx, queries, k=10, ef_search=128, rerank_vectors=data)
+        assert recall_at_k(res.ids, truth[0], 10) >= 0.9
 
     def test_nsg_flash(self, small_data, key, truth):
         data, queries = small_data
@@ -275,8 +275,8 @@ class TestGenerality:
         (idx, _knn) = build_nsg(
             data, be, params=HNSWParams(r_base=24, ef=96, batch=16), knn_k=24
         )
-        ids, _ = search_flat(idx, queries, k=10, ef_search=128, rerank_vectors=data)
-        assert recall_at_k(ids, truth[0], 10) >= 0.8
+        res = search_flat_result(idx, queries, k=10, ef_search=128, rerank_vectors=data)
+        assert recall_at_k(res.ids, truth[0], 10) >= 0.8
 
 
 class TestSegmented:

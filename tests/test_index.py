@@ -274,3 +274,21 @@ class TestFacadeHygiene:
             if private_into_facade.search(line):
                 offenders.append(f"index.py: {line.strip()}")
         assert not offenders, "\n".join(offenders)
+
+    def test_benchmarks_and_examples_use_the_facade(self):
+        """Consumers outside src/ and tests/ go through ``repro.index`` (or
+        the segmented/serve layers), never the per-algorithm builders —
+        so a facade-level feature (tombstones, rerank, telemetry) is never
+        silently bypassed by a benchmark or example."""
+        root = pathlib.Path(__file__).resolve().parents[1]
+        direct = re.compile(
+            r"import\s+[^#\n]*\b(build_hnsw|build_vamana|build_nsg|"
+            r"search_hnsw|search_flat|search_flat_result)\b"
+        )
+        offenders = []
+        for base in ("benchmarks", "examples"):
+            for py in (root / base).rglob("*.py"):
+                for i, line in enumerate(py.read_text().splitlines(), 1):
+                    if direct.search(line):
+                        offenders.append(f"{py}:{i}: {line.strip()}")
+        assert not offenders, "\n".join(offenders)

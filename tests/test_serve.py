@@ -1,0 +1,352 @@
+"""Tests for the ``repro.serve`` runtime (DESIGN.md §9).
+
+Five contracts:
+  1. Snapshots are lossless: for every registered algo × backend,
+     ``load_index(save_index(p, idx))`` searches bit-identically to the live
+     index — including after ``add()`` and ``delete()`` (the ISSUE-3
+     acceptance bar). Corruption and format drift fail loudly.
+  2. The SearchEngine compiles once per shape bucket: after ``warmup()``,
+     any Q within a bucket (and any number of repeat calls) triggers zero
+     recompilation, and results equal the facade's.
+  3. The MicroBatcher coalesces single-query requests into blocks under a
+     deadline, returning per-request results identical to a direct batched
+     search; isolated requests still complete within the deadline.
+  4. The SegmentRouter at full probe reproduces the coordinator's fan-out
+     merge; at n_probe=1 it degrades gracefully, never returning invalid
+     ids.
+  5. ``vamana.search_flat`` is deprecated and now says so.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import serve
+from repro.graph.backends import kinds
+from repro.graph.hnsw import HNSWParams
+from repro.graph.knn import exact_knn, recall_at_k
+from repro.graph.segmented import SegmentedAnnIndex
+from repro.graph.vamana import build_vamana, search_flat
+from repro.index import AnnIndex, algos
+from tests.conftest import make_clustered
+
+PARAMS = HNSWParams(r_upper=4, r_base=8, ef=16, batch=32, max_layers=2)
+FLASH_KW = dict(d_f=12, m_f=6, l_f=4, h=8, kmeans_iters=3)
+BACKEND_KW = {
+    "fp32": {},
+    "pca": dict(alpha=0.9),
+    "sq": dict(bits=8),
+    "pq": dict(m=8, l_pq=4, kmeans_iters=3),
+    "flash": FLASH_KW,
+    "flash_blocked": FLASH_KW,
+}
+N_BASE, N_ADD, N_Q = 240, 12, 16
+
+
+@pytest.fixture(scope="module")
+def serve_data():
+    x = make_clustered(N_BASE + N_ADD + N_Q, 16, n_clusters=12, seed=7)
+    return (
+        jnp.asarray(x[:N_BASE]),                    # base corpus
+        jnp.asarray(x[N_BASE:N_BASE + N_ADD]),      # growth batch
+        jnp.asarray(x[N_BASE + N_ADD:]),            # queries
+    )
+
+
+def _assert_same_search(a: AnnIndex, b: AnnIndex, queries, *, k=5, ef=24):
+    ra = a.search(queries, k=k, ef=ef)
+    rb = b.search(queries, k=k, ef=ef)
+    np.testing.assert_array_equal(np.asarray(ra.ids), np.asarray(rb.ids))
+    np.testing.assert_array_equal(np.asarray(ra.dists), np.asarray(rb.dists))
+
+
+class TestSnapshotRoundTrip:
+    """Acceptance: lossless round-trip for every algo × backend, including
+    post-add()/post-delete() state."""
+
+    @pytest.mark.parametrize("algo", sorted(set(algos()) & {"hnsw", "vamana", "nsg"}))
+    @pytest.mark.parametrize("kind", kinds())
+    def test_lossless(self, serve_data, tmp_path, algo, kind):
+        data, extra, queries = serve_data
+        idx = AnnIndex.build(
+            data, algo=algo, backend=kind, params=PARAMS,
+            backend_kwargs=BACKEND_KW[kind],
+        )
+        path = str(tmp_path / "snap")
+        loaded = serve.load_index(serve.save_index(path, idx))
+        assert loaded.algo == idx.algo
+        assert loaded.backend_kind == idx.backend_kind
+        _assert_same_search(idx, loaded, queries)
+
+        # …and the loaded copy is live, not read-only: maintenance applied
+        # to both sides keeps them in lockstep through another round-trip.
+        idx.add(extra)
+        idx.delete([1, 5, 9])
+        loaded2 = serve.load_index(serve.save_index(path, idx))
+        assert loaded2.n == idx.n and loaded2.n_active == idx.n_active
+        np.testing.assert_array_equal(loaded2.deleted_ids, idx.deleted_ids)
+        _assert_same_search(idx, loaded2, queries)
+
+    def test_version_and_corruption_guards(self, serve_data, tmp_path):
+        data, _, _ = serve_data
+        idx = AnnIndex.build(data, algo="hnsw", backend="fp32", params=PARAMS)
+        path = serve.save_index(str(tmp_path / "snap"), idx)
+
+        with pytest.raises(FileExistsError):
+            serve.save_index(path, idx, overwrite=False)
+        with pytest.raises(FileNotFoundError):
+            serve.load_index(str(tmp_path / "nope"))
+
+        manifest_path = os.path.join(path, "manifest.json")
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+        # future format refused with an actionable message
+        bad = dict(manifest, format_version=serve.FORMAT_VERSION + 1)
+        with open(manifest_path, "w") as f:
+            json.dump(bad, f)
+        with pytest.raises(ValueError, match="format_version"):
+            serve.load_index(path)
+        # flipped checksum detected (unless verification is waived)
+        key = next(iter(manifest["arrays"]))
+        manifest["arrays"][key]["crc"] ^= 0xDEADBEEF
+        with open(manifest_path, "w") as f:
+            json.dump(manifest, f)
+        with pytest.raises(IOError, match="checksum"):
+            serve.load_index(path)
+        assert serve.load_index(path, verify=False).n == idx.n
+
+    def test_crashed_overwrite_falls_back_to_old(self, serve_data, tmp_path):
+        """A save that died between the two directory swaps leaves the last
+        good snapshot at <path>.old; load_index recovers it."""
+        data, _, queries = serve_data
+        idx = AnnIndex.build(data, algo="hnsw", backend="fp32", params=PARAMS)
+        path = serve.save_index(str(tmp_path / "snap"), idx)
+        want = np.asarray(idx.search(queries, k=5, ef=24).ids)
+        os.replace(path, path + ".old")  # crash window: nothing at path
+        recovered = serve.load_index(path)
+        np.testing.assert_array_equal(
+            np.asarray(recovered.search(queries, k=5, ef=24).ids), want
+        )
+
+    def test_segmented_roundtrip(self, serve_data, tmp_path):
+        data, extra, queries = serve_data
+        segs = np.asarray(data).reshape(3, N_BASE // 3, -1)
+        seg_idx = SegmentedAnnIndex.build(
+            segs, algo="hnsw", backend="fp32", params=PARAMS
+        )
+        gids = seg_idx.add(extra)  # routed growth is part of the state
+        seg_idx.delete(gids[:3])
+        path = serve.save_index(str(tmp_path / "seg"), seg_idx)
+        loaded = serve.load_index(path)
+        assert isinstance(loaded, SegmentedAnnIndex)
+        assert loaded.n == seg_idx.n and loaded.n_active == seg_idx.n_active
+        for s in range(3):
+            np.testing.assert_array_equal(
+                loaded.global_ids(s), seg_idx.global_ids(s)
+            )
+        r1 = seg_idx.search(queries, k=5, ef=24)
+        r2 = loaded.search(queries, k=5, ef=24)
+        np.testing.assert_array_equal(np.asarray(r1.ids), np.asarray(r2.ids))
+        np.testing.assert_array_equal(
+            np.asarray(r1.dists), np.asarray(r2.dists)
+        )
+
+
+class TestSearchEngine:
+    @pytest.fixture(scope="class")
+    def flash_idx(self, serve_data):
+        data, _, _ = serve_data
+        return AnnIndex.build(
+            data, algo="hnsw", backend="flash_blocked", params=PARAMS,
+            backend_kwargs=FLASH_KW,
+        )
+
+    def test_compile_once_per_bucket(self, serve_data, flash_idx):
+        """The ISSUE-3 satellite: one compile per shape bucket; a second
+        call with a different Q in the same bucket recompiles nothing."""
+        _, _, queries = serve_data
+        engine = serve.SearchEngine(
+            flash_idx, k=5, ef=24, q_buckets=(1, 8)
+        ).warmup()
+        assert engine.n_compiles == 2  # exactly one per bucket
+
+        engine.search(queries[:3])   # bucket 8
+        engine.search(queries[:6])   # same bucket, different Q
+        engine.search(queries[0])    # bucket 1 (single query)
+        engine.search(queries[:8])   # bucket 8 exactly
+        assert engine.n_compiles == 2, "steady-state serving recompiled"
+        stats = engine.stats()
+        assert stats["blocks"] == 4 and stats["cache_hits"] == 4
+        assert stats["qps"] > 0 and stats["p99_ms"] >= stats["p50_ms"]
+        assert stats["n_dists_per_query"] > 0
+
+    def test_results_match_facade(self, serve_data, flash_idx):
+        _, _, queries = serve_data
+        engine = serve.SearchEngine(
+            flash_idx, k=5, ef=24, q_buckets=(1, 8)
+        ).warmup()
+        res = engine.search(queries[:5])
+        direct = flash_idx.search(queries[:5], k=5, ef=24)
+        np.testing.assert_array_equal(
+            np.asarray(res.ids), np.asarray(direct.ids)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(res.dists), np.asarray(direct.dists)
+        )
+        # single-query convenience shape
+        single = engine.search(queries[0])
+        assert single.ids.shape == (5,)
+        np.testing.assert_array_equal(
+            np.asarray(single.ids), np.asarray(direct.ids)[0]
+        )
+
+    def test_oversize_block_chunks(self, serve_data, flash_idx):
+        """Blocks beyond the top bucket are served in bucket-sized chunks."""
+        _, _, queries = serve_data
+        engine = serve.SearchEngine(
+            flash_idx, k=5, ef=24, q_buckets=(1, 4)
+        ).warmup()
+        res = engine.search(queries[:10])  # 4 + 4 + 2(padded to 4)
+        assert res.ids.shape == (10, 5)
+        direct = flash_idx.search(queries[:10], k=5, ef=24)
+        np.testing.assert_array_equal(
+            np.asarray(res.ids), np.asarray(direct.ids)
+        )
+        assert engine.n_compiles == 2
+
+    def test_tombstones_respected_after_refresh(self, serve_data):
+        data, _, queries = serve_data
+        idx = AnnIndex.build(data, algo="hnsw", backend="fp32", params=PARAMS)
+        engine = serve.SearchEngine(idx, k=5, ef=24, q_buckets=(8,))
+        victims = np.unique(np.asarray(
+            idx.search(queries, k=1, ef=24).ids
+        ).ravel())
+        idx.delete(victims)
+        engine.refresh()
+        res = engine.search(queries[:8])
+        assert not np.isin(np.asarray(res.ids), victims).any()
+
+
+    def test_add_after_delete_does_not_misclassify_new_ids(self, serve_data):
+        """A grown index must not inherit the old mask: the stale (n,) mask
+        clamp-gathers against new ids and would silently strike them."""
+        data, extra, _ = serve_data
+        idx = AnnIndex.build(data, algo="hnsw", backend="fp32", params=PARAMS)
+        engine = serve.SearchEngine(idx, k=1, ef=24, q_buckets=(4,))
+        idx.delete([idx.n - 1])
+        engine.refresh()
+        idx.add(extra)  # no refresh(): the engine must resync itself
+        res = engine.search(np.asarray(extra[:4]))
+        hits = np.asarray(res.ids)[:, 0]
+        assert (hits >= N_BASE).any(), "added ids were struck as tombstones"
+
+
+class TestMicroBatcher:
+    def test_coalesced_results_match_direct(self, serve_data):
+        data, _, queries = serve_data
+        idx = AnnIndex.build(data, algo="hnsw", backend="fp32", params=PARAMS)
+        engine = serve.SearchEngine(
+            idx, k=5, ef=24, q_buckets=(1, 8)
+        ).warmup()
+        with serve.MicroBatcher(engine, max_wait_ms=100.0) as mb:
+            futs = [mb.submit(np.asarray(queries[i])) for i in range(12)]
+            results = [f.result(timeout=30) for f in futs]
+        direct = np.asarray(idx.search(queries[:12], k=5, ef=24).ids)
+        for i, res in enumerate(results):
+            np.testing.assert_array_equal(np.asarray(res.ids), direct[i])
+            assert float(res.n_dists) > 0
+        stats = mb.stats()
+        assert stats["requests"] == 12
+        assert stats["batches"] < 12, "nothing was coalesced"
+        assert stats["max_batch_seen"] >= 2
+
+    def test_deadline_serves_lone_request(self, serve_data):
+        data, _, queries = serve_data
+        idx = AnnIndex.build(data, algo="hnsw", backend="fp32", params=PARAMS)
+        engine = serve.SearchEngine(idx, k=5, ef=24, q_buckets=(1, 8)).warmup()
+        with serve.MicroBatcher(engine, max_wait_ms=20.0) as mb:
+            t0 = time.perf_counter()
+            res = mb.search(np.asarray(queries[0]), timeout=30)
+            elapsed = time.perf_counter() - t0
+        assert res.ids.shape == (5,)
+        assert elapsed < 5.0, f"lone request stalled {elapsed:.1f}s"
+
+    def test_closed_scheduler_rejects(self, serve_data):
+        data, _, queries = serve_data
+        idx = AnnIndex.build(data, algo="hnsw", backend="fp32", params=PARAMS)
+        engine = serve.SearchEngine(idx, k=5, ef=24, q_buckets=(1,))
+        mb = serve.MicroBatcher(engine)
+        mb.close()
+        with pytest.raises(RuntimeError, match="closed"):
+            mb.submit(np.asarray(queries[0]))
+        with serve.MicroBatcher(engine) as mb2:
+            with pytest.raises(ValueError, match="single"):
+                mb2.submit(np.asarray(queries[:2]))
+
+
+class TestSegmentRouter:
+    @pytest.fixture(scope="class")
+    def seg_setup(self, serve_data):
+        data, _, queries = serve_data
+        segs = np.asarray(data).reshape(3, N_BASE // 3, -1)
+        seg_idx = SegmentedAnnIndex.build(
+            segs, algo="hnsw", backend="fp32", params=PARAMS
+        )
+        return seg_idx, queries
+
+    def test_full_probe_matches_fanout(self, seg_setup):
+        seg_idx, queries = seg_setup
+        router = serve.SegmentRouter(
+            seg_idx, n_probe=3, k=5, ef=24, q_buckets=(1, 8, 16)
+        ).warmup()
+        got = router.search(np.asarray(queries))
+        want = seg_idx.search(queries, k=5, ef=24)
+        np.testing.assert_array_equal(
+            np.asarray(got.ids), np.asarray(want.ids)
+        )
+        assert router.stats()["compiles"] == 3 * 3  # segments × buckets
+
+    def test_partial_probe_degrades_gracefully(self, seg_setup, serve_data):
+        seg_idx, queries = seg_setup
+        data, _, _ = serve_data
+        router = serve.SegmentRouter(seg_idx, n_probe=1, k=5, ef=24)
+        got = router.search(np.asarray(queries))
+        ids = np.asarray(got.ids)
+        assert ids.shape == (queries.shape[0], 5)
+        assert (ids < seg_idx.n).all()
+        truth, _ = exact_knn(queries, data, k=5)
+        partial = recall_at_k(jnp.asarray(ids), truth, 5)
+        full = recall_at_k(
+            seg_idx.search(queries, k=5, ef=24).ids, truth, 5
+        )
+        assert 0.0 < float(partial) <= float(full) + 1e-6
+        # routing is the add() rule: nearest build-time centroid first
+        assert router.route(np.asarray(queries)).shape == (queries.shape[0], 1)
+
+    def test_probe_validation(self, seg_setup):
+        seg_idx, _ = seg_setup
+        with pytest.raises(ValueError, match="n_probe"):
+            serve.SegmentRouter(seg_idx, n_probe=4)
+        router = serve.SegmentRouter(seg_idx, n_probe=1, k=5)
+        with pytest.raises(ValueError, match="exceeds"):
+            router.search(np.zeros((2, 16), np.float32), k=9)
+
+
+class TestDeprecations:
+    def test_search_flat_warns(self, serve_data):
+        data, _, queries = serve_data
+        from repro import graph
+
+        idx, _ = build_vamana(
+            data, graph.make_backend("fp32", data), params=PARAMS,
+            two_pass=False,
+        )
+        with pytest.warns(DeprecationWarning, match="search_flat"):
+            ids, dists = search_flat(idx, queries[:4], k=5, ef_search=24)
+        assert ids.shape == (4, 5)
