@@ -21,7 +21,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import DEFAULT_PARAMS, FLASH_KW, bench_data, emit, timeit
+from benchmarks.common import (
+    DEFAULT_PARAMS,
+    FLASH_KW,
+    bench_data,
+    emit,
+    time_samples,
+    timeit,
+)
 from repro import graph
 from repro.graph.knn import exact_knn, recall_at_k
 from repro.index import AnnIndex
@@ -44,26 +51,32 @@ def index_bytes(index, backend_kind: str, n: int, d: int) -> int:
     elif backend_kind.startswith("flash"):
         payload = int(be.codes.shape[0] * be.coder.code_bytes)
         if hasattr(be, "nbr_codes"):
-            payload += be.nbr_codes.shape[0] * be.nbr_codes.shape[1] * be.coder.m_f // 2
+            # actual mirror allocation — 4-bit packed uint8 since DESIGN.md
+            # §10 (formerly an estimate; the int32 mirror stored 8× this)
+            payload += int(be.nbr_codes.nbytes)
     return adj + payload
 
 
-def width_sweep(widths=(1, 4, 8), *, n: int = 3000, d: int = 48) -> dict:
+def width_sweep(
+    widths=(1, 4, 8), *, n: int = 3000, d: int = 48, repeats: int = 3
+) -> dict:
     """Multi-expansion CA sweep: build cost vs beam width W (DESIGN.md §3.2).
 
-    Reports, per W: warm wall-clock build time, distance evaluations, and the
-    headline ratio — microseconds of build time per distance evaluation. The
-    widened beam runs W× fewer while_loop iterations over W·R-dense distance
-    blocks, so us_per_dist should fall as W grows (the paper's SIMD-
-    utilization claim restated); n_dists itself grows slightly because
-    trailing picks of an iteration may lie beyond the termination bound.
+    Reports, per W: warm wall-clock build time (median of ``repeats``, raw
+    samples recorded), distance evaluations, and the headline ratio —
+    microseconds of build time per distance evaluation. The widened beam
+    runs W× fewer while_loop iterations over W·R-dense distance blocks —
+    since DESIGN.md §10 each iteration is one fused expand() kernel step —
+    so us_per_dist should fall as W grows (the paper's SIMD-utilization
+    claim restated); n_dists itself grows slightly because trailing picks
+    of an iteration may lie beyond the termination bound.
     """
     data, queries = bench_data(n, d)
     tids, _ = exact_knn(queries, data, k=10)
     key = jax.random.PRNGKey(0)
-    # flash_blocked so the W·R blocks actually go through the kernel-routed
-    # mirror path (flash_scan_batch) — the mechanism the sweep claims to
-    # measure; plain "flash" would time the gather fallback.
+    # flash_blocked so the W·R blocks actually go through the fused
+    # expand() path (kernels.ops.flash_expand) — the mechanism the sweep
+    # claims to measure; plain "flash" would time the gather fallback.
     be = graph.make_backend(
         "flash_blocked", data, key,
         r_for_blocked=DEFAULT_PARAMS.r_base, **FLASH_KW,
@@ -79,13 +92,17 @@ def width_sweep(widths=(1, 4, 8), *, n: int = 3000, d: int = 48) -> dict:
         # single-core container: medians over several warm repeats, or the
         # per-width comparison drowns in scheduler/GC noise (the stats build
         # above already served as the warmup)
-        warm = timeit(lambda: build().graph.adj0, repeats=5, warmup=0)  # noqa: B023
+        samples = time_samples(
+            lambda: build().graph.adj0, repeats=repeats, warmup=0  # noqa: B023
+        )
+        warm = float(np.median(samples))
         n_dists = float(index.last_stats.n_dists)
         res = index.search(queries, k=10, ef=96)
         rec = float(recall_at_k(res.ids, tids, 10))
         out[str(w)] = dict(
             width=w,
             build_s=warm,
+            build_s_samples=samples,
             n_dists=n_dists,
             us_per_dist=warm / n_dists * 1e6,
             recall_at_10=rec,
@@ -95,10 +112,23 @@ def width_sweep(widths=(1, 4, 8), *, n: int = 3000, d: int = 48) -> dict:
             f"n_dists={n_dists:.0f} us_per_dist={warm / n_dists * 1e6:.4f} "
             f"recall={rec:.3f}",
         )
+    mirror = be.nbr_codes
     return dict(
         bench="indexing_width_sweep",
         n=n, d=d,
         params=dataclasses.asdict(DEFAULT_PARAMS) | {"width": "swept"},
+        repeats=repeats,
+        mirror=dict(
+            packed=bool(mirror.dtype == jnp.uint8),
+            bytes=int(mirror.nbytes),
+            bytes_per_vertex=int(mirror.nbytes) // n,
+            # what the same mirror costs at one byte per codeword — the
+            # packed layout must report half of this (acceptance criterion)
+            bytes_unpacked_u8=int(
+                mirror.shape[0] * mirror.shape[1] * be.coder.m_f
+            ),
+            code_bytes_per_vector=float(be.coder.code_bytes),
+        ),
         widths=out,
     )
 
@@ -152,10 +182,16 @@ def run() -> dict:
 
 
 def update_bench(
-    *, n: int = 2400, d: int = 48, grow_frac: float = 0.25, n_delete: int = 64
+    *, n: int = 2400, d: int = 48, grow_frac: float = 0.25, n_delete: int = 64,
+    repeats: int = 3,
 ) -> dict:
     """Dynamic maintenance (DESIGN.md §8): add-throughput and post-delete
     recall on a flash_blocked HNSW index, vs a from-scratch rebuild.
+
+    Both timed sections (the rebuild and the add) run ``repeats`` times —
+    the add against a fresh restored copy of the base index each round —
+    reporting medians with raw samples in the payload. The first rebuild
+    sample includes compile time; the median is warm.
 
     The acceptance bar this reports on (and tests/test_index.py asserts):
     adding a 25% growth batch reaches recall@10 within 0.02 of the full
@@ -168,13 +204,16 @@ def update_bench(
     kw = dict(FLASH_KW)
 
     # From-scratch build over the union (the thing add() must not rebuild).
-    t0 = time.perf_counter()
-    full = AnnIndex.build(
-        data, algo="hnsw", backend="flash_blocked",
-        params=DEFAULT_PARAMS, backend_kwargs=kw,
-    )
-    jax.block_until_ready(full.graph.adj0)
-    t_full = time.perf_counter() - t0
+    t_full_samples = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        full = AnnIndex.build(
+            data, algo="hnsw", backend="flash_blocked",
+            params=DEFAULT_PARAMS, backend_kwargs=kw,
+        )
+        jax.block_until_ready(full.graph.adj0)
+        t_full_samples.append(time.perf_counter() - t0)
+    t_full = float(np.median(t_full_samples))
     nd_full = float(full.last_stats.n_dists)
     rec_full = recall_at_k(full.search(queries, k=10, ef=96).ids, tids, 10)
 
@@ -184,10 +223,15 @@ def update_bench(
         params=DEFAULT_PARAMS, backend_kwargs=kw,
     )
     jax.block_until_ready(inc.graph.adj0)
-    t0 = time.perf_counter()
-    add_stats = inc.add(extra)
-    jax.block_until_ready(inc.graph.adj0)
-    t_add = time.perf_counter() - t0
+    base_state = inc.export_state()
+    t_add_samples = []
+    for _ in range(repeats):
+        inc = AnnIndex.restore(*base_state)  # fresh base every round
+        t0 = time.perf_counter()
+        add_stats = inc.add(extra)
+        jax.block_until_ready(inc.graph.adj0)
+        t_add_samples.append(time.perf_counter() - t0)
+    t_add = float(np.median(t_add_samples))
     nd_add = float(add_stats.n_dists)
     rec_add = recall_at_k(inc.search(queries, k=10, ef=96).ids, tids, 10)
     emit(
@@ -213,10 +257,14 @@ def update_bench(
     )
     return dict(
         bench="dynamic_update",
-        n=n, d=d, grow=m, deleted=int(len(victims)),
-        rebuild=dict(seconds=t_full, n_dists=nd_full, recall_at_10=rec_full),
+        n=n, d=d, grow=m, deleted=int(len(victims)), repeats=repeats,
+        rebuild=dict(
+            seconds=t_full, seconds_samples=t_full_samples,
+            n_dists=nd_full, recall_at_10=rec_full,
+        ),
         add=dict(
-            seconds=t_add, adds_per_s=m / t_add, n_dists=nd_add,
+            seconds=t_add, seconds_samples=t_add_samples,
+            adds_per_s=m / t_add, n_dists=nd_add,
             n_dists_vs_rebuild=nd_add / nd_full, recall_at_10=rec_add,
             recall_delta=rec_add - rec_full,
         ),

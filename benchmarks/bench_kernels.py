@@ -1,0 +1,175 @@
+"""Kernel microbench — scan vs fused-expand (DESIGN.md §10).
+
+Times the two CA-stage kernel entry points in isolation, outside any build
+loop, so kernel-level regressions are visible without graph-build noise:
+
+  * ``flash_scan`` block-size sweep: the batched ADT lookup-accumulate at
+    several ``block_n`` tilings (Pallas-level knob; on this TPU-less host
+    interpret mode is what can execute the tiled program, with the pure-jnp
+    ref alongside as the production-CPU dispatch),
+  * width sweep, gather+scan vs fused expand: for each W, one jitted
+    ``beam_search`` step compiled both ways (``fused=True`` vs ``False``)
+    over a synthetic blocked index — the unfused three-stage pipeline
+    (adjacency gather → mirror gather+unpack → ``flash_scan_batch``)
+    against the fused ``flash_expand`` path on the same packed mirror,
+    asserted bit-identical before timing.
+
+``python benchmarks/run.py --json BENCH_kernels.json --only kernels``
+writes the machine-readable payload (CI uploads it as an artifact); every
+timed section runs ``--repeats`` times and records raw samples.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_samples
+from repro import graph
+from repro.graph.beam import beam_search
+from repro.kernels import ops
+
+
+def _median_us(samples: list[float]) -> float:
+    return float(np.median(samples)) * 1e6
+
+
+def scan_block_sweep(
+    *, n: int = 4096, m: int = 16, k: int = 16,
+    block_ns=(256, 512, 1024), repeats: int = 3,
+) -> dict:
+    """flash_scan block_n sweep (interpret-mode Pallas) + ref baseline."""
+    rng = np.random.default_rng(0)
+    codes = jnp.asarray(rng.integers(0, k, (n, m)), jnp.int32)
+    adt = jnp.asarray(rng.integers(0, 255, (m, k)), jnp.int32)
+    out: dict = {"n": n, "m": m, "k": k, "repeats": repeats, "impls": {}}
+
+    ref_s = time_samples(
+        lambda: ops.flash_scan(codes, adt, impl="ref"), repeats=repeats
+    )
+    out["impls"]["ref"] = dict(us=_median_us(ref_s), us_samples=ref_s)
+    emit("kernels/scan_ref", _median_us(ref_s), f"n={n}")
+    for bn in block_ns:
+        s = time_samples(
+            lambda: ops.flash_scan(  # noqa: B023
+                codes, adt, impl="interpret", block_n=bn
+            ),
+            repeats=repeats,
+        )
+        out["impls"][f"interpret_bn{bn}"] = dict(
+            block_n=bn, us=_median_us(s), us_samples=s
+        )
+        emit(f"kernels/scan_interp_bn{bn}", _median_us(s), f"n={n}")
+    return out
+
+
+def expand_width_sweep(
+    *, n: int = 4096, d: int = 32, r: int = 32, widths=(1, 4, 8, 16),
+    n_q: int = 8, ef: int = 48, repeats: int = 5,
+) -> dict:
+    """Fused expand vs gather+scan, per beam width W, inside the real hot
+    loop: a jitted vmapped ``beam_search`` over a synthetic blocked index.
+
+    Timing the two entry points as isolated eager ops measures XLA CPU
+    *dispatch* (single calls are ~100 µs and flap with CFS throttling, and
+    inside ``beam_search`` both paths are inlined into one compiled
+    program anyway — there is no per-call dispatch to save). So this sweep
+    compiles the whole beam step both ways — ``fused=True`` vs
+    ``fused=False`` on identical inputs, bit-identical outputs — and times
+    the compiled programs: the apples-to-apples cost of the fused kernel
+    path against the three-stage gather+scan pipeline, per width.
+    """
+    rng = np.random.default_rng(1)
+    data = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    be = graph.make_backend(
+        "flash_blocked", data, jax.random.PRNGKey(0),
+        r_for_blocked=r, d_f=16, m_f=16, l_f=4, h=8, kmeans_iters=4,
+    )
+    # random regular graph; with_updated_edges keeps the mirror in sync
+    adjacency = jnp.asarray(rng.integers(0, n, (n, r)), jnp.int32)
+    be = be.with_updated_edges(jnp.arange(n), adjacency)
+    queries = jnp.asarray(rng.normal(size=(n_q, d)), jnp.float32)
+
+    out: dict = {
+        "n": n, "d": d, "r": r, "n_q": n_q, "ef": ef, "repeats": repeats,
+        "mirror_bytes_packed": int(be.nbr_codes.nbytes),
+        "mirror_bytes_unpacked_int32": int(be.nbr_codes.nbytes) * 8,
+        "widths": {},
+    }
+    for w in widths:
+
+        def beam(qs, *, fused, w=w):
+            return jax.vmap(
+                lambda q: beam_search(
+                    be, be.prepare_query(q), adjacency, jnp.asarray([0]),
+                    ef=ef, width=w, fused=fused,
+                ).dists
+            )(qs)
+
+        f_fused = jax.jit(functools.partial(beam, fused=True))
+        f_unfused = jax.jit(functools.partial(beam, fused=False))
+        np.testing.assert_array_equal(  # same program, same bits
+            np.asarray(f_fused(queries)), np.asarray(f_unfused(queries))
+        )
+        # interleave the two sides so CFS throttle windows (2-core box)
+        # hit both alike — the ratio is the claim, not the absolutes
+        fused_s, unfused_s = [], []
+        for _ in range(repeats):
+            fused_s += time_samples(
+                lambda: f_fused(queries), repeats=1, warmup=0  # noqa: B023
+            )
+            unfused_s += time_samples(
+                lambda: f_unfused(queries), repeats=1, warmup=0  # noqa: B023
+            )
+        row = dict(
+            width=w,
+            fused_us=_median_us(fused_s), fused_us_samples=fused_s,
+            unfused_us=_median_us(unfused_s), unfused_us_samples=unfused_s,
+            speedup=float(np.median(unfused_s) / np.median(fused_s)),
+        )
+        out["widths"][str(w)] = row
+        emit(
+            f"kernels/expand_w{w}", row["fused_us"],
+            f"unfused={row['unfused_us']:.1f}us speedup={row['speedup']:.2f}x",
+        )
+    # one interpret-mode Pallas execution of the kernel itself (the tiled
+    # program is exercised even on this TPU-less host; ms-scale)
+    w_max = max(widths)
+    nodes = jnp.asarray(rng.integers(0, n, (w_max,)), jnp.int32)
+    qctx = be.prepare_query(queries[0])
+    interp_s = time_samples(
+        lambda: ops.flash_expand(
+            nodes, adjacency, be.nbr_codes, qctx.adt_q, impl="interpret"
+        ),
+        repeats=repeats,
+    )
+    out["interpret_wmax"] = dict(
+        width=w_max, us=_median_us(interp_s), us_samples=interp_s
+    )
+    return out
+
+
+def kernels_bench(*, repeats: int = 3) -> dict:
+    """The BENCH_kernels.json payload (run.py --only kernels).
+
+    The expand sweep floors its repeats at 5 (its per-call times are µs,
+    where 3 samples is not enough of a median on this box); each section
+    records the repeat count it actually ran, beside its raw samples.
+    """
+    return dict(
+        bench="kernels_scan_vs_expand",
+        repeats_requested=repeats,
+        scan_block_sweep=scan_block_sweep(repeats=repeats),
+        expand_width_sweep=expand_width_sweep(repeats=max(repeats, 5)),
+    )
+
+
+def run() -> dict:
+    return kernels_bench()
+
+
+if __name__ == "__main__":
+    run()

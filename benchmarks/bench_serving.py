@@ -35,7 +35,7 @@ SPEEDUP_BAR = 3.0
 
 def serving_bench(
     *, n: int = 2000, d: int = 48, n_q: int = 32, k: int = 10, ef: int = 64,
-    width: int = 4,
+    width: int = 4, repeats: int = 3,
 ) -> dict:
     data, queries = bench_data(n, d)
     queries = queries[:n_q]
@@ -46,15 +46,20 @@ def serving_bench(
     jax.block_until_ready(idx.graph.adj0)
 
     # --- snapshot: save/load time, size, losslessness ---------------------
+    # (median of ``repeats`` save/load rounds; raw samples in the payload)
     tmp = tempfile.mkdtemp(prefix="bench_serving_")
     try:
         path = f"{tmp}/snap"
-        t0 = time.perf_counter()
-        serve.save_index(path, idx)
-        t_save = time.perf_counter() - t0
-        t0 = time.perf_counter()
-        loaded = serve.load_index(path)
-        t_load = time.perf_counter() - t0
+        save_samples, load_samples = [], []
+        for _ in range(max(repeats, 1)):
+            t0 = time.perf_counter()
+            serve.save_index(path, idx)
+            save_samples.append(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            loaded = serve.load_index(path)
+            load_samples.append(time.perf_counter() - t0)
+        t_save = float(np.median(save_samples))
+        t_load = float(np.median(load_samples))
         snap_bytes = serve.snapshot_bytes(path)
         live = idx.search(queries, k=k, ef=ef)
         back = loaded.search(queries, k=k, ef=ef)
@@ -104,7 +109,7 @@ def serving_bench(
     time.sleep(0.5)
     with serve.MicroBatcher(engine, max_wait_ms=5.0) as mb:
         waves = []
-        for wave in range(4):
+        for wave in range(max(repeats, 3) + 1):
             t0 = time.perf_counter()
             futs = [mb.submit(np.asarray(queries[i])) for i in range(n_q)]
             for f in futs:
@@ -115,6 +120,7 @@ def serving_bench(
         # box intermittently absorb whole CFS throttle windows, which would
         # otherwise make this line flap 10x run-to-run
         t_sched = float(np.min(waves))
+        sched_waves = waves
         sched_stats = mb.stats()
     sched_qps = n_q / t_sched
 
@@ -132,7 +138,7 @@ def serving_bench(
 
     seq(); block()  # warm both paths
     seq_times, block_times = [], []
-    for _ in range(5):
+    for _ in range(max(repeats, 5)):
         t0 = time.perf_counter()
         seq()
         seq_times.append(time.perf_counter() - t0)
@@ -163,8 +169,17 @@ def serving_bench(
         n=n, d=d, n_q=n_q, k=k, ef=ef,
         backend="flash_blocked",
         snapshot=dict(
-            save_s=t_save, load_s=t_load, bytes=snap_bytes,
-            lossless=lossless,
+            save_s=t_save, save_s_samples=save_samples,
+            load_s=t_load, load_s_samples=load_samples,
+            bytes=snap_bytes, lossless=lossless,
+        ),
+        # sections floor their sample counts for stability on this box; the
+        # actual counts are the lengths of each *_samples array
+        repeats=dict(
+            requested=repeats,
+            snapshot=max(repeats, 1),
+            interleave=max(repeats, 5),
+            scheduler_waves=max(repeats, 3),
         ),
         engine=dict(
             q_buckets=[1, 8, 32], width=width,
@@ -175,7 +190,9 @@ def serving_bench(
         baseline_recall_at_10=rec_seq,
         batching=dict(
             sequential_qps=seq_qps, batched_qps=block_qps,
-            scheduler_qps=sched_qps, speedup=speedup,
+            sequential_s_samples=seq_times, batched_s_samples=block_times,
+            scheduler_qps=sched_qps, scheduler_s_samples=sched_waves,
+            speedup=speedup,
             speedup_bar=SPEEDUP_BAR,
             scheduler_batches=sched_stats["batches"],
             scheduler_mean_batch=sched_stats["mean_batch"],

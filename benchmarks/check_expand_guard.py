@@ -1,0 +1,113 @@
+"""CI guard: fused expand() may only be selected behind the capability hook.
+
+``beam_search`` decides statically (graph.beam.uses_fused_expand) whether to
+route an iteration through ``backend.expand()`` (DESIGN.md §10). A backend
+routed onto the fused path without advertising ``supports_expand`` would
+fail deep inside a traced while_loop — or, worse, a future backend could
+alias the method name and silently score garbage. This script fails the CI
+build the moment the dispatch table drifts:
+
+  * every registered backend kind is instantiated on a tiny dataset and the
+    dispatch decision is asserted: True exactly for the Flash blocked
+    layout at its mirror width, False everywhere else (including the
+    blocked layout at a mismatched width — upper HNSW layers),
+  * forcing ``fused=True`` on a hook-less backend must raise, not degrade,
+  * and the fused path must agree bit-exactly with the gather+scan
+    fallback on one smoke search.
+
+Exit 0 = dispatch table sound.  Usage: PYTHONPATH=src python
+benchmarks/check_expand_guard.py
+"""
+
+from __future__ import annotations
+
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import graph
+from repro.graph.beam import beam_search, uses_fused_expand
+
+R_MIRROR = 16
+FLASH_KW = dict(d_f=16, m_f=8, l_f=4, h=8, kmeans_iters=4)
+BACKEND_KW = {
+    "fp32": {},
+    "pq": dict(m=8, l_pq=4, kmeans_iters=4),
+    "sq": dict(bits=8),
+    "pca": dict(alpha=0.9),
+    "flash": dict(FLASH_KW),
+    "flash_blocked": dict(FLASH_KW, r_for_blocked=R_MIRROR),
+}
+
+
+def main() -> int:
+    rng = np.random.default_rng(0)
+    data = jnp.asarray(rng.normal(size=(256, 32)), jnp.float32)
+    key = jax.random.PRNGKey(0)
+    failures: list[str] = []
+
+    backends = {}
+    for kind in graph.kinds():
+        kw = BACKEND_KW.get(kind)
+        if kw is None:
+            failures.append(f"backend kind {kind!r} missing from this guard "
+                            "— add it to BACKEND_KW")
+            continue
+        backends[kind] = graph.make_backend(kind, data, key, **kw)
+
+    for kind, be in backends.items():
+        expect = kind == "flash_blocked"
+        got = uses_fused_expand(be, R_MIRROR)
+        if got is not expect:
+            failures.append(
+                f"{kind}: uses_fused_expand(R={R_MIRROR}) = {got}, "
+                f"expected {expect}"
+            )
+        if uses_fused_expand(be, R_MIRROR + 1):
+            failures.append(
+                f"{kind}: fused path claimed for mismatched width "
+                f"R={R_MIRROR + 1} (mirror is {R_MIRROR})"
+            )
+
+    # Forcing the fused path without the hook must raise, not degrade.
+    adj = jnp.full((256, R_MIRROR), -1, jnp.int32).at[:, 0].set(0)
+    fp32 = backends["fp32"]
+    try:
+        beam_search(
+            fp32, fp32.prepare_query(data[0]), adj, jnp.asarray([0]),
+            ef=8, fused=True,
+        )
+        failures.append("beam_search(fused=True) on fp32 did not raise")
+    except ValueError:
+        pass
+
+    # Fused == fallback on one smoke search (bit-exact).
+    blocked = backends["flash_blocked"]
+    adj_rnd = jnp.asarray(rng.integers(-1, 256, (256, R_MIRROR)), jnp.int32)
+    blocked = blocked.with_updated_edges(jnp.arange(256), adj_rnd)
+    qctx = blocked.prepare_query(data[0])
+    a = beam_search(blocked, qctx, adj_rnd, jnp.asarray([0]), ef=16, width=4,
+                    fused=True)
+    b = beam_search(blocked, qctx, adj_rnd, jnp.asarray([0]), ef=16, width=4,
+                    fused=False)
+    if not (
+        np.array_equal(np.asarray(a.ids), np.asarray(b.ids))
+        and np.array_equal(np.asarray(a.dists), np.asarray(b.dists))
+        and int(a.n_dists) == int(b.n_dists)
+    ):
+        failures.append("fused smoke search disagrees with gather+scan")
+
+    if failures:
+        print("expand capability guard FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print("expand capability guard OK "
+          f"({len(backends)} backend kinds checked)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

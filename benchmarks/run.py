@@ -9,6 +9,10 @@ Default mode prints ``name,us_per_call,derived`` CSV rows
     python benchmarks/run.py --json BENCH_indexing.json   # width sweep +
                                                           # dynamic update
     python benchmarks/run.py --json BENCH_serving.json --only serving
+    python benchmarks/run.py --json BENCH_kernels.json --only kernels
+
+``--repeats N`` (default 3) runs every timed section N times; medians are
+reported and the raw samples recorded in the JSON (2-core container noise).
 
   bench_indexing     Figures 6, 7 + Table 4   (build time / size / coding time)
   bench_search       Figures 8, 9             (QPS-Recall, QPS-ADR)
@@ -21,6 +25,8 @@ Default mode prints ``name,us_per_call,derived`` CSV rows
   bench_serving      beyond-paper             (repro.serve: snapshot +
                                               shape-bucketed QPS + batching
                                               speedup, DESIGN.md §9)
+  bench_kernels      beyond-paper             (scan vs fused-expand kernel
+                                              microbench, DESIGN.md §10)
 
 Roofline terms per (arch × shape) come from the dry-run, not this harness:
 ``python -m repro.launch.dryrun`` (see EXPERIMENTS.md §Roofline).
@@ -38,48 +44,17 @@ import traceback
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
 
 
-def run_json(path: str, only: str) -> None:
-    """Machine-readable perf snapshot (build/serve trajectory across PRs)."""
-    if only == "serving":
-        from benchmarks import bench_serving
-
-        print("name,us_per_call,derived")
-        payload = bench_serving.serving_bench()
-        with open(path, "w") as f:
-            json.dump(payload, f, indent=2, sort_keys=True)
-        print(f"wrote {path}", file=sys.stderr)
-        if payload["engine"]["recompiles_after_warmup"]:
-            print(
-                "WARNING: serving engine recompiled after warmup "
-                f"({payload['engine']['recompiles_after_warmup']} traces)",
-                file=sys.stderr,
-            )
-        speedup = payload["batching"]["speedup"]
-        if speedup < bench_serving.SPEEDUP_BAR:
-            print(
-                f"WARNING: batched serving speedup {speedup:.2f}x below the "
-                f"{bench_serving.SPEEDUP_BAR:.0f}x acceptance bar",
-                file=sys.stderr,
-            )
-        return
+def _json_indexing_widths(repeats: int) -> tuple[dict, list[str]]:
     from benchmarks import bench_indexing
 
-    if only != "indexing_widths":
-        raise SystemExit(
-            f"unknown --only {only!r} (have: indexing_widths, serving)"
-        )
-    print("name,us_per_call,derived")
-    payload = bench_indexing.width_sweep()
-    payload["update"] = bench_indexing.update_bench()
-    with open(path, "w") as f:
-        json.dump(payload, f, indent=2, sort_keys=True)
-    print(f"wrote {path}", file=sys.stderr)
+    payload = bench_indexing.width_sweep(repeats=repeats)
+    payload["update"] = bench_indexing.update_bench(repeats=repeats)
+    warnings = []
     upd = payload["update"]["add"]
     if upd["n_dists_vs_rebuild"] >= 0.5:
-        print(
-            f"WARNING: add() cost {upd['n_dists_vs_rebuild']:.2f} of a full "
-            "rebuild's distance evaluations (acceptance bar: < 0.5)",
-            file=sys.stderr,
+        warnings.append(
+            f"add() cost {upd['n_dists_vs_rebuild']:.2f} of a full "
+            "rebuild's distance evaluations (acceptance bar: < 0.5)"
         )
     widths = payload["widths"]
     base = widths.get("1")
@@ -89,17 +64,83 @@ def run_json(path: str, only: str) -> None:
             if w != "1" and row["us_per_dist"] >= base["us_per_dist"]
         ]
         if worse:
-            print(
-                f"WARNING: width(s) {worse} did not beat width=1 on "
-                "us_per_dist",
-                file=sys.stderr,
+            warnings.append(
+                f"width(s) {worse} did not beat width=1 on us_per_dist"
             )
+    return payload, warnings
+
+
+def _json_serving(repeats: int) -> tuple[dict, list[str]]:
+    from benchmarks import bench_serving
+
+    payload = bench_serving.serving_bench(repeats=repeats)
+    warnings = []
+    if payload["engine"]["recompiles_after_warmup"]:
+        warnings.append(
+            "serving engine recompiled after warmup "
+            f"({payload['engine']['recompiles_after_warmup']} traces)"
+        )
+    speedup = payload["batching"]["speedup"]
+    if speedup < bench_serving.SPEEDUP_BAR:
+        warnings.append(
+            f"batched serving speedup {speedup:.2f}x below the "
+            f"{bench_serving.SPEEDUP_BAR:.0f}x acceptance bar"
+        )
+    return payload, warnings
+
+
+def _json_kernels(repeats: int) -> tuple[dict, list[str]]:
+    from benchmarks import bench_kernels
+
+    payload = bench_kernels.kernels_bench(repeats=repeats)
+    warnings = []
+    slow = [
+        w for w, row in payload["expand_width_sweep"]["widths"].items()
+        if row["speedup"] < 1.0
+    ]
+    if slow:
+        warnings.append(
+            f"fused expand did not beat the unfused gather+scan at width(s) "
+            f"{slow} (microbench on a 2-core box — check the *_us_samples "
+            "arrays in the JSON before reading this as a regression)"
+        )
+    return payload, warnings
+
+
+#: --only suite name -> builder returning (payload, warning strings).
+JSON_SUITES = {
+    "indexing_widths": _json_indexing_widths,
+    "serving": _json_serving,
+    "kernels": _json_kernels,
+}
+
+
+def run_json(path: str, only: str, repeats: int) -> None:
+    """Machine-readable perf snapshot (build/serve trajectory across PRs).
+
+    Every timed section runs ``repeats`` times (median reported, raw
+    samples recorded in the JSON) — single-shot timings on this 2-core
+    container flap with scheduler noise.
+    """
+    suite = JSON_SUITES.get(only)
+    if suite is None:
+        raise SystemExit(
+            f"unknown --only {only!r} (have: {', '.join(JSON_SUITES)})"
+        )
+    print("name,us_per_call,derived")
+    payload, warnings = suite(repeats)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"wrote {path}", file=sys.stderr)
+    for msg in warnings:
+        print(f"WARNING: {msg}", file=sys.stderr)
 
 
 def run_csv() -> None:
     from benchmarks import (
         bench_generality,
         bench_indexing,
+        bench_kernels,
         bench_memory,
         bench_params,
         bench_retrieval,
@@ -114,7 +155,7 @@ def run_csv() -> None:
     for mod in (
         bench_indexing, bench_search, bench_scalability, bench_simd,
         bench_generality, bench_memory, bench_params, bench_retrieval,
-        bench_serving,
+        bench_serving, bench_kernels,
     ):
         try:
             mod.run()
@@ -135,11 +176,18 @@ def main() -> None:
     )
     ap.add_argument(
         "--only", default="indexing_widths",
-        help="which JSON suite to run (with --json); default indexing_widths",
+        help="which JSON suite to run (with --json): "
+        f"{', '.join(JSON_SUITES)}; default indexing_widths",
+    )
+    ap.add_argument(
+        "--repeats", type=int, default=3, metavar="N",
+        help="run each timed section N times; the median is reported and "
+        "all samples land in the JSON (default 3 — the 2-core container "
+        "needs it)",
     )
     args = ap.parse_args()
     if args.json:
-        run_json(args.json, args.only)
+        run_json(args.json, args.only, args.repeats)
     else:
         run_csv()
 

@@ -32,10 +32,12 @@ from repro.core.flash import (  # noqa: F401
     estimate_distance,
     fit_flash,
     from_neighbor_blocks,
+    pack_codes,
     query_ctx,
     reconstruct,
     sdc_lookup,
     to_neighbor_blocks,
+    unpack_codes,
 )
 from repro.core.margin import (  # noqa: F401
     TripleSet,

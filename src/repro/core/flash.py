@@ -253,6 +253,33 @@ def sdc_lookup(coder: FlashCoder, codes_a: jax.Array, codes_b: jax.Array) -> jax
 
 
 # ---------------------------------------------------------------------------
+# Packed 4-bit code storage (§3.3.3 — two codewords per byte, as on CPU)
+# ---------------------------------------------------------------------------
+
+
+def pack_codes(codes: jax.Array) -> jax.Array:
+    """Pack codewords (…, M) int in [0, 16) into (…, ⌈M/2⌉) uint8.
+
+    The HBM storage format of the blocked neighbor mirror: two 4-bit
+    codewords per int8 lane, halving the mirror's footprint and the DMA
+    bytes per beam-expansion step. Odd M is zero-padded (the high nibble of
+    the last byte); :func:`unpack_codes` slices it back off. Only valid for
+    K ≤ 16 coders (L_F ≤ 4, the paper's Flash configuration).
+    """
+    m = codes.shape[-1]
+    if m % 2:
+        codes = jnp.concatenate(
+            [codes, jnp.zeros(codes.shape[:-1] + (1,), codes.dtype)], axis=-1
+        )
+    return qz.pack4(codes)
+
+
+def unpack_codes(packed: jax.Array, m: int) -> jax.Array:
+    """Inverse of :func:`pack_codes`: (…, ⌈m/2⌉) uint8 -> (…, m) int32."""
+    return qz.unpack4(packed)[..., :m]
+
+
+# ---------------------------------------------------------------------------
 # Access-aware neighbor-block layout (§3.3.4)
 # ---------------------------------------------------------------------------
 

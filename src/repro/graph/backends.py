@@ -24,6 +24,19 @@ L2, or a monotone affine image of it; never mixed across backends):
                                   Pallas kernel (kernels.ops.flash_scan_batch)
                                   instead of W·R random gathers.
     pair_dists(ids_a, ids_b)    -> f32    distances between stored ids
+    supports_expand(r)          -> bool   capability hook: can ``expand``
+                                  serve adjacency rows of width ``r``?
+                                  (static — checked once at trace time by
+                                  ``beam_search``; False everywhere except
+                                  the Flash blocked layout)
+    expand(qctx, nodes, adjacency) -> (rows, dists)  the FUSED CA hot path
+                                  (DESIGN.md §10): one whole beam-expansion
+                                  step in a single kernel — scalar-prefetch
+                                  the (W,) frontier, gather adjacency +
+                                  packed code rows in-kernel, score via the
+                                  MXU one-hot ADT contraction. Returns the
+                                  gathered (W, R) rows and their (W, R) f32
+                                  distances (callers mask invalid slots).
     with_updated_edges(ids, nbr_ids) -> backend   commit hook (blocked layout)
     extend(new_vectors)         -> backend  dynamic growth (DESIGN.md §8):
                                   encode new raw vectors with the FROZEN
@@ -98,6 +111,16 @@ class _Base:
         # Default: one batched gather-and-score; every backend's query_dists
         # broadcasts over leading axes, so (W, R) ids come back as (W, R).
         return self.query_dists(qctx, ids)
+
+    def supports_expand(self, r: int) -> bool:  # noqa: ARG002
+        """Fused-expansion capability (DESIGN.md §10): default unsupported."""
+        return False
+
+    def expand(self, qctx, nodes, adjacency):
+        raise NotImplementedError(
+            f"{type(self).__name__} has no fused expand() path; beam_search "
+            "must take the gather+scan fallback (supports_expand() is False)"
+        )
 
     def with_updated_edges(self, ids, nbr_ids):  # noqa: ARG002
         return self
@@ -300,15 +323,24 @@ class FlashBackend(_Base):
 
 @jax.tree_util.register_pytree_node_class
 class FlashBlockedBackend(FlashBackend):
-    """Flash + the access-aware neighbor layout of §3.3.4.
+    """Flash + the access-aware neighbor layout of §3.3.4, 4-bit packed.
 
-    In addition to per-node codes, maintains ``nbr_codes`` (n, R, M): each
-    vertex's neighbors' codewords stored contiguously with the vertex, so the
-    CA hot loop reads one sequential row (one HBM→VMEM DMA) instead of R
-    random gathers. ``with_updated_edges`` is the commit hook that keeps the
-    mirror in sync — the memory-for-locality trade the paper measures in its
-    index-size figures (HNSW-Flash compresses less than HNSW-PQ but builds
-    faster, Figure 7).
+    In addition to per-node codes, maintains ``nbr_codes`` — each vertex's
+    neighbors' codewords stored contiguously with the vertex, so the CA hot
+    loop reads one sequential row (one HBM→VMEM DMA) instead of R random
+    gathers. For the paper's Flash configuration (K ≤ 16, L_F ≤ 4) the
+    mirror is **packed**: (n, R, ⌈M/2⌉) uint8, two codewords per int8 lane
+    exactly as the CPU implementation stores them — half the HBM footprint
+    and DMA bytes of the former (n, R, M) int32 layout, with unpack fused
+    into the kernels that read it. K > 16 coders (PQ-style tables) keep the
+    unpacked int32 mirror. ``with_updated_edges`` is the commit hook that
+    keeps the mirror in sync — the memory-for-locality trade the paper
+    measures in its index-size figures (Figure 7).
+
+    This backend owns the fused ``expand()`` path (DESIGN.md §10): one
+    Pallas program per beam-expansion step, with the adjacency-row and
+    code-row gathers done in-kernel via scalar prefetch and the ADT lookup
+    run as an MXU one-hot contraction (`kernels.ops.flash_expand`).
     """
 
     _fields = ("coder", "codes", "nbr_codes")
@@ -316,21 +348,54 @@ class FlashBlockedBackend(FlashBackend):
 
     def __init__(self, coder: core.FlashCoder, codes: jax.Array, nbr_codes: jax.Array):
         super().__init__(coder, codes)
-        self.nbr_codes = nbr_codes  # (n, R, M) int32, code 0 where id == -1
+        # (n, R, ⌈M/2⌉) uint8 packed (K ≤ 16) | (n, R, M) int32 legacy;
+        # code 0 where id == -1.
+        self.nbr_codes = nbr_codes
+
+    @property
+    def mirror_packed(self) -> bool:
+        return self.nbr_codes.dtype == jnp.uint8
+
+    def _mirror_rows_unpacked(self, nodes):
+        """Gather (…, R, M) int32 codewords for ``nodes``'s mirror rows."""
+        rows = self.nbr_codes[jnp.maximum(nodes, 0)]
+        if self.mirror_packed:
+            return core.unpack_codes(rows, self.coder.m_f)
+        return rows
+
+    def supports_expand(self, r: int) -> bool:
+        """Fused path serves exactly the mirror's layer width (the base
+        layer, where ~all CA traffic happens)."""
+        return r == self.nbr_codes.shape[1]
+
+    def expand(self, qctx, nodes, adjacency):
+        """One fused beam-expansion step: in-kernel gather of the W frontier
+        vertices' adjacency + packed code rows, MXU one-hot ADT contraction
+        (kernels.ops.flash_expand). Bit-exact with the gather+scan fallback:
+        integer one-hot matmul == integer table gather-sum."""
+        rows, sums = ops.flash_expand(
+            nodes, adjacency, self.nbr_codes, qctx.adt_q
+        )
+        return rows, sums.astype(jnp.float32)
 
     def neighbor_dists_batch(self, qctx, nodes, ids):
-        """Multi-expansion CA block: W contiguous (R, M) mirror rows, scored
-        through the blocked Pallas kernel (§3.3.4 restated for W rows —
-        one HBM→VMEM DMA per expanded vertex, zero per-neighbor gathers).
+        """Multi-expansion CA block: W contiguous mirror rows, scored through
+        the blocked Pallas kernel (§3.3.4 restated for W rows — one
+        HBM→VMEM DMA per expanded vertex, zero per-neighbor gathers). The
+        unfused fallback to :meth:`expand`, kept for parity testing and for
+        callers that already hold the gathered rows.
 
         Static shape dispatch: the mirror tracks one layer's degree (the
-        base layer, where ~all CA traffic happens); other widths fall back
-        to the gather path.
+        base layer); other widths fall back to the gather path.
         """
         if ids.shape[-1] != self.nbr_codes.shape[1]:
             return self.query_dists(qctx, ids)
-        rows = self.nbr_codes[jnp.maximum(nodes, 0)]  # (W, R, M)
+        rows = self._mirror_rows_unpacked(nodes)  # (W, R, M)
         return ops.flash_scan_batch(rows, qctx.adt_q).astype(jnp.float32)
+
+    def _pack_rows(self, rows):
+        """Codeword rows (…, R, M) int32 -> the mirror's storage layout."""
+        return core.pack_codes(rows) if self.mirror_packed else rows
 
     def with_updated_edges(self, ids, nbr_ids):
         """ids (...,) vertices whose lists changed (out-of-bounds = dropped);
@@ -341,7 +406,9 @@ class FlashBlockedBackend(FlashBackend):
         rows = jnp.where(
             (nbr_ids >= 0)[..., None], self.codes[safe], 0
         )  # (..., R, M)
-        nbr_codes = self.nbr_codes.at[ids].set(rows, mode="drop")
+        nbr_codes = self.nbr_codes.at[ids].set(
+            self._pack_rows(rows), mode="drop"
+        )
         return FlashBlockedBackend(self.coder, self.codes, nbr_codes)
 
     def extend(self, new_vectors):
@@ -358,6 +425,19 @@ class FlashBlockedBackend(FlashBackend):
             jnp.concatenate([self.codes, codes_new]),
             jnp.concatenate([self.nbr_codes, mirror_new]),
         )
+
+    @classmethod
+    def from_state(cls, state) -> "FlashBlockedBackend":
+        """Rebuild from :meth:`state_dict` output, migrating the legacy
+        unpacked (n, R, M) int32 mirror (snapshot format_version 1) to the
+        packed layout when the coder's K fits 4 bits — distances are
+        unchanged (pack∘unpack is the identity on codes < 16)."""
+        be = super().from_state(state)
+        if not be.mirror_packed and be.coder.k <= 16:
+            be = FlashBlockedBackend(
+                be.coder, be.codes, core.pack_codes(be.nbr_codes)
+            )
+        return be
 
 
 # ---------------------------------------------------------------------------
@@ -425,9 +505,14 @@ def make_backend(
             return FlashBackend(coder, codes)
         if r_for_blocked is None:
             raise ValueError("flash_blocked needs r_for_blocked (max neighbors)")
-        nbr_codes = jnp.zeros(
-            (data.shape[0], r_for_blocked, coder.m_f), jnp.int32
-        )
+        if coder.k <= 16:  # 4-bit codes: packed mirror (two per byte)
+            nbr_codes = jnp.zeros(
+                (data.shape[0], r_for_blocked, (coder.m_f + 1) // 2), jnp.uint8
+            )
+        else:  # K > 16 (PQ-style tables): unpacked legacy layout
+            nbr_codes = jnp.zeros(
+                (data.shape[0], r_for_blocked, coder.m_f), jnp.int32
+            )
         return FlashBlockedBackend(coder, codes, nbr_codes)
     raise ValueError(
         f"unknown backend kind {kind!r}; valid kinds: {', '.join(KINDS)}"

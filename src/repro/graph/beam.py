@@ -7,9 +7,11 @@ This is HNSW's ``SEARCH-LAYER`` written against XLA's static-shape rules:
   * the visited set is a dense (n,) bool bitmap (marked at evaluation time, so
     a vertex's distance is computed exactly once),
   * the loop is a ``lax.while_loop``: expand the ``width`` best unexpanded beam
-    entries, gather their ``width`` adjacency rows, score the ``width·R``
-    candidate block in ONE call through ``backend.neighbor_dists_batch``, and
-    merge by top-ef once per iteration.
+    entries, gather + score their ``width·R`` candidate block in ONE call —
+    the fused ``backend.expand()`` kernel step when the backend advertises it
+    (DESIGN.md §10: in-kernel gather of adjacency + packed code rows, MXU
+    one-hot ADT contraction), else the gather + ``neighbor_dists_batch``
+    fallback, bit-exact either way — and merge by top-ef once per iteration.
 
 ``width`` is the TPU restatement of the paper's "maximize SIMD utilization"
 claim: the per-iteration distance stage sees a dense (W·R,) code block instead
@@ -52,13 +54,37 @@ class DescentResult(NamedTuple):
 
 
 def _merge(ids_a, d_a, exp_a, ids_b, d_b, exp_b, ef):
-    """Merge two candidate lists, keep ef smallest (ties broken by id)."""
-    ids = jnp.concatenate([ids_a, ids_b])
+    """Merge two candidate lists, keep ef smallest (ties broken by index).
+
+    A single masked top-k: one ``top_k`` over the negated concatenated
+    distances (masked slots ride in as +inf and sink), whose *returned
+    values* are the merged distances — the former implementation re-gathered
+    the distances through the index vector, paying a redundant (ef+W·R)→ef
+    gather every beam iteration. Bit-identical (asserted in
+    tests/test_expand.py): ``-(-d) == d`` exactly for every finite float and
+    +inf, and ``top_k`` breaks ties by lowest index, the same order a stable
+    ascending sort yields.
+
+    (A variadic stable ``lax.sort`` carrying (d, ids, exp) was measured
+    ~5× slower than the ``top_k`` custom call on XLA CPU — see DESIGN.md
+    §10 — so the masked top-k formulation wins on both op count and
+    backend-specific lowering.)
+    """
     d = jnp.concatenate([d_a, d_b])
+    ids = jnp.concatenate([ids_a, ids_b])
     exp = jnp.concatenate([exp_a, exp_b])
-    # top_k over negated distance == smallest-ef; jnp.lexsort-free stable pick.
-    _, idx = jax.lax.top_k(-d, ef)
-    return ids[idx], d[idx], exp[idx]
+    neg_d, idx = jax.lax.top_k(-d, ef)
+    return ids[idx], -neg_d, exp[idx]
+
+
+def uses_fused_expand(backend, r: int) -> bool:
+    """The static decision ``beam_search`` makes at trace time: does this
+    backend serve the fused single-kernel expansion step (DESIGN.md §10)
+    for adjacency rows of width ``r``?
+
+    Single source of truth for dispatch — benchmarks and the CI capability
+    guard assert against this instead of re-deriving the rule."""
+    return bool(getattr(backend, "supports_expand", lambda _r: False)(r))
 
 
 def beam_search(
@@ -72,6 +98,7 @@ def beam_search(
     max_iters: int | None = None,
     visited0: jax.Array | None = None,
     banned: jax.Array | None = None,
+    fused: bool | None = None,
 ) -> BeamResult:
     """Greedy multi-expansion beam search over one adjacency (one layer).
 
@@ -89,6 +116,12 @@ def beam_search(
                are evaluated and counted) but are struck from the returned
                beam — deleted vertices stay navigable without ever being
                results.
+    fused      fused-expansion dispatch (DESIGN.md §10). None (default):
+               use ``backend.expand()`` iff the backend advertises the
+               capability for this adjacency width (:func:`uses_fused_expand`).
+               False: force the gather+scan fallback (parity tests).
+               True: require the fused path — raises for backends without
+               the capability hook instead of silently degrading.
     """
     n, r = adjacency.shape
     e = entry_ids.shape[0]
@@ -98,6 +131,12 @@ def beam_search(
         raise ValueError(f"width must be >= 1, got {width}")
     w = min(width, ef)
     max_iters = max_iters if max_iters is not None else -(-(4 * ef + 8) // w)
+    use_fused = uses_fused_expand(backend, r) if fused is None else fused
+    if use_fused and not uses_fused_expand(backend, r):
+        raise ValueError(
+            f"fused=True but {type(backend).__name__} does not support the "
+            f"fused expand() path for adjacency width R={r}"
+        )
 
     valid_e = entry_ids >= 0
     safe_e = jnp.where(valid_e, entry_ids, 0)
@@ -130,9 +169,24 @@ def beam_search(
         sel_ok = key[bi] < INF  # un-expandable picks are pads/expanded
         beam_exp = beam_exp.at[bi].set(True)
         nodes = jnp.where(sel_ok, beam_ids[bi], -1)  # (W,)
-        rows = adjacency[jnp.maximum(nodes, 0)]  # (W, R)
-        ok = (rows >= 0) & (nodes >= 0)[:, None]
-        safe = jnp.where(ok, rows, 0)  # (W, R)
+        if use_fused:
+            # One fused kernel: in-kernel adjacency + packed-code-row gather
+            # (scalar-prefetched frontier ids) and MXU one-hot ADT
+            # contraction — the per-iteration HBM round trip for the
+            # (W·R, M) code block disappears (DESIGN.md §10).
+            rows, d_block = backend.expand(qctx, nodes, adjacency)  # (W, R) ×2
+        else:
+            rows = adjacency[jnp.maximum(nodes, 0)]  # (W, R)
+            # One dense (W, R) distance block — the whole point of width > 1.
+            # (the blocked backend reads its mirror by ``nodes``; ``safe``
+            # below is only the gather-path id clamp, so scoring first on
+            # the raw rows is equivalent — ids are re-masked after)
+            d_block = backend.neighbor_dists_batch(
+                qctx, nodes, jnp.maximum(rows, 0)
+            )
+        pre_ok = (rows >= 0) & (nodes >= 0)[:, None]
+        safe = jnp.where(pre_ok, rows, 0)  # (W, R)
+        ok = pre_ok
         if w == 1:
             ok &= ~visited[safe]
             visited = visited.at[safe].max(ok)
@@ -142,6 +196,8 @@ def beam_search(
             # expanded vertices survives only in its first row — the classic
             # "marked at evaluation time" dedup, w tiny scatter/gather pairs
             # instead of a sort or an (n,) scratch buffer in the hot loop.
+            # (A closed-form (W·R)² first-occurrence mask was measured ~2×
+            # slower than this loop on XLA CPU — see DESIGN.md §10.)
             def mark(i, carry):
                 visited, okc = carry
                 row_ok = okc[i] & ~visited[safe[i]]
@@ -152,8 +208,6 @@ def beam_search(
             visited, ok = jax.lax.fori_loop(0, w, mark, (visited, ok))
         flat = safe.reshape(w * r)
         flat_ok = ok.reshape(w * r)
-        # One dense (W, R) distance block — the whole point of width > 1.
-        d_block = backend.neighbor_dists_batch(qctx, nodes, safe)  # (W, R)
         d_new = jnp.where(flat_ok, d_block.reshape(w * r), INF)
         ids_new = jnp.where(flat_ok, flat, -1)
         beam_ids, beam_d, beam_exp = _merge(

@@ -5,6 +5,9 @@ ref.py holds the pure-jnp oracle; ops.py the jit'd dispatching wrappers):
 
   flash_scan   — batched ADT lookup-accumulate (the CPU `pshufb` analogue,
                  paper §3.3.5), flat and access-aware-blocked (§3.3.4) forms.
+  flash_expand — one fused beam-expansion step (DESIGN.md §10): scalar-
+                 prefetched in-kernel gather of adjacency + packed 4-bit
+                 code rows, MXU one-hot ADT contraction.
   l2_batch     — tiled ‖x‖²+‖y‖²−2x·yᵀ distance matrix on the MXU
                  (full-precision baseline path + k-means training).
   sq_l2        — int-domain scaled L2 for the optimized HNSW-SQ baseline.
@@ -12,6 +15,7 @@ ref.py holds the pure-jnp oracle; ops.py the jit'd dispatching wrappers):
 
 from repro.kernels import ops, ref  # noqa: F401
 from repro.kernels.ops import (  # noqa: F401
+    flash_expand,
     flash_scan,
     flash_scan_blocked,
     l2_batch,

@@ -1,0 +1,142 @@
+"""Pallas TPU kernel: one fused beam-expansion step (DESIGN.md §10).
+
+The CA hot loop (`beam_search` body) previously ran three HLO stages per
+iteration — adjacency-row gather, neighbor-code-block gather, then the
+blocked ADT scan — materializing a (W·R, M) int32 code block in HBM between
+each stage. This kernel performs the whole step inside a single Pallas
+program per frontier vertex:
+
+  * the W frontier ids are **scalar-prefetched**; the grid is (W,) and each
+    program's BlockSpec index map selects adjacency row ``nodes[i]`` and the
+    matching packed mirror row — the gathers become per-program HBM→VMEM
+    DMAs chosen *before* the program body runs (no gather HLO, no HBM
+    round trip for the code block),
+  * the mirror row arrives as **packed 4-bit codes** (two codewords per
+    int8 lane, the paper's CPU storage format); unpack is fused into the
+    kernel (the TPU VPU has no sub-byte lanes, so nibbles are widened on
+    load),
+  * the ADT lookup-accumulate is a **one-hot matmul**: codes one-hot over
+    the flattened (M·K) axis contracted against the flattened ADT with
+    ``dot_general`` — the lookup runs on the MXU as a (R, M·K) × (M·K,)
+    contraction instead of an elementwise (bn, M, K) compare-select reduce
+    on the VPU. Integer one-hot × integer table is exact, so the result is
+    bit-identical to the gather-sum oracle.
+
+Visited/banned masking stays **outside** the kernel on the (W, R) output
+block (see `graph/beam.py`): the visited bitmap is a (n,) scatter target
+that must also be *updated* with this iteration's frontier — a sequential
+read-modify-write the kernel cannot own without aliasing the bitmap — and
+the tombstone mask is by design a post-search filter (banned vertices stay
+traversable). Masking a (W, R) register block is free; what the fusion
+eliminates is the per-iteration (W·R, M) HBM materialization.
+
+VMEM budget per program (defaults, R=32, M=16, K=16, packed):
+  adjacency row   1×32×4 B                     = 128 B
+  packed mirror   1×32×8 B                     = 256 B   (vs 2 KiB unpacked int32)
+  adt             16×16×4 B                    =   1 KiB
+  one-hot         32×256×4 B (vreg/fused)      =  32 KiB
+  out rows+sums   2×32×4 B                     = 256 B              « 16 MiB ✓
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import quantize as qz
+
+
+def _flash_expand_kernel(
+    nodes_ref, adj_ref, mir_ref, adt_ref, rows_out, sums_out, *, m: int, k: int,
+    packed: bool,
+):
+    """One frontier vertex: adjacency row (1, R), mirror row (1, R, Mp)."""
+    del nodes_ref  # consumed by the BlockSpec index maps (scalar prefetch)
+    row = adj_ref[...]  # (1, R) int32
+    mir = mir_ref[0]  # (R, Mp) uint8 packed | (R, M) int32 unpacked
+    if packed:
+        # same plain-jnp nibble unpack the oracle uses — one definition of
+        # the byte format, shared with core.quantize
+        codes = qz.unpack4(mir)[:, :m]  # (R, M)
+    else:
+        codes = mir.astype(jnp.int32)  # (R, M)
+    # One-hot ADT contraction on the MXU: (R, M·K) × (M·K,) -> (R,).
+    kk = jax.lax.broadcasted_iota(jnp.int32, (1, 1, k), 2)
+    onehot = (codes[:, :, None] == kk).astype(adt_ref.dtype)  # (R, M, K)
+    table = adt_ref[...].reshape(-1)  # (M·K,)
+    sums = jax.lax.dot_general(
+        onehot.reshape(codes.shape[0], -1),
+        table,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=adt_ref.dtype,
+    )
+    rows_out[...] = row
+    sums_out[...] = sums[None]
+
+
+def flash_expand_pallas(
+    nodes: jax.Array,
+    adjacency: jax.Array,
+    mirror: jax.Array,
+    adt: jax.Array,
+    *,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused beam-expansion step: in-kernel gather + packed unpack + MXU scan.
+
+    nodes      (W,) int32 frontier vertex ids (−1 = inactive slot; clamped
+               to row 0, masked by the caller exactly like the gather path).
+    adjacency  (n, R) int32 neighbor lists (−1 = empty slot).
+    mirror     (n, R, ⌈M/2⌉) uint8 packed codes (two per byte), or
+               (n, R, M) int32 unpacked (legacy layout, K > 16 coders).
+    adt        (M, K) int32/float32 quantized ADT.
+
+    Returns (rows (W, R) int32, sums (W, R) adt.dtype): the gathered
+    adjacency rows and every slot's summed partial distances. Inactive /
+    empty slots carry clamped-row values — the caller masks them, bit-exactly
+    matching the unfused gather+scan path.
+
+    ``interpret=True`` executes the kernel body in Python on CPU (this
+    container has no TPU); on real hardware pass ``interpret=False``.
+    """
+    w = nodes.shape[0]
+    n, r = adjacency.shape
+    m, k = adt.shape
+    packed = mirror.dtype == jnp.uint8
+    mp = mirror.shape[-1]
+    expect = (m + 1) // 2 if packed else m
+    if mirror.shape[0] != n or mp != expect:
+        raise ValueError(
+            f"mirror {mirror.shape} {mirror.dtype} does not match adjacency "
+            f"n={n} / adt M={m} (expected last dim {expect})"
+        )
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(w,),
+        in_specs=[
+            pl.BlockSpec((1, r), lambda i, nref: (jnp.maximum(nref[i], 0), 0)),
+            pl.BlockSpec(
+                (1, r, mp), lambda i, nref: (jnp.maximum(nref[i], 0), 0, 0)
+            ),
+            pl.BlockSpec((m, k), lambda i, nref: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, r), lambda i, nref: (i, 0)),
+            pl.BlockSpec((1, r), lambda i, nref: (i, 0)),
+        ],
+    )
+    rows, sums = pl.pallas_call(
+        functools.partial(_flash_expand_kernel, m=m, k=k, packed=packed),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((w, r), jnp.int32),
+            jax.ShapeDtypeStruct((w, r), adt.dtype),
+        ],
+        interpret=interpret,
+    )(nodes.astype(jnp.int32), adjacency, mirror, adt)
+    return rows, sums

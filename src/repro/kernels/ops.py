@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.flash_expand import flash_expand_pallas
 from repro.kernels.flash_scan import flash_scan_blocked_pallas, flash_scan_pallas
 from repro.kernels.l2_batch import l2_batch_pallas
 from repro.kernels.sq_l2 import sq_l2_pallas
@@ -90,6 +91,31 @@ def flash_scan_batch(
         raise ValueError(f"rows M={m} != adt M={m2}")
     blocks = jnp.transpose(rows, (0, 2, 1))  # (W, M, R)
     return flash_scan_blocked(blocks, adt, impl=impl, block_g=block_g)
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def flash_expand(
+    nodes: jax.Array,
+    adjacency: jax.Array,
+    mirror: jax.Array,
+    adt: jax.Array,
+    *,
+    impl: str = "auto",
+) -> tuple[jax.Array, jax.Array]:
+    """Fused beam-expansion step (DESIGN.md §10).
+
+    nodes (W,), adjacency (n, R), mirror (n, R, ⌈M/2⌉) packed uint8 (or
+    (n, R, M) int32 legacy), adt (M, K) -> (rows (W, R), sums (W, R)).
+    One program per frontier vertex: scalar-prefetched in-kernel gather of
+    the adjacency row and packed code row, fused unpack, MXU one-hot ADT
+    contraction. The ``backend.expand()`` capability hook routes here.
+    """
+    impl = resolve_impl(impl)
+    if impl == "ref":
+        return ref.flash_expand_ref(nodes, adjacency, mirror, adt)
+    return flash_expand_pallas(
+        nodes, adjacency, mirror, adt, interpret=(impl == "interpret")
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("impl", "block_n", "block_c"))

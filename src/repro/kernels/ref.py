@@ -10,6 +10,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import quantize as qz
+
 
 def flash_scan_ref(codes: jax.Array, adt: jax.Array) -> jax.Array:
     """Batched ADT lookup-accumulate (paper §3.3.5).
@@ -41,6 +43,35 @@ def sq_l2_ref(q: jax.Array, db: jax.Array, s2: jax.Array) -> jax.Array:
     """
     diff = (db.astype(jnp.int32) - q.astype(jnp.int32)).astype(jnp.float32)
     return jnp.sum(s2[None, :] * diff * diff, axis=-1)
+
+
+def flash_expand_ref(
+    nodes: jax.Array,
+    adjacency: jax.Array,
+    mirror: jax.Array,
+    adt: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused beam-expansion step (DESIGN.md §10) — the pure-jnp oracle.
+
+    nodes (W,) int32 frontier ids (−1 clamped to row 0, caller-masked);
+    adjacency (n, R) int32; mirror (n, R, ⌈M/2⌉) uint8 packed 4-bit codes
+    (or (n, R, M) int32 unpacked, the K > 16 legacy layout); adt (M, K).
+    Returns (rows (W, R) int32, sums (W, R) adt.dtype).
+
+    Semantics: rows = adjacency[max(nodes, 0)]; sums[i, j] =
+    Σ_m adt[m, codes(mirror[max(nodes[i],0), j])_m] — exactly what the
+    unfused gather + ``flash_scan_batch`` path computes on the same mirror.
+    """
+    safe = jnp.maximum(nodes, 0)
+    rows = adjacency[safe]  # (W, R)
+    mir = mirror[safe]  # (W, R, Mp)
+    m = adt.shape[0]
+    if mirror.dtype == jnp.uint8:  # packed: two codewords per byte
+        codes = qz.unpack4(mir)[..., :m]
+    else:
+        codes = mir.astype(jnp.int32)
+    sums = jnp.sum(adt[jnp.arange(m), codes], axis=-1)  # (W, R)
+    return rows, sums
 
 
 def flash_scan_blocked_ref(blocks: jax.Array, adt: jax.Array) -> jax.Array:

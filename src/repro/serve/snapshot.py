@@ -38,7 +38,15 @@ from repro.graph.segmented import SegmentedAnnIndex
 
 #: Bump on any incompatible layout change; ``load_index`` refuses newer
 #: formats with an informative error instead of misreading them.
-FORMAT_VERSION = 1
+#:
+#: v1  original layout; flash_blocked mirrors saved as (n, R, M) int32.
+#: v2  flash_blocked neighbor mirrors saved 4-bit packed — (n, R, ⌈M/2⌉)
+#:     uint8, two codewords per byte (DESIGN.md §10). v1 snapshots still
+#:     load: ``FlashBlockedBackend.from_state`` detects the unpacked int32
+#:     mirror and packs it on restore (bit-exact — pack∘unpack is the
+#:     identity on 4-bit codes), so old snapshots search identically and
+#:     are silently upgraded on their next ``save_index``.
+FORMAT_VERSION = 2
 
 _MANIFEST = "manifest.json"
 _ARRAYS = "arrays.npz"

@@ -52,7 +52,9 @@ def _seed_neighbor_dists(backend, qctx, node, ids):
     if nbr_codes is not None and ids.shape[-1] == nbr_codes.shape[1]:
         from repro.core import flash as flash_mod
 
-        rows = nbr_codes[node]  # (R, M)
+        rows = nbr_codes[node]  # (R, M) int32 | (R, ceil(M/2)) packed uint8
+        if nbr_codes.dtype == jnp.uint8:
+            rows = flash_mod.unpack_codes(rows, backend.coder.m_f)
         return flash_mod.adc_lookup(qctx.adt_q, rows).astype(jnp.float32)
     return backend.query_dists(qctx, ids)
 

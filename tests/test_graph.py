@@ -242,9 +242,12 @@ class TestBackendsBuild:
         np.testing.assert_array_equal(
             np.asarray(index_b.adj0), np.asarray(index_f.adj0)
         )
-        # and the mirror is consistent with the adjacency
+        # and the (4-bit packed) mirror is consistent with the adjacency
+        from repro.core import unpack_codes
+
         adj = np.asarray(index_b.adj0)
-        nbrc = np.asarray(index_b.backend.nbr_codes)
+        m_f = index_b.backend.coder.m_f
+        nbrc = np.asarray(unpack_codes(index_b.backend.nbr_codes, m_f))
         codes = np.asarray(index_b.backend.codes)
         for v in range(0, 200, 17):
             for slot, u in enumerate(adj[v]):

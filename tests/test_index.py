@@ -155,8 +155,12 @@ class TestAdd:
     def test_blocked_mirror_consistent_after_add(self, flash_grown):
         """The §3.3.4 neighbor-code mirror must track the grown adjacency."""
         grown, _ = flash_grown
+        from repro.core import unpack_codes
+
         adj = np.asarray(grown.graph.adj0)
-        nbrc = np.asarray(grown.backend.nbr_codes)
+        nbrc = np.asarray(
+            unpack_codes(grown.backend.nbr_codes, grown.backend.coder.m_f)
+        )
         codes = np.asarray(grown.backend.codes)
         for v in range(0, grown.n, 89):
             for slot, u in enumerate(adj[v]):
