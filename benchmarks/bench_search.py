@@ -1,18 +1,54 @@
-"""Paper Figures 8 & 9 — QPS-Recall and QPS-ADR curves.
+"""Paper Figures 8 & 9 — QPS-Recall curves — plus the two-stage pipeline
+sweep (DESIGN.md §11): recall@10 vs ``rerank_mult`` on flash_blocked.
 
-Sweeps ef_search per backend on indexes built with that backend, measuring
-query throughput, Recall@10 and ADR (all searches rerank on originals, as
-the paper's Flash pipeline does).
+CSV mode (``run()``) sweeps ef_search per backend. JSON mode
+(``search_bench``, ``run.py --json BENCH_search.json --only search``) runs
+the acceptance sweep: flash_blocked at width=4 with exact rerank over
+supersets of k·mult for mult ∈ {1, 2, 4, 8}, against a full-fp32 search
+baseline — reporting recall@10, QPS, and the scan/rerank split, plus a
+serving cell asserting the reranked spec compiles only at warmup.
+
+Acceptance bars (checked by run.py, surfaced as warnings):
+  * recall@10 at mult=4 within 0.5 points of the fp32 search baseline,
+  * full-precision work at mult=4 (the rerank stage) ≤ 35% of fp32's scan
+    distance evaluations per query.
 """
 
 from __future__ import annotations
 
+import numpy as np
+
 import jax
 
-from benchmarks.common import DEFAULT_PARAMS, FLASH_KW, bench_data, emit, timeit
-from repro import graph
+from benchmarks.common import (
+    DEFAULT_PARAMS,
+    FLASH_KW,
+    bench_data,
+    emit,
+    time_samples,
+    timeit,
+)
+from repro import graph, serve
 from repro.graph.knn import average_distance_ratio, exact_knn, recall_at_k
-from repro.index import AnnIndex
+from repro.index import AnnIndex, SearchSpec
+
+#: Search beam for the JSON sweep (build ef stays DEFAULT_PARAMS.ef).
+EF_SEARCH = 96
+#: Candidate-superset multipliers swept by the JSON suite.
+MULTS = (1, 2, 4, 8)
+#: Serving-grade flash coder for the acceptance sweep. The 4-bit build
+#: config (FLASH_KW) is tuned for indexing-time comparisons (paper §3.3,
+#: packed mirror); the recall-critical read path wants a finer scan
+#: ordering so the k·mult superset captures the true top-k: 8-bit
+#: codewords (K=256, unpacked flash_blocked mirror), d_F=48, H=16 table
+#: quantization. Measured on the bench dataset: mult=4 recall@10 1.000 vs
+#: 0.768 under FLASH_KW — the coder, not the pipeline, was the binding
+#: constraint (see BENCH_search.json for the sweep).
+SERVE_FLASH_KW = dict(d_f=48, m_f=24, l_f=8, h=16, kmeans_iters=25)
+#: Acceptance bars (ISSUE 5): recall gap vs fp32 at mult=4, and the
+#: full-precision budget as a fraction of fp32's scan evaluations.
+RECALL_GAP_BAR = 0.005
+FP32_FRACTION_BAR = 0.35
 
 
 def run() -> dict:
@@ -44,6 +80,95 @@ def run() -> dict:
             )
         out[kind] = curve
     return out
+
+
+def search_bench(repeats: int = 3) -> dict:
+    """Machine-readable two-stage-pipeline sweep → BENCH_search.json.
+
+    One fp32 full-precision search baseline, then flash_blocked (width=4)
+    with exact rerank at each ``rerank_mult`` — same queries, same k, same
+    search beam — with the scan/rerank split from ``SearchResult`` and a
+    zero-recompile serving cell for the reranked spec."""
+    data, queries = bench_data()
+    n_q = int(queries.shape[0])
+    tids, _ = exact_knn(queries, data, k=10)
+
+    idx32 = AnnIndex.build(
+        data, algo="hnsw", backend="fp32", params=DEFAULT_PARAMS, seed=0
+    )
+    spec32 = SearchSpec(k=10, ef=EF_SEARCH, width=4, rerank="none")
+    res32 = idx32.search(queries, spec=spec32)
+    t32 = time_samples(
+        lambda: idx32.search(queries, spec=spec32).ids, repeats=repeats
+    )
+    fp32_scan_pq = float(res32.n_scan) / n_q
+    fp32 = {
+        "recall_at_10": float(recall_at_k(res32.ids, tids, 10)),
+        "n_scan_per_query": fp32_scan_pq,
+        "n_rerank_per_query": 0.0,
+        "qps": n_q / float(np.median(t32)),
+        "s_samples": t32,
+    }
+
+    idx_fb = AnnIndex.build(
+        data, algo="hnsw", backend="flash_blocked", params=DEFAULT_PARAMS,
+        backend_kwargs=dict(SERVE_FLASH_KW), seed=0,
+    )
+    sweep = {}
+    for mult in MULTS:
+        spec = SearchSpec(
+            k=10, ef=EF_SEARCH, width=4, rerank="exact", rerank_mult=mult
+        )
+        res = idx_fb.search(queries, spec=spec)
+        ts = time_samples(
+            lambda: idx_fb.search(queries, spec=spec).ids,  # noqa: B023
+            repeats=repeats,
+        )
+        rerank_pq = float(res.n_rerank) / n_q
+        sweep[str(mult)] = {
+            "n_keep": spec.n_keep,
+            "recall_at_10": float(recall_at_k(res.ids, tids, 10)),
+            "n_scan_per_query": float(res.n_scan) / n_q,
+            "n_rerank_per_query": rerank_pq,
+            "fp32_work_vs_fp32_scan": rerank_pq / fp32_scan_pq,
+            "qps": n_q / float(np.median(ts)),
+            "s_samples": ts,
+        }
+        emit(
+            f"search/pipeline/mult{mult}",
+            float(np.median(ts)) / n_q * 1e6,
+            f"recall={sweep[str(mult)]['recall_at_10']:.3f} "
+            f"rerank/q={rerank_pq:.0f}",
+        )
+
+    # serving: the reranked spec is a first-class engine bucket — compiles
+    # only at warmup, never in steady state (ISSUE 5 acceptance).
+    spec4 = SearchSpec(k=10, ef=EF_SEARCH, width=4, rerank="exact", rerank_mult=4)
+    engine = serve.SearchEngine(idx_fb, spec=spec4, q_buckets=(1, 8, 32))
+    engine.warmup()
+    compiles_at_warmup = engine.n_compiles
+    for q in (queries[:1], queries[:8], queries[:32], queries[:5]):
+        engine.search(q)
+    at4 = sweep["4"]
+    return {
+        "config": {
+            "ef_search": EF_SEARCH, "k": 10, "width": 4, "mults": list(MULTS),
+            "n": int(data.shape[0]), "n_queries": n_q, "repeats": repeats,
+            "flash_kwargs": dict(SERVE_FLASH_KW),
+        },
+        "fp32": fp32,
+        "flash_blocked": {"mult_sweep": sweep},
+        "serving": {
+            "compiles_at_warmup": compiles_at_warmup,
+            "recompiles_after_warmup": engine.n_compiles - compiles_at_warmup,
+        },
+        "acceptance": {
+            "recall_gap_at_mult4": fp32["recall_at_10"] - at4["recall_at_10"],
+            "recall_gap_bar": RECALL_GAP_BAR,
+            "fp32_work_vs_fp32_scan_at_mult4": at4["fp32_work_vs_fp32_scan"],
+            "fp32_fraction_bar": FP32_FRACTION_BAR,
+        },
+    }
 
 
 if __name__ == "__main__":

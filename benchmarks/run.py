@@ -10,6 +10,7 @@ Default mode prints ``name,us_per_call,derived`` CSV rows
                                                           # dynamic update
     python benchmarks/run.py --json BENCH_serving.json --only serving
     python benchmarks/run.py --json BENCH_kernels.json --only kernels
+    python benchmarks/run.py --json BENCH_search.json --only search
 
 ``--repeats N`` (default 3) runs every timed section N times; medians are
 reported and the raw samples recorded in the JSON (2-core container noise).
@@ -107,11 +108,38 @@ def _json_kernels(repeats: int) -> tuple[dict, list[str]]:
     return payload, warnings
 
 
+def _json_search(repeats: int) -> tuple[dict, list[str]]:
+    from benchmarks import bench_search
+
+    payload = bench_search.search_bench(repeats=repeats)
+    warnings = []
+    acc = payload["acceptance"]
+    if acc["recall_gap_at_mult4"] > acc["recall_gap_bar"]:
+        warnings.append(
+            f"rerank_mult=4 recall@10 gap vs fp32 "
+            f"{acc['recall_gap_at_mult4']:.4f} exceeds the "
+            f"{acc['recall_gap_bar']:.3f} acceptance bar"
+        )
+    if acc["fp32_work_vs_fp32_scan_at_mult4"] > acc["fp32_fraction_bar"]:
+        warnings.append(
+            "rerank_mult=4 full-precision work "
+            f"{acc['fp32_work_vs_fp32_scan_at_mult4']:.2f} of fp32's scan "
+            f"evaluations (bar: <= {acc['fp32_fraction_bar']:.2f})"
+        )
+    if payload["serving"]["recompiles_after_warmup"]:
+        warnings.append(
+            "reranked serving spec recompiled after warmup "
+            f"({payload['serving']['recompiles_after_warmup']} traces)"
+        )
+    return payload, warnings
+
+
 #: --only suite name -> builder returning (payload, warning strings).
 JSON_SUITES = {
     "indexing_widths": _json_indexing_widths,
     "serving": _json_serving,
     "kernels": _json_kernels,
+    "search": _json_search,
 }
 
 

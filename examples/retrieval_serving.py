@@ -4,9 +4,12 @@ runtime — the full production loop on one page:
   1. score a request batch three ways (exact dense scan, Flash compact scan
      + rerank, HNSW-Flash graph search) to pick the serving index,
   2. snapshot the index (build once…) and load it back (…serve forever),
-  3. stand up a ``SearchEngine`` (pre-jitted shape buckets, zero steady-state
-     recompiles) and a ``MicroBatcher`` (deadline-coalesced single-query
-     traffic), reporting batched vs unbatched QPS,
+  3. stand up a ``SearchEngine`` pinned to a reranked ``SearchSpec``
+     (quantized scan + exact rerank over k·rerank_mult candidates,
+     DESIGN.md §11; pre-jitted (bucket × spec) executables, zero
+     steady-state recompiles) and a ``MicroBatcher`` (deadline-coalesced
+     single-query traffic), reporting batched vs unbatched QPS and the
+     scan/rerank cost split,
   4. keep serving while the catalog changes: ``add()`` new items in place.
 
     PYTHONPATH=src python examples/retrieval_serving.py
@@ -22,7 +25,7 @@ import numpy as np
 
 from repro import core, graph, serve
 from repro.graph.hnsw import HNSWParams
-from repro.index import AnnIndex
+from repro.index import AnnIndex, SearchSpec
 from repro.models.recsys import bert4rec as b4r
 from repro.models.recsys import retrieval
 
@@ -80,9 +83,12 @@ def main():
               f"(bit-exact restore)")
 
     # ---- the serving runtime: engine + micro-batching scheduler ---------
-    engine = serve.SearchEngine(
-        index, k=10, ef=96, width=4, q_buckets=(1, 8, 32)
-    ).warmup()
+    # the engine serves the full two-stage pipeline (DESIGN.md §11): a
+    # quantized scan keeps the best k·4 candidates, an exact rerank on the
+    # raw item embeddings restores full-precision order — compiled once per
+    # (Q-bucket × spec), so reranked serving never recompiles steady-state
+    spec = SearchSpec(k=10, ef=96, width=4, rerank="exact", rerank_mult=4)
+    engine = serve.SearchEngine(index, spec=spec, q_buckets=(1, 8, 32)).warmup()
 
     # unbatched: each request dispatched alone (Q=1 bucket) vs the same
     # requests coalesced into dense blocks (what the scheduler does for a
@@ -114,6 +120,10 @@ def main():
     print(f"engine         : p50 {stats['p50_ms']:.1f} ms, "
           f"p99 {stats['p99_ms']:.1f} ms, compiles={stats['compiles']} "
           f"(all at warmup — steady state never recompiles)")
+    print(f"pipeline       : rerank={spec.rerank} mult={spec.rerank_mult} -> "
+          f"{stats['n_scan_per_query']:.0f} quantized scan + "
+          f"{stats['n_rerank_per_query']:.0f} exact rerank dists/query "
+          f"(quantized sums never cross the rerank boundary)")
 
     # the serving index is mutable: list a fresh item batch in place
     new_items = table[:256] + 0.01 * jax.random.normal(key, (256, cfg.embed_dim))

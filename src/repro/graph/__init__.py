@@ -35,11 +35,20 @@ from repro.graph.hnsw import (  # noqa: F401
     search_hnsw,
 )
 from repro.graph.knn import average_distance_ratio, exact_knn, recall_at_k  # noqa: F401
+from repro.graph.rerank import (  # noqa: F401
+    RERANK_MODES,
+    ExactReranker,
+    RawVectors,
+    ReconstructReranker,
+    SearchSpec,
+    make_reranker,
+    merge_rerank_topk,
+    rerank_topk,
+)
 from repro.graph.select import Selection, prune_list, select_neighbors  # noqa: F401
 from repro.graph.vamana import (  # noqa: F401
     FlatIndex,
     build_vamana,
-    search_flat,
     search_flat_result,
 )
 

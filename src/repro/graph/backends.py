@@ -44,12 +44,26 @@ L2, or a monotone affine image of it; never mixed across backends):
                                   blocked layout, empty mirror rows) — the
                                   hook ``repro.index.AnnIndex.add`` uses to
                                   grow an index without refitting anything.
+    raw_dists(q_raw, ids)       -> f32    EXACT squared L2 from the raw query
+                                  to stored ids — the rerank-stage hook
+                                  (DESIGN.md §11). Served from the retained
+                                  raw-vector table (``keep_raw=True`` builds;
+                                  fp32 stores raw by definition); raises for
+                                  compact backends built without one.
+    recon_vectors(ids)          -> f32    coder-reconstructed (decoded)
+                                  vectors for stored ids — the approximate
+                                  rerank source for deployments that do NOT
+                                  retain raw vectors (zero extra resident
+                                  bytes; see graph.rerank.ReconstructReranker).
     state_dict()                -> dict[str, np.ndarray]  full serializable
                                   state (codes + coder params, nested keys
                                   dotted); ``from_state(state)`` rebuilds the
                                   backend bit-exactly — the snapshot hooks
                                   ``repro.serve`` persists an index through
-                                  (DESIGN.md §9).
+                                  (DESIGN.md §9). The optional ``raw`` table
+                                  is included iff retained (snapshot format
+                                  v3); absent keys restore to None, which is
+                                  how v1/v2 snapshots migrate.
 
 Backends are registered pytrees so whole index builds jit/vmap/shard cleanly.
 """
@@ -100,12 +114,43 @@ def _l2(a: jax.Array, b: jax.Array) -> jax.Array:
     return jnp.sum(d * d, axis=-1)
 
 
+def _grow_raw(raw, new):
+    """extend() helper: grow the optional retained-raw table in lockstep."""
+    return None if raw is None else jnp.concatenate([raw, new])
+
+
 class _Base:
     """Shared default implementations."""
 
     #: structured (NamedTuple coder) fields: name -> class; everything else
     #: in ``_fields`` is a plain array. Subclasses override as needed.
     _coder_fields: dict = {}
+    #: fields that may be None (skipped by state_dict, restored as None when
+    #: absent — the v1/v2 → v3 snapshot migration path).
+    _optional_fields: tuple = ("raw",)
+
+    @property
+    def has_raw(self) -> bool:
+        """Whether this backend retains raw vectors for exact rerank."""
+        return getattr(self, "raw", None) is not None
+
+    def raw_dists(self, q_raw, ids):
+        """Exact squared L2 from the raw query to stored ids (rerank hook,
+        DESIGN.md §11); requires a retained raw table (``keep_raw=True``)."""
+        raw = getattr(self, "raw", None)
+        if raw is None:
+            raise ValueError(
+                f"{type(self).__name__} retains no raw vectors; build with "
+                "keep_raw=True (or rerank through an external raw table, "
+                "e.g. graph.rerank.RawVectors)"
+            )
+        return _l2(raw[ids], q_raw)
+
+    def recon_vectors(self, ids):
+        raise NotImplementedError(
+            f"{type(self).__name__} has no coder-reconstruction path "
+            "(recon_vectors); use exact rerank instead"
+        )
 
     def neighbor_dists_batch(self, qctx, nodes, ids):  # noqa: ARG002
         # Default: one batched gather-and-score; every backend's query_dists
@@ -138,16 +183,27 @@ class _Base:
         distances (the ``repro.serve`` snapshot contract)."""
         out: dict = {}
         for name in self._fields:
-            _flatten_state(name, getattr(self, name), out)
+            val = getattr(self, name)
+            if val is None and name in self._optional_fields:
+                continue
+            _flatten_state(name, val, out)
         return out
 
     @classmethod
     def from_state(cls, state) -> "_Base":
-        """Rebuild a backend from :meth:`state_dict` output (bit-exact)."""
-        vals = [
-            _unflatten_state(name, state, cls._coder_fields.get(name))
-            for name in cls._fields
-        ]
+        """Rebuild a backend from :meth:`state_dict` output (bit-exact).
+
+        Optional fields absent from ``state`` (e.g. ``raw`` in pre-v3
+        snapshots, or any build without ``keep_raw``) restore as None."""
+        vals = []
+        for name in cls._fields:
+            present = name in state or any(
+                k.startswith(name + ".") for k in state
+            )
+            if not present and name in cls._optional_fields:
+                vals.append(None)
+                continue
+            vals.append(_unflatten_state(name, state, cls._coder_fields.get(name)))
         return cls(*vals)
 
     def tree_flatten(self):
@@ -185,6 +241,16 @@ class FP32Backend(_Base):
         ids_a, ids_b = jnp.broadcast_arrays(ids_a, ids_b)
         return _l2(self.vectors[ids_a], self.vectors[ids_b])
 
+    @property
+    def has_raw(self) -> bool:
+        return True  # the stored vectors ARE raw
+
+    def raw_dists(self, q_raw, ids):
+        return _l2(self.vectors[ids], q_raw)
+
+    def recon_vectors(self, ids):
+        return self.vectors[ids]  # lossless "reconstruction"
+
     def extend(self, new_vectors):
         new = jnp.asarray(new_vectors, jnp.float32)
         return FP32Backend(jnp.concatenate([self.vectors, new]))
@@ -194,12 +260,13 @@ class FP32Backend(_Base):
 class PCABackend(_Base):
     """HNSW-PCA: exact L2 on the first d_PCA principal components."""
 
-    _fields = ("coder", "z")
+    _fields = ("coder", "z", "raw")
     _coder_fields = {"coder": core.PCACoder}
 
-    def __init__(self, coder: core.PCACoder, z: jax.Array):
+    def __init__(self, coder: core.PCACoder, z: jax.Array, raw=None):
         self.coder = coder
         self.z = z  # (n, d) projected database
+        self.raw = raw  # optional (n, D) raw table (keep_raw=True)
 
     @property
     def n(self) -> int:
@@ -215,22 +282,28 @@ class PCABackend(_Base):
         ids_a, ids_b = jnp.broadcast_arrays(ids_a, ids_b)
         return _l2(self.z[ids_a], self.z[ids_b])
 
+    def recon_vectors(self, ids):
+        return self.z[ids] @ self.coder.rot.T + self.coder.mean
+
     def extend(self, new_vectors):
         new = jnp.asarray(new_vectors, jnp.float32)
         z_new = core.pca_encode(self.coder, new)
-        return PCABackend(self.coder, jnp.concatenate([self.z, z_new]))
+        return PCABackend(
+            self.coder, jnp.concatenate([self.z, z_new]), _grow_raw(self.raw, new)
+        )
 
 
 @jax.tree_util.register_pytree_node_class
 class SQBackend(_Base):
     """HNSW-SQ: quantized-domain scaled L2, no decode of either operand."""
 
-    _fields = ("coder", "codes")
+    _fields = ("coder", "codes", "raw")
     _coder_fields = {"coder": core.SQCoder}
 
-    def __init__(self, coder: core.SQCoder, codes: jax.Array):
+    def __init__(self, coder: core.SQCoder, codes: jax.Array, raw=None):
         self.coder = coder
         self.codes = codes  # (n, D) int32 levels
+        self.raw = raw  # optional (n, D) raw table (keep_raw=True)
 
     @property
     def n(self) -> int:
@@ -246,22 +319,30 @@ class SQBackend(_Base):
         ids_a, ids_b = jnp.broadcast_arrays(ids_a, ids_b)
         return core.sq_dist(self.coder, self.codes[ids_a], self.codes[ids_b])
 
+    def recon_vectors(self, ids):
+        return core.sq_decode(self.coder.params, self.codes[ids])
+
     def extend(self, new_vectors):
         new = jnp.asarray(new_vectors, jnp.float32)
         codes_new = core.sq_encode(self.coder, new)
-        return SQBackend(self.coder, jnp.concatenate([self.codes, codes_new]))
+        return SQBackend(
+            self.coder,
+            jnp.concatenate([self.codes, codes_new]),
+            _grow_raw(self.raw, new),
+        )
 
 
 @jax.tree_util.register_pytree_node_class
 class PQBackend(_Base):
     """HNSW-PQ: float ADC table per query (CA), SDC centroid tables (NS)."""
 
-    _fields = ("coder", "codes")
+    _fields = ("coder", "codes", "raw")
     _coder_fields = {"coder": core.PQCoder}
 
-    def __init__(self, coder: core.PQCoder, codes: jax.Array):
+    def __init__(self, coder: core.PQCoder, codes: jax.Array, raw=None):
         self.coder = coder
         self.codes = codes  # (n, M) int32
+        self.raw = raw  # optional (n, D) raw table (keep_raw=True)
 
     @property
     def n(self) -> int:
@@ -278,10 +359,19 @@ class PQBackend(_Base):
             self.coder, self.codes[ids_a], self.codes[ids_b]
         ).astype(jnp.float32)
 
+    def recon_vectors(self, ids):
+        cb = self.coder.codebooks  # (M, K, ds)
+        gathered = cb[jnp.arange(self.coder.m), self.codes[ids]]  # (..., M, ds)
+        return gathered.reshape(*gathered.shape[:-2], -1)  # caller unpads
+
     def extend(self, new_vectors):
         new = jnp.asarray(new_vectors, jnp.float32)
         codes_new = core.pq_encode(self.coder, new)
-        return PQBackend(self.coder, jnp.concatenate([self.codes, codes_new]))
+        return PQBackend(
+            self.coder,
+            jnp.concatenate([self.codes, codes_new]),
+            _grow_raw(self.raw, new),
+        )
 
 
 @jax.tree_util.register_pytree_node_class
@@ -293,12 +383,13 @@ class FlashBackend(_Base):
     because neighbor selection compares δ(u, v) [SDT] with δ(v, x) [ADT].
     """
 
-    _fields = ("coder", "codes")
+    _fields = ("coder", "codes", "raw")
     _coder_fields = {"coder": core.FlashCoder}
 
-    def __init__(self, coder: core.FlashCoder, codes: jax.Array):
+    def __init__(self, coder: core.FlashCoder, codes: jax.Array, raw=None):
         self.coder = coder
         self.codes = codes  # (n, M) int32 in [0, K)
+        self.raw = raw  # optional (n, D) raw table (keep_raw=True)
 
     @property
     def n(self) -> int:
@@ -315,10 +406,20 @@ class FlashBackend(_Base):
             self.coder, self.codes[ids_a], self.codes[ids_b]
         ).astype(jnp.float32)
 
+    def recon_vectors(self, ids):
+        cb = self.coder.codebooks  # (M, K, ds)
+        gathered = cb[jnp.arange(self.coder.m_f), self.codes[ids]]  # (..., M, ds)
+        z_hat = gathered.reshape(*gathered.shape[:-2], -1)[..., : self.coder.d_f]
+        return z_hat @ self.coder.rot.T + self.coder.mean
+
     def extend(self, new_vectors):
         new = jnp.asarray(new_vectors, jnp.float32)
         codes_new = core.encode(self.coder, new)
-        return FlashBackend(self.coder, jnp.concatenate([self.codes, codes_new]))
+        return FlashBackend(
+            self.coder,
+            jnp.concatenate([self.codes, codes_new]),
+            _grow_raw(self.raw, new),
+        )
 
 
 @jax.tree_util.register_pytree_node_class
@@ -343,11 +444,14 @@ class FlashBlockedBackend(FlashBackend):
     run as an MXU one-hot contraction (`kernels.ops.flash_expand`).
     """
 
-    _fields = ("coder", "codes", "nbr_codes")
+    _fields = ("coder", "codes", "nbr_codes", "raw")
     _coder_fields = {"coder": core.FlashCoder}
 
-    def __init__(self, coder: core.FlashCoder, codes: jax.Array, nbr_codes: jax.Array):
-        super().__init__(coder, codes)
+    def __init__(
+        self, coder: core.FlashCoder, codes: jax.Array, nbr_codes: jax.Array,
+        raw=None,
+    ):
+        super().__init__(coder, codes, raw)
         # (n, R, ⌈M/2⌉) uint8 packed (K ≤ 16) | (n, R, M) int32 legacy;
         # code 0 where id == -1.
         self.nbr_codes = nbr_codes
@@ -409,7 +513,7 @@ class FlashBlockedBackend(FlashBackend):
         nbr_codes = self.nbr_codes.at[ids].set(
             self._pack_rows(rows), mode="drop"
         )
-        return FlashBlockedBackend(self.coder, self.codes, nbr_codes)
+        return FlashBlockedBackend(self.coder, self.codes, nbr_codes, self.raw)
 
     def extend(self, new_vectors):
         """Append codes for the new vectors plus all-empty mirror rows; the
@@ -424,6 +528,7 @@ class FlashBlockedBackend(FlashBackend):
             self.coder,
             jnp.concatenate([self.codes, codes_new]),
             jnp.concatenate([self.nbr_codes, mirror_new]),
+            _grow_raw(self.raw, new),
         )
 
     @classmethod
@@ -435,7 +540,7 @@ class FlashBlockedBackend(FlashBackend):
         be = super().from_state(state)
         if not be.mirror_packed and be.coder.k <= 16:
             be = FlashBlockedBackend(
-                be.coder, be.codes, core.pack_codes(be.nbr_codes)
+                be.coder, be.codes, core.pack_codes(be.nbr_codes), be.raw
             )
         return be
 
@@ -470,17 +575,23 @@ def make_backend(
     key: jax.Array | None = None,
     *,
     r_for_blocked: int | None = None,
+    keep_raw: bool = False,
     **coder_kwargs,
 ):
     """Fit a coder on ``data`` and wrap it with its backend.
 
     kind ∈ :func:`kinds`. ``coder_kwargs`` are forwarded to the fitter
     (e.g. d_f/m_f for flash, m/l_pq for pq…); fp32 stores raw vectors and
-    takes none.
+    takes none. ``keep_raw=True`` additionally retains ``data`` on the
+    backend (4·n·D bytes) to serve the exact rerank stage without an
+    external table (DESIGN.md §11); it flows through ``extend()`` and
+    ``state_dict()``, so grown and snapshotted indexes keep it. fp32 is
+    its own raw table, so the flag is a no-op there.
     """
     if key is None:
         key = jax.random.PRNGKey(0)
     data = jnp.asarray(data, jnp.float32)
+    raw = data if keep_raw else None
     if kind == "fp32":
         if coder_kwargs:
             raise ValueError(
@@ -491,18 +602,18 @@ def make_backend(
         return FP32Backend(data)
     if kind == "pca":
         coder = core.fit_pca_coder(data, **coder_kwargs)
-        return PCABackend(coder, core.pca_encode(coder, data))
+        return PCABackend(coder, core.pca_encode(coder, data), raw)
     if kind == "sq":
         coder = core.fit_sq(data, **coder_kwargs)
-        return SQBackend(coder, core.sq_encode(coder, data))
+        return SQBackend(coder, core.sq_encode(coder, data), raw)
     if kind == "pq":
         coder = core.fit_pq(key, data, **coder_kwargs)
-        return PQBackend(coder, core.pq_encode(coder, data))
+        return PQBackend(coder, core.pq_encode(coder, data), raw)
     if kind in ("flash", "flash_blocked"):
         coder = core.fit_flash(key, data, **coder_kwargs)
         codes = core.encode(coder, data)
         if kind == "flash":
-            return FlashBackend(coder, codes)
+            return FlashBackend(coder, codes, raw)
         if r_for_blocked is None:
             raise ValueError("flash_blocked needs r_for_blocked (max neighbors)")
         if coder.k <= 16:  # 4-bit codes: packed mirror (two per byte)
@@ -513,7 +624,7 @@ def make_backend(
             nbr_codes = jnp.zeros(
                 (data.shape[0], r_for_blocked, coder.m_f), jnp.int32
             )
-        return FlashBlockedBackend(coder, codes, nbr_codes)
+        return FlashBlockedBackend(coder, codes, nbr_codes, raw)
     raise ValueError(
         f"unknown backend kind {kind!r}; valid kinds: {', '.join(KINDS)}"
     )

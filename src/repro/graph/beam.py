@@ -99,6 +99,7 @@ def beam_search(
     visited0: jax.Array | None = None,
     banned: jax.Array | None = None,
     fused: bool | None = None,
+    n_keep: int | None = None,
 ) -> BeamResult:
     """Greedy multi-expansion beam search over one adjacency (one layer).
 
@@ -122,6 +123,11 @@ def beam_search(
                False: force the gather+scan fallback (parity tests).
                True: require the fused path — raises for backends without
                the capability hook instead of silently degrading.
+    n_keep     how many beam slots to return (DESIGN.md §11): the search
+               pipeline's candidate superset is the best ``n_keep =
+               min(ef, k·rerank_mult)`` scan candidates; the beam itself
+               always runs at full ``ef``. None (default) returns the whole
+               beam.
     """
     n, r = adjacency.shape
     e = entry_ids.shape[0]
@@ -129,6 +135,7 @@ def beam_search(
         raise ValueError(f"entries ({e}) must fit the beam (ef={ef})")
     if width < 1:
         raise ValueError(f"width must be >= 1, got {width}")
+    keep = ef if n_keep is None else min(max(int(n_keep), 1), ef)
     w = min(width, ef)
     max_iters = max_iters if max_iters is not None else -(-(4 * ef + 8) // w)
     use_fused = uses_fused_expand(backend, r) if fused is None else fused
@@ -235,7 +242,9 @@ def beam_search(
         beam_ids = jnp.where(dead, -1, beam_ids)
         order = jnp.argsort(beam_d)
         beam_ids, beam_d = beam_ids[order], beam_d[order]
-    return BeamResult(ids=beam_ids, dists=beam_d, n_hops=nh, n_dists=nd)
+    return BeamResult(
+        ids=beam_ids[:keep], dists=beam_d[:keep], n_hops=nh, n_dists=nd
+    )
 
 
 def greedy_descent(

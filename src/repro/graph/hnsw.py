@@ -29,7 +29,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.graph.beam import INF, beam_search, greedy_descent
+from repro.graph.beam import beam_search, greedy_descent
+from repro.graph.rerank import SearchSpec, rerank_topk, resolve_search_args
 from repro.graph.engine import (  # noqa: F401 — re-exported public API
     BuildEngine,
     BuildParams,
@@ -106,39 +107,38 @@ def build_hnsw(
 
 
 # ---------------------------------------------------------------------------
-# Search (query side — CA paradigm + optional exact rerank, §3.3.6)
+# Search (query side — the two-stage pipeline of DESIGN.md §11:
+# quantized candidate scan + Reranker second stage)
 # ---------------------------------------------------------------------------
 
 
 class SearchResult(NamedTuple):
-    ids: jax.Array  # (Q, k)
-    dists: jax.Array  # (Q, k) — backend scale (or exact if reranked)
-    n_dists: jax.Array  # () cost counter (descent + base-layer beam)
+    """One result shape for every read path, with the scan/rerank cost split.
 
-
-@functools.partial(
-    jax.jit, static_argnames=("k", "ef_search", "max_layers", "width")
-)
-def search_hnsw(
-    index: HNSWIndex,
-    queries: jax.Array,
-    *,
-    k: int,
-    ef_search: int = 64,
-    max_layers: int | None = None,
-    width: int = 1,
-    rerank_vectors: jax.Array | None = None,
-    banned: jax.Array | None = None,
-) -> SearchResult:
-    """Layered beam search; optional exact rerank on original vectors.
-
-    ``max_layers`` defaults to the layer count the index was actually built
-    with (``adj_up.shape[0] + 1``) — passing it is only needed to search a
-    shallower prefix of the hierarchy. ``n_dists`` counts every distance
-    evaluation, including the upper-layer greedy descent. ``banned`` is the
-    (n,) tombstone mask of DESIGN.md §8: tombstoned vertices stay traversable
-    but are never returned.
+    ``n_dists`` stays a scalar total, now ``n_scan + n_rerank`` — for
+    reranked searches that is larger than the pre-pipeline value, which
+    silently dropped the second stage's evaluations from the bill. The
+    split tells you how much of the work ran on compact codes (scan:
+    descent + base-layer beam, backend scale) versus at full precision
+    (rerank: the second stage, 0 when ``rerank="none"``).
     """
+
+    ids: jax.Array  # (Q, k)
+    dists: jax.Array  # (Q, k) — reranker scale (exact L2) or backend scale
+    n_dists: jax.Array  # () total distance evaluations (scan + rerank)
+    n_scan: jax.Array | None = None  # () compact-code evaluations
+    n_rerank: jax.Array | None = None  # () second-stage evaluations
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "max_layers"))
+def _search_hnsw_spec(
+    index: HNSWIndex, queries, banned, reranker, *, spec: SearchSpec,
+    max_layers: int | None,
+) -> SearchResult:
+    """The jitted layered pipeline: greedy descent → quantized beam over the
+    best ``spec.n_keep`` candidates → ``reranker`` second stage (skipped
+    when None). One trace per (spec, shapes) — the serving engine keys its
+    compiled-bucket table on exactly this pair."""
     backend = index.backend
     n_layers = index.adj_up.shape[0] + 1 if max_layers is None else max_layers
 
@@ -151,19 +151,54 @@ def search_hnsw(
             ep = desc.node
             nd = nd + desc.n_dists
         res = beam_search(
-            backend, qctx, index.adj0, ep[None], ef=ef_search, width=width,
-            banned=banned,
+            backend, qctx, index.adj0, ep[None], ef=spec.ef, width=spec.width,
+            banned=banned, n_keep=spec.n_keep,
         )
-        nd = nd + res.n_dists
-        if rerank_vectors is not None:
-            safe = jnp.maximum(res.ids, 0)
-            dv = rerank_vectors[safe] - q[None, :]
-            exact = jnp.where(
-                res.ids >= 0, jnp.sum(dv * dv, axis=-1), INF
-            )
-            _, idx = jax.lax.top_k(-exact, k)
-            return res.ids[idx], exact[idx], nd
-        return res.ids[:k], res.dists[:k], nd
+        n_scan = nd + res.n_dists
+        if reranker is None:
+            return res.ids[: spec.k], res.dists[: spec.k], n_scan, jnp.int32(0)
+        ids, dists, n_rr = rerank_topk(reranker, q, res.ids, res.dists, spec.k)
+        return ids, dists, n_scan, n_rr
 
-    ids, dists, nd = jax.vmap(one)(queries)
-    return SearchResult(ids=ids, dists=dists, n_dists=jnp.sum(nd))
+    ids, dists, ns, nr = jax.vmap(one)(queries)
+    ns, nr = jnp.sum(ns), jnp.sum(nr)
+    return SearchResult(
+        ids=ids, dists=dists, n_dists=ns + nr, n_scan=ns, n_rerank=nr
+    )
+
+
+def search_hnsw(
+    index: HNSWIndex,
+    queries: jax.Array,
+    *,
+    k: int | None = None,
+    ef_search: int = 64,
+    max_layers: int | None = None,
+    width: int = 1,
+    rerank_vectors: jax.Array | None = None,
+    banned: jax.Array | None = None,
+    spec: SearchSpec | None = None,
+    reranker=None,
+) -> SearchResult:
+    """Layered two-stage search (DESIGN.md §11).
+
+    Canonical form: pass a frozen ``spec=``:class:`SearchSpec` (+ a
+    ``reranker=`` for specs with a second stage — see
+    ``graph.rerank.make_reranker``). The legacy keyword form maps onto it
+    bit-exactly: ``rerank_vectors=`` is exact rerank over the whole beam,
+    omitting it is ``rerank="none"``.
+
+    ``max_layers`` defaults to the layer count the index was actually built
+    with (``adj_up.shape[0] + 1``) — passing it is only needed to search a
+    shallower prefix of the hierarchy. ``n_dists`` counts every distance
+    evaluation (descent + beam + rerank; see ``SearchResult`` for the
+    split). ``banned`` is the (n,) tombstone mask of DESIGN.md §8:
+    tombstoned vertices stay traversable but are never returned.
+    """
+    spec, reranker = resolve_search_args(
+        spec, reranker, k=k, ef=ef_search, width=width,
+        rerank_vectors=rerank_vectors,
+    )
+    return _search_hnsw_spec(
+        index, queries, banned, reranker, spec=spec, max_layers=max_layers
+    )

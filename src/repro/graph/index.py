@@ -58,12 +58,14 @@ from repro.graph.engine import (
 )
 from repro.graph.hnsw import HNSWIndex, SearchResult, build_hnsw, search_hnsw
 from repro.graph.nsg import build_nsg
+from repro.graph.rerank import SearchSpec, make_reranker, rerank_mode
 from repro.graph.vamana import FlatIndex, build_vamana, search_flat_result
 
 __all__ = [
     "AlgoSpec",
     "AnnIndex",
     "SearchResult",
+    "SearchSpec",
     "algos",
     "grow_index",
     "register_algo",
@@ -348,7 +350,15 @@ class AnnIndex:
             f"n={self.n}, active={self.n_active})"
         )
 
-    # ---- search ---------------------------------------------------------
+    # ---- search (the two-stage pipeline, DESIGN.md §11) -----------------
+
+    def reranker(self, mode: str = "exact"):
+        """The second-stage :class:`~repro.graph.rerank.Reranker` this index
+        serves ``mode`` with (None for ``"none"``): exact rerank prefers the
+        backend's retained raw table (``keep_raw=True`` builds, fp32) and
+        falls back to the facade's own vector copy; ``"reconstruct"``
+        decodes through the backend's coder."""
+        return make_reranker(mode, backend=self.backend, raw_vectors=self._data)
 
     def search(
         self,
@@ -357,38 +367,41 @@ class AnnIndex:
         *,
         ef: int = 64,
         width: int = 1,
-        rerank: bool = True,
+        rerank: bool | str = True,
+        rerank_mult: int | None = None,
+        spec: SearchSpec | None = None,
     ) -> SearchResult:
         """Batched top-k search; one result shape for every algorithm.
 
-        rerank=True re-scores the beam on the stored raw vectors (exact
-        squared L2) — the paper's §3.3.6 pipeline and the right default for
-        every compact-code backend; pass False to stay on backend-scale
-        distances. ``ef`` is clamped to at least ``k``.
+        Every call is the two-stage pipeline of DESIGN.md §11: a quantized
+        candidate scan (beam of ``ef``, best ``min(ef, k·rerank_mult)``
+        retained) composed with a shared second stage. ``rerank`` picks the
+        second stage: True / ``"exact"`` re-scores on raw vectors (exact
+        squared L2 — the right default for every compact-code backend),
+        False / ``"none"`` passes scan distances through unchanged, and
+        ``"reconstruct"`` re-scores on coder-decoded vectors (approximate,
+        zero extra memory). ``rerank_mult=None`` reranks the whole beam.
+        A full ``spec=``:class:`SearchSpec` overrides the keyword knobs.
         """
         queries = jnp.asarray(queries, jnp.float32)
         single = queries.ndim == 1
         if single:
             queries = queries[None]
-        ef = max(ef, k)
-        rr = self._data if rerank else None
+        if spec is None:
+            spec = SearchSpec(
+                k=k, ef=ef, width=width, rerank=rerank_mode(rerank),
+                rerank_mult=rerank_mult,
+            )
+        reranker = self.reranker(spec.rerank)
         if self._banned_dev is None and self._tombs.any():
             self._banned_dev = jnp.asarray(self._tombs)
         banned = self._banned_dev
-        if self._spec.layered:
-            res = search_hnsw(
-                self._graph, queries, k=k, ef_search=ef, width=width,
-                rerank_vectors=rr, banned=banned,
-            )
-        else:
-            res = search_flat_result(
-                self._graph, queries, k=k, ef_search=ef, width=width,
-                rerank_vectors=rr, banned=banned,
-            )
+        search = search_hnsw if self._spec.layered else search_flat_result
+        res = search(
+            self._graph, queries, spec=spec, reranker=reranker, banned=banned
+        )
         if single:
-            res = SearchResult(
-                ids=res.ids[0], dists=res.dists[0], n_dists=res.n_dists
-            )
+            res = res._replace(ids=res.ids[0], dists=res.dists[0])
         return res
 
     # ---- snapshot hooks (repro.serve, DESIGN.md §9) ---------------------

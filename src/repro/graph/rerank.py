@@ -1,0 +1,334 @@
+"""Two-stage search pipeline: compressed candidate generation + exact rerank
+(DESIGN.md §11).
+
+The paper's compact codes exist for *comparisons during indexing* — search
+over the finished graph is expected to recover full fidelity. This module is
+the one place that recovery lives: every read path (``search_hnsw`` /
+``search_flat_result``, the ``AnnIndex`` facade, ``SegmentedAnnIndex``'s
+coordinator, ``serve.SearchEngine``, ``serve.SegmentRouter``) composes the
+same two stages:
+
+  1. **scan** — quantized beam search over the graph, returning a candidate
+     superset of ``n_keep = min(ef, k·rerank_mult)`` ids with backend-scale
+     distances (comparison-valid only *within* one coder),
+  2. **rerank** — re-score exactly those candidates through a
+     :class:`Reranker` and take the true top-k. Quantized sums never cross
+     this boundary: anything merged across coders/segments is re-scored
+     first.
+
+Three rerankers cover the deployment spectrum:
+
+  * :class:`ExactReranker` — full-precision squared L2 on retained raw
+    vectors (a backend built with ``keep_raw=True``, or any raw-vector
+    table wrapped in :class:`RawVectors`). The production default.
+  * ``rerank="none"`` — no second stage; scan distances pass through
+    unchanged (bit-exact with the pre-pipeline behavior).
+  * :class:`ReconstructReranker` — re-score on coder-*reconstructed*
+    vectors (decode the stored codes, no raw table). Approximate, but
+    costs zero extra resident bytes — the memory-constrained variant.
+
+:class:`SearchSpec` freezes the whole read-side configuration
+``(k, ef, width, rerank, rerank_mult)`` into one hashable value, so it can
+key jit caches (``functools.partial(jax.jit, static_argnames=("spec",))``)
+and the serving engine's compiled-bucket table.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph.beam import INF
+
+#: Valid ``SearchSpec.rerank`` modes, production-default first.
+RERANK_MODES = ("exact", "none", "reconstruct")
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchSpec:
+    """Frozen read-side configuration — one value, every search entry point.
+
+    k            results returned.
+    ef           scan beam width (clamped to >= k on construction).
+    width        multi-expansion beam width W (DESIGN.md §3.2).
+    rerank       one of :data:`RERANK_MODES`.
+    rerank_mult  candidate-superset multiplier: the scan stage retains
+                 ``min(ef, k·rerank_mult)`` candidates for the rerank
+                 stage. ``None`` (default) retains the whole beam — the
+                 highest-recall setting and the pre-pipeline behavior of
+                 ``rerank_vectors=``.
+
+    Hashable and immutable, so a spec is directly usable as a jit static
+    argument and as a serving-engine bucket key.
+    """
+
+    k: int = 10
+    ef: int = 64
+    width: int = 1
+    rerank: str = "exact"
+    rerank_mult: int | None = None
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError(f"k must be >= 1, got {self.k}")
+        if self.width < 1:
+            raise ValueError(f"width must be >= 1, got {self.width}")
+        if self.rerank not in RERANK_MODES:
+            raise ValueError(
+                f"rerank must be one of {RERANK_MODES}, got {self.rerank!r}"
+            )
+        if self.rerank_mult is not None and self.rerank_mult < 1:
+            raise ValueError(
+                f"rerank_mult must be >= 1 or None, got {self.rerank_mult}"
+            )
+        object.__setattr__(self, "ef", max(int(self.ef), int(self.k)))
+
+    @property
+    def n_keep(self) -> int:
+        """Candidates the scan stage hands to the rerank stage."""
+        if self.rerank == "none":
+            return self.k
+        if self.rerank_mult is None:
+            return self.ef
+        return min(self.ef, self.k * self.rerank_mult)
+
+    def scan_spec(self) -> "SearchSpec":
+        """The candidate-generation half of this spec: same beam, no second
+        stage, ``n_keep`` results — what a segment (or any other partial
+        source feeding a cross-source merge) runs locally before the
+        coordinator reranks the union (DESIGN.md §11)."""
+        return SearchSpec(
+            k=self.n_keep, ef=self.ef, width=self.width, rerank="none"
+        )
+
+
+def rerank_mode(rerank) -> str:
+    """Normalize the facade's ``rerank=`` argument to a mode string.
+
+    ``True`` → ``"exact"`` (the long-standing default), ``False`` →
+    ``"none"``; strings pass through validated."""
+    if rerank is True:
+        return "exact"
+    if rerank is False:
+        return "none"
+    if rerank in RERANK_MODES:
+        return rerank
+    raise ValueError(
+        f"rerank must be a bool or one of {RERANK_MODES}, got {rerank!r}"
+    )
+
+
+# ---------------------------------------------------------------------------
+# Rerankers (registered pytrees, so they trace through jit/vmap like backends)
+# ---------------------------------------------------------------------------
+
+
+class _PytreeMixin:
+    _fields: tuple = ()
+
+    def tree_flatten(self):
+        return tuple(getattr(self, f) for f in self._fields), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):  # noqa: ARG003
+        obj = cls.__new__(cls)
+        for name, child in zip(cls._fields, children):
+            object.__setattr__(obj, name, child)
+        return obj
+
+
+@jax.tree_util.register_pytree_node_class
+class RawVectors(_PytreeMixin):
+    """Minimal ``raw_dists`` source over an (n, d) fp32 table — adapts any
+    raw-vector array (e.g. ``AnnIndex.data``) to the same hook surface a
+    ``keep_raw=True`` backend exposes."""
+
+    _fields = ("vectors",)
+
+    def __init__(self, vectors):
+        self.vectors = jnp.asarray(vectors, jnp.float32)
+
+    def raw_dists(self, q, ids):
+        d = self.vectors[ids] - q
+        return jnp.sum(d * d, axis=-1)
+
+
+@jax.tree_util.register_pytree_node_class
+class ExactReranker(_PytreeMixin):
+    """Exact fp32 squared L2 through a ``raw_dists(q, ids)`` source —
+    a backend retaining raw vectors (``keep_raw=True``), an
+    :class:`~repro.graph.backends.FP32Backend`, or :class:`RawVectors`."""
+
+    _fields = ("source",)
+
+    def __init__(self, source):
+        self.source = source
+
+    def dists(self, q, ids):
+        return self.source.raw_dists(q, ids)
+
+
+@jax.tree_util.register_pytree_node_class
+class ReconstructReranker(_PytreeMixin):
+    """Approximate rerank on coder-reconstructed vectors (DESIGN.md §11).
+
+    Decodes the candidates' stored codes through the backend's
+    ``recon_vectors`` hook and scores squared L2 against the raw query — no
+    retained raw table, so zero extra resident bytes. Sharper than ranking
+    on quantized table sums (the query side is exact and the comparison
+    happens in the original space) but bounded by coder reconstruction
+    error; use :class:`ExactReranker` when memory allows."""
+
+    _fields = ("backend",)
+
+    def __init__(self, backend):
+        self.backend = backend
+
+    def dists(self, q, ids):
+        v = self.backend.recon_vectors(ids)
+        d = v[..., : q.shape[-1]] - q
+        return jnp.sum(d * d, axis=-1)
+
+
+def make_reranker(mode: str, backend=None, raw_vectors=None):
+    """Build the reranker for ``mode`` (``None`` for ``"none"``).
+
+    ``"exact"`` prefers the backend's retained raw vectors
+    (``keep_raw=True`` builds) and falls back to ``raw_vectors`` (e.g. the
+    facade's vector table); ``"reconstruct"`` decodes through ``backend``.
+    """
+    if mode == "none":
+        return None
+    if mode == "exact":
+        if backend is not None and getattr(backend, "has_raw", False):
+            return ExactReranker(backend)
+        if raw_vectors is not None:
+            return ExactReranker(RawVectors(raw_vectors))
+        raise ValueError(
+            "exact rerank needs retained raw vectors: build the backend "
+            "with keep_raw=True or pass raw_vectors"
+        )
+    if mode == "reconstruct":
+        if backend is None:
+            raise ValueError("reconstruct rerank needs the index backend")
+        return ReconstructReranker(backend)
+    raise ValueError(f"unknown rerank mode {mode!r}; valid: {RERANK_MODES}")
+
+
+# ---------------------------------------------------------------------------
+# The second stage — the ONE rerank implementation every read path shares
+# ---------------------------------------------------------------------------
+
+
+def rerank_topk(reranker, q, cand_ids, cand_dists, k: int):
+    """Re-score one query's candidate superset and take the true top-k.
+
+    q           (d,) raw query vector.
+    cand_ids    (C,) int32 candidate ids, −1 padded.
+    cand_dists  (C,) scan-stage distances — the ranking key only when
+                ``reranker`` is None (passthrough); quantized values never
+                survive a real rerank.
+    Returns ``(ids (k,), dists (k,), n_rerank ())`` — reranked distances
+    are on the reranker's scale (exact squared L2 for
+    :class:`ExactReranker`); ``n_rerank`` counts second-stage distance
+    evaluations (0 for the passthrough) for the split cost accounting in
+    ``SearchResult``.
+    """
+    valid = cand_ids >= 0
+    if reranker is None:
+        scored = jnp.where(valid, cand_dists, INF)
+        n_rerank = jnp.int32(0)
+    else:
+        safe = jnp.maximum(cand_ids, 0)
+        scored = jnp.where(valid, reranker.dists(q, safe), INF)
+        n_rerank = jnp.sum(valid).astype(jnp.int32)
+    neg, idx = jax.lax.top_k(-scored, k)
+    return cand_ids[idx], -neg, n_rerank
+
+
+def merge_rerank_topk(reranker, queries, cand_ids, cand_dists, k: int):
+    """Cross-source merge: dedup by id, re-score once, global top-k.
+
+    The coordinator-side counterpart of :func:`rerank_topk` — used by
+    ``SegmentedAnnIndex.search`` and ``serve.SegmentRouter`` to merge
+    per-segment candidate supersets. A candidate id appearing in more than
+    one source (replicated segments, overlapping probes) survives exactly
+    once: duplicates are struck *before* scoring, so nothing is ever
+    double-scored or returned twice.
+
+    queries     (Q, d) raw query block.
+    cand_ids    (Q, C) candidate ids (global), −1 padded.
+    cand_dists  (Q, C) carried scan distances — the ranking key only when
+                ``reranker`` is None (single-coder passthrough merges).
+    Returns ``(ids (Q, k), dists (Q, k), n_rerank ())``; slots beyond the
+    available candidates come back as id −1 / dist +inf.
+    """
+    cand_ids = jnp.asarray(cand_ids)
+    # slot i is a duplicate iff an earlier slot holds the same id. Sort-
+    # based O(C log C) dedup: jax sorts are stable, so within a run of
+    # equal ids the earliest slot comes first and only its followers are
+    # marked (a pairwise (Q, C, C) equality mask is quadratic in the
+    # candidate count, which here is n_probe·n_keep — hundreds).
+    order = jnp.argsort(cand_ids, axis=-1)
+    sorted_ids = jnp.take_along_axis(cand_ids, order, axis=-1)
+    adj_dup = jnp.concatenate(
+        [
+            jnp.zeros_like(sorted_ids[..., :1], dtype=bool),
+            sorted_ids[..., 1:] == sorted_ids[..., :-1],
+        ],
+        axis=-1,
+    )
+    inv = jnp.argsort(order, axis=-1)  # undo the permutation
+    dup = jnp.take_along_axis(adj_dup, inv, axis=-1)
+    valid = (cand_ids >= 0) & ~dup
+    if reranker is None:
+        scored = jnp.where(valid, jnp.asarray(cand_dists, jnp.float32), INF)
+        n_rerank = jnp.int32(0)
+    else:
+        safe = jnp.maximum(cand_ids, 0)
+        scored = jax.vmap(reranker.dists)(jnp.asarray(queries), safe)
+        scored = jnp.where(valid, scored, INF)
+        n_rerank = jnp.sum(valid).astype(jnp.int32)
+    neg, idx = jax.lax.top_k(-scored, k)
+    ids = jnp.take_along_axis(cand_ids, idx, axis=-1)
+    dists = -neg
+    ids = jnp.where(jnp.isinf(dists), -1, ids)
+    return ids, dists, n_rerank
+
+
+def resolve_search_args(
+    spec: SearchSpec | None,
+    reranker,
+    *,
+    k: int | None,
+    ef: int,
+    width: int,
+    rerank_vectors=None,
+):
+    """Normalize a search call to ``(spec, reranker)``.
+
+    The canonical interface is ``spec=`` (+ optional ``reranker=``); the
+    legacy keyword form (``k=``/``ef_search=``/``width=``/
+    ``rerank_vectors=``) maps onto it bit-exactly: ``rerank_vectors`` means
+    exact rerank over the whole beam, its absence means ``"none"``.
+    """
+    if spec is None:
+        if k is None:
+            raise TypeError("search needs k= (or a full spec=)")
+        mode = (
+            "exact" if (rerank_vectors is not None or reranker is not None)
+            else "none"
+        )
+        spec = SearchSpec(k=int(k), ef=int(ef), width=int(width), rerank=mode)
+    if spec.rerank == "none":
+        return spec, None
+    if reranker is None:
+        if rerank_vectors is None:
+            raise ValueError(
+                f"spec.rerank={spec.rerank!r} needs a reranker= (see "
+                "make_reranker) or rerank_vectors="
+            )
+        reranker = ExactReranker(RawVectors(rerank_vectors))
+    return spec, reranker

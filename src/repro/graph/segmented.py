@@ -49,6 +49,13 @@ from repro.graph.hnsw import (
     search_hnsw,
 )
 from repro.graph.index import AnnIndex
+from repro.graph.rerank import (
+    ExactReranker,
+    RawVectors,
+    SearchSpec,
+    merge_rerank_topk,
+    rerank_mode,
+)
 
 
 class SegmentedIndexes(NamedTuple):
@@ -230,6 +237,7 @@ class SegmentedAnnIndex:
         self._centroids = centroids       # (S, D) routing table (frozen)
         self._global_of = global_of       # list[np int64]: local -> global
         self._locate = locate             # np (N, 2): global -> (seg, local)
+        self._raw_cache = None            # (N, D) rerank corpus, built lazily
 
     @classmethod
     def build(
@@ -280,6 +288,37 @@ class SegmentedAnnIndex:
         router maps per-segment results back to collection ids with this)."""
         return np.asarray(self._global_of[s], np.int64).copy()
 
+    @property
+    def raw_vectors(self) -> jax.Array:
+        """(N, D) raw vectors in *global* id order — the collection-level
+        rerank corpus (assembled lazily from the segments' tables,
+        invalidated by ``add``). A global id that was routed to more than
+        one segment (replicated deployments) resolves to its ``_locate``
+        entry — one vector per id, like every other consumer."""
+        if self._raw_cache is None or int(self._raw_cache.shape[0]) != self.n:
+            d = int(self.segments[0].data.shape[1])
+            out = np.empty((self.n, d), np.float32)
+            for s, seg in enumerate(self.segments):
+                out[self._global_of[s]] = np.asarray(seg.data)
+            self._raw_cache = jnp.asarray(out)
+        return self._raw_cache
+
+    def reranker(self, mode: str = "exact"):
+        """The collection-level second stage (None for ``"none"``): exact
+        squared L2 over :attr:`raw_vectors`. Cross-segment merges *must*
+        re-score — quantized sums are coder-local (DESIGN.md §5) — so the
+        approximate ``"reconstruct"`` mode (whose decode is per-segment) is
+        rejected here."""
+        mode = rerank_mode(mode)
+        if mode == "none":
+            return None
+        if mode == "reconstruct":
+            raise ValueError(
+                "reconstruct rerank is per-coder; a cross-segment merge "
+                "needs rerank='exact' (or 'none' for single-coder fleets)"
+            )
+        return ExactReranker(RawVectors(self.raw_vectors))
+
     # ---- snapshot hooks (repro.serve, DESIGN.md §9) ---------------------
 
     def export_state(self) -> tuple[dict, dict, list]:
@@ -313,30 +352,47 @@ class SegmentedAnnIndex:
 
     def search(
         self, queries, k: int = 10, *, ef: int = 64, width: int = 1,
-        rerank: bool = True,
+        rerank: bool | str = True, rerank_mult: int | None = None,
+        spec: SearchSpec | None = None,
     ) -> SearchResult:
-        """Fan out to every segment, merge global top-k (the coordinator).
+        """Fan out to every segment, merge global top-k (the coordinator) —
+        the distributed face of the two-stage pipeline (DESIGN.md §11).
 
-        rerank=True is the meaningful default here: quantized sums are only
-        comparison-valid within one coder, so a cross-segment merge needs
-        exact distances (DESIGN.md §5).
+        Each segment runs the *scan* half only (``spec.scan_spec()``: its
+        quantized candidate superset, no local rerank); the coordinator
+        merges the union through the one shared second stage
+        (``rerank.merge_rerank_topk``): dedup by global id, one exact
+        re-score, global top-k. rerank=True is the meaningful default here:
+        quantized sums are only comparison-valid within one coder, so a
+        cross-segment merge needs exact distances (DESIGN.md §5);
+        ``rerank=False`` keeps the legacy single-coder quantized merge.
         """
         queries = jnp.asarray(queries, jnp.float32)
-        all_ids, all_d, nd = [], [], jnp.float32(0)
+        if spec is None:
+            spec = SearchSpec(
+                k=k, ef=ef, width=width, rerank=rerank_mode(rerank),
+                rerank_mult=rerank_mult,
+            )
+        reranker = self.reranker(spec.rerank)  # fail fast on bad modes
+        scan = spec.scan_spec()
+        all_ids, all_d = [], []
+        n_scan = jnp.int32(0)
         for s, seg in enumerate(self.segments):
-            res = seg.search(queries, k, ef=ef, width=width, rerank=rerank)
-            gids = jnp.asarray(self._global_of[s])
+            res = seg.search(queries, spec=scan)
+            gids = jnp.asarray(self._global_of[s], jnp.int32)
             all_ids.append(jnp.where(
                 res.ids >= 0, gids[jnp.maximum(res.ids, 0)], -1
             ))
             all_d.append(jnp.where(res.ids >= 0, res.dists, INF))
-            nd = nd + jnp.asarray(res.n_dists, jnp.float32)
-        cat_ids = jnp.concatenate(all_ids, axis=1)  # (Q, S*k)
+            n_scan = n_scan + jnp.asarray(res.n_scan, jnp.int32)
+        cat_ids = jnp.concatenate(all_ids, axis=1)  # (Q, S·n_keep)
         cat_d = jnp.concatenate(all_d, axis=1)
-        neg, pos = jax.lax.top_k(-cat_d, k)
+        ids, dists, n_rerank = merge_rerank_topk(
+            reranker, queries, cat_ids, cat_d, spec.k
+        )
         return SearchResult(
-            ids=jnp.take_along_axis(cat_ids, pos, axis=1).astype(jnp.int32),
-            dists=-neg, n_dists=nd,
+            ids=ids.astype(jnp.int32), dists=dists,
+            n_dists=n_scan + n_rerank, n_scan=n_scan, n_rerank=n_rerank,
         )
 
     def add(self, new_vectors) -> np.ndarray:
@@ -353,6 +409,7 @@ class SegmentedAnnIndex:
         m = int(new.shape[0])
         gids = self.n + np.arange(m, dtype=np.int64)
         new_locate = np.empty((m, 2), np.int64)
+        self._raw_cache = None  # collection rerank corpus grows
         for s, seg in enumerate(self.segments):
             rows = np.nonzero(route == s)[0]
             if rows.size == 0:

@@ -16,7 +16,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import warnings
 from typing import NamedTuple
 
 import jax
@@ -26,6 +25,7 @@ from repro.graph.beam import INF, beam_search
 from repro.graph.engine import BuildEngine, BuildParams, CostAccount
 from repro.graph.hnsw import HNSWParams  # noqa: F401 — canonical param alias
 from repro.graph.hnsw import SearchResult
+from repro.graph.rerank import SearchSpec, rerank_topk, resolve_search_args
 
 
 class FlatIndex(NamedTuple):
@@ -99,65 +99,59 @@ def build_vamana(
     return _build_flat_jit(data, backend, entry, params=params, two_pass=two_pass)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "ef_search", "width"))
-def search_flat_result(
-    index: FlatIndex,
-    queries: jax.Array,
-    *,
-    k: int,
-    ef_search: int = 64,
-    width: int = 1,
-    rerank_vectors: jax.Array | None = None,
-    banned: jax.Array | None = None,
+@functools.partial(jax.jit, static_argnames=("spec",))
+def _search_flat_spec(
+    index: FlatIndex, queries, banned, reranker, *, spec: SearchSpec
 ) -> SearchResult:
-    """Beam search from the medoid + optional exact rerank.
-
-    The flat-graph counterpart of ``search_hnsw`` — same ``SearchResult``
-    shape (the ``repro.index`` facade relies on that), same ``banned``
-    tombstone semantics (traversable, never returned), and ``n_dists`` cost
-    accounting.
-    """
+    """The jitted flat pipeline: quantized beam from the medoid over the
+    best ``spec.n_keep`` candidates → ``reranker`` second stage (skipped
+    when None) — the flat-graph twin of ``hnsw._search_hnsw_spec``."""
     backend = index.backend
 
     def one(q):
         qctx = backend.prepare_query(q)
         res = beam_search(
-            backend, qctx, index.adj, index.entry[None], ef=ef_search,
-            width=width, banned=banned,
+            backend, qctx, index.adj, index.entry[None], ef=spec.ef,
+            width=spec.width, banned=banned, n_keep=spec.n_keep,
         )
-        if rerank_vectors is not None:
-            safe = jnp.maximum(res.ids, 0)
-            dv = rerank_vectors[safe] - q[None, :]
-            exact = jnp.where(res.ids >= 0, jnp.sum(dv * dv, -1), INF)
-            _, idx = jax.lax.top_k(-exact, k)
-            return res.ids[idx], exact[idx], res.n_dists
-        return res.ids[:k], res.dists[:k], res.n_dists
+        if reranker is None:
+            return (
+                res.ids[: spec.k], res.dists[: spec.k], res.n_dists,
+                jnp.int32(0),
+            )
+        ids, dists, n_rr = rerank_topk(reranker, q, res.ids, res.dists, spec.k)
+        return ids, dists, res.n_dists, n_rr
 
-    ids, dists, nd = jax.vmap(one)(queries)
-    return SearchResult(ids=ids, dists=dists, n_dists=jnp.sum(nd))
+    ids, dists, ns, nr = jax.vmap(one)(queries)
+    ns, nr = jnp.sum(ns), jnp.sum(nr)
+    return SearchResult(
+        ids=ids, dists=dists, n_dists=ns + nr, n_scan=ns, n_rerank=nr
+    )
 
 
-def search_flat(
+def search_flat_result(
     index: FlatIndex,
     queries: jax.Array,
     *,
-    k: int,
+    k: int | None = None,
     ef_search: int = 64,
     width: int = 1,
     rerank_vectors: jax.Array | None = None,
-):
-    """Deprecated thin wrapper around :func:`search_flat_result`, kept for
-    call sites that unpack ``(ids, dists)``; new code should use the
-    ``repro.index`` facade (or ``search_flat_result`` directly)."""
-    warnings.warn(
-        "search_flat is deprecated: use the repro.index facade "
-        "(AnnIndex.search) or search_flat_result, which return a "
-        "SearchResult with cost accounting",
-        DeprecationWarning,
-        stacklevel=2,
-    )
-    res = search_flat_result(
-        index, queries, k=k, ef_search=ef_search, width=width,
+    banned: jax.Array | None = None,
+    spec: SearchSpec | None = None,
+    reranker=None,
+) -> SearchResult:
+    """Flat two-stage search (DESIGN.md §11): beam from the medoid +
+    Reranker second stage.
+
+    The flat-graph counterpart of ``search_hnsw`` — same canonical
+    ``spec=``/``reranker=`` interface with the same bit-exact legacy
+    keyword mapping, same ``SearchResult`` shape (the ``repro.index``
+    facade relies on that), same ``banned`` tombstone semantics
+    (traversable, never returned), and the same split cost accounting.
+    """
+    spec, reranker = resolve_search_args(
+        spec, reranker, k=k, ef=ef_search, width=width,
         rerank_vectors=rerank_vectors,
     )
-    return res.ids, res.dists
+    return _search_flat_spec(index, queries, banned, reranker, spec=spec)

@@ -6,16 +6,20 @@ graph substrate); this alias keeps the public spelling short:
     from repro.index import AnnIndex
 
     index = AnnIndex.build(data, algo="hnsw", backend="flash_blocked")
-    res   = index.search(queries, k=10, ef=96)
+    res   = index.search(queries, k=10, ef=96)                  # exact rerank
+    res   = index.search(queries, spec=SearchSpec(
+        k=10, ef=96, rerank="exact", rerank_mult=4))            # DESIGN.md §11
     index.add(new_vectors); index.delete(ids); index.compact()
 
-See DESIGN.md §8 for the dynamic-maintenance semantics.
+See DESIGN.md §8 for the dynamic-maintenance semantics and §11 for the
+two-stage search pipeline (``SearchSpec``, rerank modes).
 """
 
 from repro.graph.index import (  # noqa: F401
     AlgoSpec,
     AnnIndex,
     SearchResult,
+    SearchSpec,
     algos,
     grow_index,
     register_algo,

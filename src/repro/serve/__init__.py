@@ -7,29 +7,33 @@ service whose unit of work is a request stream, not an array.
 
     snapshot   atomic, format-versioned, checksummed save/load — build once,
                serve forever; round-trips bit-exact search results
-    engine     SearchEngine: pre-jitted search callables per padded Q-shape
-               bucket, warmup(), QPS/latency/compile telemetry
+    engine     SearchEngine: pre-jitted search callables per (padded Q-shape
+               × SearchSpec) bucket, warmup(), QPS/latency/compile telemetry
+               with the scan/rerank cost split (DESIGN.md §11)
     scheduler  MicroBatcher: coalesces single-query requests into the next
                shape bucket under a max-wait deadline (the serving twin of
                the build beam's width-W argument)
-    router     SegmentRouter: nearest-centroid fan-out over segments + exact
-               top-k merge
+    router     SegmentRouter: nearest-centroid fan-out over segments; the
+               merge is the shared two-stage rerank (dedup by global id +
+               one exact re-score — quantized sums never cross segments)
 
 Quickstart::
 
-    from repro.index import AnnIndex
+    from repro.index import AnnIndex, SearchSpec
     from repro import serve
 
     index = AnnIndex.build(data, algo="hnsw", backend="flash_blocked")
     serve.save_index("/var/idx/v1", index)          # build once …
     index = serve.load_index("/var/idx/v1")         # … serve forever
-    engine = serve.SearchEngine(index, k=10, ef=64).warmup()
+    spec = SearchSpec(k=10, ef=64, rerank="exact", rerank_mult=4)
+    engine = serve.SearchEngine(index, spec=spec).warmup()
     res = engine.search(queries)                    # zero recompiles
     with serve.MicroBatcher(engine) as mb:          # single-query traffic
         fut = mb.submit(one_query)
         print(fut.result().ids)
 """
 
+from repro.graph.rerank import SearchSpec  # noqa: F401 — serving config
 from repro.serve.engine import DEFAULT_BUCKETS, SearchEngine  # noqa: F401
 from repro.serve.router import SegmentRouter  # noqa: F401
 from repro.serve.scheduler import MicroBatcher  # noqa: F401
@@ -45,6 +49,7 @@ __all__ = [
     "FORMAT_VERSION",
     "MicroBatcher",
     "SearchEngine",
+    "SearchSpec",
     "SegmentRouter",
     "load_index",
     "save_index",

@@ -4,10 +4,13 @@ XLA compiles one executable per input shape, so a naive serving loop that
 passes whatever query-block size arrives recompiles constantly — the serving
 twin of the build-side problem the paper solves with dense distance blocks.
 :class:`SearchEngine` fixes the shapes once: incoming blocks are padded up to
-the next configured Q bucket (default 1 / 8 / 32), each (bucket, k, ef,
-width) pair is traced exactly once (eagerly via :meth:`warmup`, else on first
-use), and steady-state serving never touches the compiler again — asserted
-by a compile counter that ticks only at trace time.
+the next configured Q bucket (default 1 / 8 / 32), each (bucket ×
+:class:`~repro.graph.rerank.SearchSpec`) pair is traced exactly once (eagerly
+via :meth:`warmup`, else on first use), and steady-state serving never
+touches the compiler again — asserted by a compile counter that ticks only at
+trace time. Reranked specs (DESIGN.md §11) are full members of the bucket
+table, so the two-stage pipeline serves at the same zero steady-state
+recompiles as a plain scan.
 
 Telemetry is first-class: per-call wall latency (p50/p99), QPS, distance
 evaluations per query, and the compile-vs-cache-hit counters the zero-
@@ -30,6 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.graph.hnsw import SearchResult, search_hnsw
+from repro.graph.rerank import SearchSpec, rerank_mode
 from repro.graph.vamana import search_flat_result
 
 #: Default padded-shape buckets: singles, small coalesced blocks, full blocks.
@@ -39,9 +43,13 @@ DEFAULT_BUCKETS = (1, 8, 32)
 class SearchEngine:
     """Long-lived search runtime over a built :class:`repro.index.AnnIndex`.
 
-    One engine serves one (k, ef, width, rerank) configuration — the common
+    One engine serves one default :class:`SearchSpec` — the common
     production shape where a deployment pins its quality knobs and the
-    runtime's job is throughput. Construct, :meth:`warmup`, then
+    runtime's job is throughput. Compiled executables are keyed by
+    (Q-bucket × spec), so a reranked spec is exactly as recompile-free as a
+    plain one, and a per-call ``spec=`` override (an A/B quality tier, a
+    higher ``rerank_mult`` for a premium route) costs one trace on first
+    use and is cached thereafter. Construct, :meth:`warmup`, then
     :meth:`search` arbitrary query blocks; blocks larger than the biggest
     bucket are served in bucket-sized chunks.
     """
@@ -53,20 +61,24 @@ class SearchEngine:
         k: int = 10,
         ef: int = 64,
         width: int = 1,
-        rerank: bool = True,
+        rerank: bool | str = True,
+        rerank_mult: int | None = None,
+        spec: SearchSpec | None = None,
         q_buckets: tuple = DEFAULT_BUCKETS,
     ):
         buckets = tuple(sorted({int(b) for b in q_buckets}))
         if not buckets or buckets[0] < 1:
             raise ValueError(f"q_buckets must be positive ints, got {q_buckets}")
         self.index = index
-        self.k = int(k)
-        self.ef = max(int(ef), self.k)
-        self.width = int(width)
-        self.rerank = bool(rerank)
+        if spec is None:
+            spec = SearchSpec(
+                k=int(k), ef=int(ef), width=int(width),
+                rerank=rerank_mode(rerank), rerank_mult=rerank_mult,
+            )
+        self.spec = spec
         self.q_buckets = buckets
-        self._fns: dict = {}  # bucket -> jitted callable
-        self._compiled: set = set()  # buckets that have executed once
+        self._fns: dict = {}  # (bucket, spec) -> jitted callable
+        self._compiled: set = set()  # (bucket, spec, n) that have executed
         self._banned = None
         # telemetry
         self._n_compiles = 0
@@ -76,11 +88,30 @@ class SearchEngine:
         self._n_queries = 0        # real queries served
         self._n_padded = 0         # padded queries dispatched (>= real)
         self._dists = 0.0
+        self._scan_dists = 0.0     # compact-code stage (split accounting)
+        self._rerank_dists = 0.0   # second stage
         self._time_total = 0.0     # all-time busy seconds (for qps)
         # bounded window: a long-lived server must not grow per-call state
         self._lat: collections.deque = collections.deque(maxlen=4096)
         self._bucket_hits = {b: 0 for b in buckets}
         self.refresh()
+
+    # legacy views of the pinned spec (constructor kwargs predate SearchSpec)
+    @property
+    def k(self) -> int:
+        return self.spec.k
+
+    @property
+    def ef(self) -> int:
+        return self.spec.ef
+
+    @property
+    def width(self) -> int:
+        return self.spec.width
+
+    @property
+    def rerank(self) -> bool:
+        return self.spec.rerank != "none"
 
     # ---- lifecycle ------------------------------------------------------
 
@@ -92,48 +123,50 @@ class SearchEngine:
         self._banned = jnp.asarray(mask)
         return self
 
-    def warmup(self) -> "SearchEngine":
-        """Compile every configured bucket now (off the request path), so
-        steady-state serving starts at zero recompiles."""
+    def warmup(self, *, specs: tuple = ()) -> "SearchEngine":
+        """Compile every configured (bucket × spec) pair now (off the
+        request path), so steady-state serving starts at zero recompiles.
+        ``specs`` pre-warms additional per-call override specs beside the
+        engine default."""
         d = int(self.index.data.shape[1])
-        for b in self.q_buckets:
-            dummy = jnp.zeros((b, d), jnp.float32)
-            jax.block_until_ready(self._dispatch(b, dummy).ids)
+        for sp in (self.spec, *specs):
+            for b in self.q_buckets:
+                dummy = jnp.zeros((b, d), jnp.float32)
+                jax.block_until_ready(self._dispatch(b, dummy, sp).ids)
         return self
 
     # ---- the pre-jitted search path -------------------------------------
 
-    def _fn(self, bucket: int):
-        fn = self._fns.get(bucket)
+    def _fn(self, bucket: int, spec: SearchSpec):
+        fn = self._fns.get((bucket, spec))
         if fn is None:
             layered = self.index.layered
-            k, ef, width = self.k, self.ef, self.width
 
-            def raw(graph, queries, banned, rerank_vectors):
+            def raw(graph, queries, banned, reranker):
                 # Trace-time side effect: ticks once per XLA compile of this
-                # bucket, never on a warm call — the compile counter the
-                # zero-recompile contract is asserted against.
+                # (bucket, spec) pair, never on a warm call — the compile
+                # counter the zero-recompile contract is asserted against.
                 self._n_compiles += 1
                 search = search_hnsw if layered else search_flat_result
                 return search(
-                    graph, queries, k=k, ef_search=ef, width=width,
-                    rerank_vectors=rerank_vectors, banned=banned,
+                    graph, queries, spec=spec, reranker=reranker, banned=banned
                 )
 
             fn = jax.jit(raw)
-            self._fns[bucket] = fn
+            self._fns[(bucket, spec)] = fn
         return fn
 
     def _dispatch(
-        self, bucket: int, queries_padded, *, record: bool = False
+        self, bucket: int, queries_padded, spec: SearchSpec, *,
+        record: bool = False,
     ) -> SearchResult:
-        rr = self.index.data if self.rerank else None
+        reranker = self.index.reranker(spec.rerank)
         # a grown index changes array shapes: this dispatch retraces, so it
         # is not a cache hit even though the bucket fn exists
-        key = (bucket, self.index.n)
+        key = (bucket, spec, self.index.n)
         hit = key in self._compiled
-        res = self._fn(bucket)(
-            self.index.graph, queries_padded, self._banned, rr
+        res = self._fn(bucket, spec)(
+            self.index.graph, queries_padded, self._banned, reranker
         )
         self._compiled.add(key)
         if record and hit:
@@ -159,12 +192,18 @@ class SearchEngine:
 
     # ---- serving --------------------------------------------------------
 
-    def search(self, queries, *, record: bool = True) -> SearchResult:
+    def search(
+        self, queries, *, spec: SearchSpec | None = None, record: bool = True
+    ) -> SearchResult:
         """Serve one query block (1D single query or (Q, d) batch).
 
         Pads Q up to the bucket shape (padding replicates the first query —
         same per-query program, results sliced away), chunks blocks larger
-        than the top bucket, and folds latency/cost into the telemetry."""
+        than the top bucket, and folds latency/cost into the telemetry.
+        ``spec=`` overrides the engine default for this call (first use of
+        a new spec compiles its buckets; ``warmup(specs=…)`` pre-pays that).
+        """
+        spec = self.spec if spec is None else spec
         queries = jnp.asarray(queries, jnp.float32)
         single = queries.ndim == 1
         if single:
@@ -177,7 +216,7 @@ class SearchEngine:
             # clamp-gathered against new ids and silently misclassify them
             self.refresh()
         t0 = time.perf_counter()
-        out_ids, out_dists, nd = [], [], 0.0
+        out_ids, out_dists, nd, n_scan, n_rerank = [], [], 0.0, 0.0, 0.0
         off = 0
         while off < q_total:
             q = min(q_total - off, self.q_buckets[-1])
@@ -186,10 +225,12 @@ class SearchEngine:
             if q < bucket:
                 pad = jnp.broadcast_to(chunk[:1], (bucket - q,) + chunk.shape[1:])
                 chunk = jnp.concatenate([chunk, pad])
-            res = self._dispatch(bucket, chunk, record=record)
+            res = self._dispatch(bucket, chunk, spec, record=record)
             out_ids.append(res.ids[:q])
             out_dists.append(res.dists[:q])
             nd += float(res.n_dists)  # also syncs the dispatch
+            n_scan += float(res.n_scan)
+            n_rerank += float(res.n_rerank)
             if record:
                 self._n_blocks += 1
                 self._n_padded += bucket
@@ -205,11 +246,14 @@ class SearchEngine:
             self._n_calls += 1
             self._n_queries += q_total
             self._dists += nd
+            self._scan_dists += n_scan
+            self._rerank_dists += n_rerank
         if single:
-            return SearchResult(
-                ids=ids[0], dists=dists[0], n_dists=jnp.float32(nd)
-            )
-        return SearchResult(ids=ids, dists=dists, n_dists=jnp.float32(nd))
+            ids, dists = ids[0], dists[0]
+        return SearchResult(
+            ids=ids, dists=dists, n_dists=jnp.float32(nd),
+            n_scan=jnp.float32(n_scan), n_rerank=jnp.float32(n_rerank),
+        )
 
     # ---- telemetry ------------------------------------------------------
 
@@ -240,6 +284,12 @@ class SearchEngine:
             "n_dists_per_query": (
                 self._dists / self._n_padded if self._n_padded else 0.0
             ),
+            "n_scan_per_query": (
+                self._scan_dists / self._n_padded if self._n_padded else 0.0
+            ),
+            "n_rerank_per_query": (
+                self._rerank_dists / self._n_padded if self._n_padded else 0.0
+            ),
             "bucket_hits": dict(self._bucket_hits),
         }
 
@@ -248,7 +298,7 @@ class SearchEngine:
         tracks the engine's whole compilation history)."""
         self._n_calls = self._n_blocks = self._n_hits = 0
         self._n_queries = self._n_padded = 0
-        self._dists = 0.0
+        self._dists = self._scan_dists = self._rerank_dists = 0.0
         self._time_total = 0.0
         self._lat = collections.deque(maxlen=4096)
         self._bucket_hits = {b: 0 for b in self.q_buckets}
@@ -256,7 +306,6 @@ class SearchEngine:
 
     def __repr__(self) -> str:
         return (
-            f"SearchEngine(index={self.index!r}, k={self.k}, ef={self.ef}, "
-            f"width={self.width}, buckets={self.q_buckets}, "
-            f"compiles={self._n_compiles})"
+            f"SearchEngine(index={self.index!r}, spec={self.spec}, "
+            f"buckets={self.q_buckets}, compiles={self._n_compiles})"
         )

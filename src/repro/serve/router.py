@@ -1,4 +1,5 @@
-"""Segmented serving: centroid-routed fan-out + top-k merge (DESIGN.md §9).
+"""Segmented serving: centroid-routed fan-out + shared rerank merge
+(DESIGN.md §9, §11).
 
 ``SegmentedAnnIndex.search`` fans every query to every segment — correct,
 but at serving time most segments can't contain a query's neighbors.
@@ -8,12 +9,17 @@ growth), batches each segment's routed queries through that segment's own
 pre-jitted :class:`~repro.serve.engine.SearchEngine`, and merges the
 candidates into a global top-k.
 
-Merge rule: candidates from different segments are only comparable on
-*exact* distances (quantized sums are coder-local — DESIGN.md §5), so
-engines default to ``rerank=True`` and the merge is a plain sort on exact
-squared L2 with global ids carried along. ``n_probe = S`` reproduces the
-full fan-out semantics; smaller ``n_probe`` trades recall for fewer
-segment dispatches — the standard IVF-style serving knob.
+Merge rule (DESIGN.md §11): per-segment engines run the *scan* half of the
+router's spec only (``spec.scan_spec()`` — quantized candidate supersets,
+no local rerank), and the merge is the one shared second stage,
+:func:`repro.graph.rerank.merge_rerank_topk`: dedup by global id, one
+collection-level re-score, global top-k. Quantized sums never cross the
+segment boundary, and a global id surfaced by two probed segments
+(replicated deployments, overlapping probes) is scored exactly once —
+the former per-engine rerank + plain sort double-counted such overlaps.
+``n_probe = S`` reproduces the full fan-out semantics; smaller ``n_probe``
+trades recall for fewer segment dispatches — the standard IVF-style
+serving knob.
 """
 
 from __future__ import annotations
@@ -21,15 +27,17 @@ from __future__ import annotations
 import numpy as np
 
 from repro.graph.hnsw import SearchResult
+from repro.graph.rerank import SearchSpec, merge_rerank_topk, rerank_mode
 from repro.serve.engine import DEFAULT_BUCKETS, SearchEngine
 
 
 class SegmentRouter:
     """Serving coordinator over a :class:`repro.graph.segmented.SegmentedAnnIndex`.
 
-    Owns one :class:`SearchEngine` per segment (shared shape buckets, shared
-    quality knobs) plus the routing/merge logic. ``warmup()`` pre-compiles
-    every segment × bucket pair.
+    Owns one :class:`SearchEngine` per segment (shared shape buckets,
+    shared scan spec) plus the routing logic and the collection-level
+    :class:`~repro.graph.rerank.Reranker` the merge re-scores through.
+    ``warmup()`` pre-compiles every segment × bucket pair.
     """
 
     def __init__(
@@ -40,7 +48,9 @@ class SegmentRouter:
         k: int = 10,
         ef: int = 64,
         width: int = 1,
-        rerank: bool = True,
+        rerank: bool | str = True,
+        rerank_mult: int | None = None,
+        spec: SearchSpec | None = None,
         q_buckets: tuple = DEFAULT_BUCKETS,
     ):
         n_seg = len(seg_index.segments)
@@ -51,12 +61,21 @@ class SegmentRouter:
             )
         self.seg_index = seg_index
         self.n_probe = int(n_probe)
-        self.k = int(k)
-        self.engines = [
-            SearchEngine(
-                seg, k=k, ef=ef, width=width, rerank=rerank,
-                q_buckets=q_buckets,
+        if spec is None:
+            spec = SearchSpec(
+                k=int(k), ef=int(ef), width=int(width),
+                rerank=rerank_mode(rerank), rerank_mult=rerank_mult,
             )
+        self.spec = spec
+        self.k = spec.k
+        # segments generate candidates; the router owns the second stage.
+        # Validate (and for exact rerank, pre-build) the collection-level
+        # reranker now — an unsupported mode must fail here, not after a
+        # search has already paid the full per-segment scan fan-out.
+        seg_index.reranker(spec.rerank)
+        self._scan_spec = spec.scan_spec()
+        self.engines = [
+            SearchEngine(seg, spec=self._scan_spec, q_buckets=q_buckets)
             for seg in seg_index.segments
         ]
         self._centroids = np.asarray(seg_index.centroids, np.float64)
@@ -84,8 +103,10 @@ class SegmentRouter:
         """Fan a block out across probed segments, merge global top-k.
 
         Returns a ``SearchResult`` with *global* ids (−1 padding where a
-        probe set yields fewer than k candidates) and the engines' exact
-        (reranked) distances; ``n_dists`` sums the probed segments' work."""
+        probe set yields fewer than k candidates), distances on the
+        reranker scale (exact squared L2 by default), and the split
+        scan/rerank cost counters summed over the probed segments and the
+        merge."""
         queries = np.asarray(queries, np.float32)
         single = queries.ndim == 1
         if single:
@@ -93,47 +114,57 @@ class SegmentRouter:
         k = self.k if k is None else int(k)
         if k > self.k:
             raise ValueError(
-                f"k={k} exceeds the engines' configured k={self.k}"
+                f"k={k} exceeds the router's configured k={self.k}"
             )
         n_q = queries.shape[0]
         probe = self.route(queries)
-        width = self.n_probe * self.k
-        cand_ids = np.full((n_q, width), -1, np.int64)
+        n_keep = self._scan_spec.k  # candidates per probed segment
+        width = self.n_probe * n_keep
+        cand_ids = np.full((n_q, width), -1, np.int32)
         cand_d = np.full((n_q, width), np.inf, np.float32)
-        n_dists = 0.0
+        n_scan = 0.0
         for s, engine in enumerate(self.engines):
             hit = (probe == s).any(axis=1)
             rows = np.nonzero(hit)[0]
             if rows.size == 0:
                 continue
             res = engine.search(queries[rows])
-            n_dists += float(res.n_dists)
+            n_scan += float(res.n_scan)
             gids = self.seg_index.global_ids(s)
             ids = np.asarray(res.ids)
             dists = np.asarray(res.dists)
             # probe slot of segment s for each routed query (fancy indexing
             # copies, so write into the sub-block and assign it back)
             slot = np.argmax(probe[rows] == s, axis=1)
-            cols = slot[:, None] * self.k + np.arange(self.k)[None, :]
+            cols = slot[:, None] * n_keep + np.arange(n_keep)[None, :]
             valid = ids >= 0
             sub_ids, sub_d = cand_ids[rows], cand_d[rows]
             np.put_along_axis(
-                sub_ids, cols, np.where(valid, gids[np.maximum(ids, 0)], -1),
+                sub_ids, cols,
+                np.where(valid, gids[np.maximum(ids, 0)], -1).astype(np.int32),
                 axis=1,
             )
             np.put_along_axis(
                 sub_d, cols, np.where(valid, dists, np.inf), axis=1
             )
             cand_ids[rows], cand_d[rows] = sub_ids, sub_d
-        order = np.argsort(cand_d, axis=1, kind="stable")[:, :k]
-        out_ids = np.take_along_axis(cand_ids, order, axis=1)
-        out_d = np.take_along_axis(cand_d, order, axis=1)
-        out_ids[~np.isfinite(out_d)] = -1
+        # the one shared second stage (eager jax — engine buckets stay the
+        # only compiled artifacts, so the zero-recompile contract is theirs).
+        # The reranker is re-derived per call: seg_index.add() grows the
+        # collection rerank corpus, and a captured table would clamp-gather
+        # new global ids against stale rows.
+        ids, dists, n_rerank = merge_rerank_topk(
+            self.seg_index.reranker(self.spec.rerank), queries, cand_ids,
+            cand_d, k,
+        )
+        out_ids = np.asarray(ids, np.int32)
+        out_d = np.asarray(dists, np.float32)
         if single:
             out_ids, out_d = out_ids[0], out_d[0]
+        nr = float(n_rerank)
         return SearchResult(
-            ids=out_ids.astype(np.int32), dists=out_d,
-            n_dists=np.float32(n_dists),
+            ids=out_ids, dists=out_d, n_dists=np.float32(n_scan + nr),
+            n_scan=np.float32(n_scan), n_rerank=np.float32(nr),
         )
 
     def stats(self) -> dict:

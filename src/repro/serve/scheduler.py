@@ -113,9 +113,10 @@ class MicroBatcher:
             # n_dists covers the padded block; every padded row runs the
             # same program, so the honest per-query cost divides by the
             # dispatched slot count, not the real batch size
-            per_query = float(res.n_dists) / self.engine.padded_queries(
-                len(batch)
-            )
+            slots = self.engine.padded_queries(len(batch))
+            per_query = float(res.n_dists) / slots
+            per_scan = float(res.n_scan) / slots
+            per_rerank = float(res.n_rerank) / slots
             self._n_batches += 1
             self._batch_sizes.append(len(batch))
             for i, (_, fut) in enumerate(batch):
@@ -123,6 +124,8 @@ class MicroBatcher:
                     SearchResult(
                         ids=ids[i], dists=dists[i],
                         n_dists=np.float32(per_query),
+                        n_scan=np.float32(per_scan),
+                        n_rerank=np.float32(per_rerank),
                     )
                 )
         except BaseException as exc:  # noqa: BLE001 — fail the waiters, not the worker

@@ -46,7 +46,14 @@ from repro.graph.segmented import SegmentedAnnIndex
 #:     mirror and packs it on restore (bit-exact — pack∘unpack is the
 #:     identity on 4-bit codes), so old snapshots search identically and
 #:     are silently upgraded on their next ``save_index``.
-FORMAT_VERSION = 2
+#: v3  backends built with ``keep_raw=True`` persist their retained
+#:     raw-vector table as an optional ``backend.raw`` array (the exact
+#:     rerank corpus of DESIGN.md §11). v1/v2 snapshots still load: a
+#:     missing ``backend.raw`` restores as None (``_Base.from_state``
+#:     optional-field rule) and exact rerank falls back to the facade's
+#:     vector table, so search results are unchanged; the next
+#:     ``save_index`` of a keep_raw build writes the v3 layout.
+FORMAT_VERSION = 3
 
 _MANIFEST = "manifest.json"
 _ARRAYS = "arrays.npz"

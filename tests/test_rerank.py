@@ -1,0 +1,387 @@
+"""Tests for the two-stage search pipeline (DESIGN.md §11).
+
+Contracts:
+  1. Exactness: with the whole beam retained and a beam wide enough to
+     visit everything, pipeline top-k ids are IDENTICAL to brute-force fp32
+     top-k on every backend × algorithm (distances equal to float reduction
+     order).
+  2. No silent default change: ``rerank="none"`` is bit-exact with the
+     pre-pipeline scan behavior, and ``rerank=True`` is bit-exact with the
+     pre-pipeline ``rerank_vectors=`` formulation.
+  3. ``SearchSpec`` is a frozen, validated, hashable configuration; the
+     scan/rerank cost split adds up.
+  4. ``keep_raw=True`` retains raw vectors on the backend, flows through
+     ``extend()``/``state_dict()`` (snapshot v3), and serves the same
+     results as the facade-table fallback.
+  5. The coder-``reconstruct`` reranker runs everywhere a coder exists and
+     is lossless on fp32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import graph, serve
+from repro.graph.backends import kinds
+from repro.graph.beam import beam_search, greedy_descent
+from repro.graph.hnsw import HNSWParams
+from repro.graph.knn import exact_knn, recall_at_k
+from repro.graph.rerank import (
+    ExactReranker,
+    RawVectors,
+    SearchSpec,
+    merge_rerank_topk,
+)
+from repro.graph.segmented import SegmentedAnnIndex
+from repro.index import AnnIndex, algos
+from tests.conftest import make_clustered
+
+PARAMS = HNSWParams(r_upper=4, r_base=8, ef=16, batch=32, max_layers=2)
+FLASH_KW = dict(d_f=12, m_f=6, l_f=4, h=8, kmeans_iters=3)
+BACKEND_KW = {
+    "fp32": {},
+    "pca": dict(alpha=0.9),
+    "sq": dict(bits=8),
+    "pq": dict(m=8, l_pq=4, kmeans_iters=3),
+    "flash": FLASH_KW,
+    "flash_blocked": FLASH_KW,
+}
+N, N_Q, D = 200, 16, 16
+
+
+@pytest.fixture(scope="module")
+def rr_data():
+    x = make_clustered(N + N_Q, D, n_clusters=10, seed=3)
+    return jnp.asarray(x[:N]), jnp.asarray(x[N:])
+
+
+def _brute_topk(data, queries, k):
+    d2 = jnp.sum((data[None, :, :] - queries[:, None, :]) ** 2, axis=-1)
+    neg, ids = jax.lax.top_k(-d2, k)
+    return ids, -neg
+
+
+class TestSearchSpec:
+    def test_validation(self):
+        with pytest.raises(ValueError, match="k must be"):
+            SearchSpec(k=0)
+        with pytest.raises(ValueError, match="rerank must be"):
+            SearchSpec(rerank="fancy")
+        with pytest.raises(ValueError, match="rerank_mult"):
+            SearchSpec(rerank_mult=0)
+        with pytest.raises(ValueError, match="width"):
+            SearchSpec(width=0)
+
+    def test_ef_clamped_and_n_keep(self):
+        s = SearchSpec(k=20, ef=10)
+        assert s.ef == 20  # clamped to k
+        assert SearchSpec(k=10, ef=64).n_keep == 64  # whole beam by default
+        assert SearchSpec(k=10, ef=64, rerank_mult=4).n_keep == 40
+        assert SearchSpec(k=10, ef=64, rerank_mult=100).n_keep == 64
+        assert SearchSpec(k=10, ef=64, rerank="none", rerank_mult=4).n_keep == 10
+
+    def test_scan_spec(self):
+        s = SearchSpec(k=10, ef=64, width=4, rerank="exact", rerank_mult=2)
+        scan = s.scan_spec()
+        assert scan.rerank == "none" and scan.k == 20
+        assert scan.ef == 64 and scan.width == 4
+
+    def test_hashable_jit_key(self):
+        a = SearchSpec(k=5, ef=24, rerank="exact", rerank_mult=2)
+        b = SearchSpec(k=5, ef=24, rerank="exact", rerank_mult=2)
+        assert a == b and hash(a) == hash(b)
+        assert len({a, b, SearchSpec(k=5, ef=24)}) == 2
+
+
+class TestExactPipelineEqualsBruteForce:
+    """ISSUE satellite: rerank_mult large enough to retain all candidates +
+    a beam wide enough to visit the whole graph ⇒ pipeline top-k ==
+    brute-force fp32 top-k, for every backend × algo."""
+
+    # dense enough that (almost) every vertex is reachable from the entry
+    # point even under a coarse coder's distance ordering — exactness needs
+    # the scan stage to *visit* the true neighbors
+    DENSE = HNSWParams(r_upper=8, r_base=16, ef=32, batch=32, max_layers=2)
+
+    @staticmethod
+    def _reachable(idx) -> np.ndarray:
+        """(n,) bool: vertices reachable from the search entry point. A
+        graph build can orphan a vertex (NSG under a coarse coder); the
+        pipeline's exactness claim is over everything the scan CAN visit,
+        so the oracle is brute force over this set — which is the full set
+        on every well-connected combo (asserted ≥ 97.5% below)."""
+        g = idx.graph
+        adj = np.asarray(g.adj0 if idx.layered else g.adj)
+        seen = np.zeros(adj.shape[0], bool)
+        frontier = [int(g.entry)]
+        seen[frontier] = True
+        while frontier:
+            nbrs = adj[frontier].ravel()
+            nbrs = nbrs[nbrs >= 0]
+            new = nbrs[~seen[nbrs]]
+            seen[new] = True
+            frontier = np.unique(new).tolist()
+        return seen
+
+    @pytest.mark.parametrize("algo", sorted(set(algos()) & {"hnsw", "vamana", "nsg"}))
+    @pytest.mark.parametrize("kind", kinds())
+    def test_bit_exact_ids(self, rr_data, algo, kind):
+        data, queries = rr_data
+        kwargs = {"knn_k": 32} if algo == "nsg" else {}
+        idx = AnnIndex.build(
+            data, algo=algo, backend=kind, params=self.DENSE,
+            backend_kwargs=BACKEND_KW[kind], **kwargs,
+        )
+        # ef >= n retains every visited vertex: the candidate superset is
+        # the whole reachable graph, so the exact second stage must
+        # reproduce brute force over it.
+        res = idx.search(queries, spec=SearchSpec(k=5, ef=2 * N, rerank="exact"))
+        reach = self._reachable(idx)
+        assert reach.mean() >= 0.975, f"{algo}/{kind} graph badly disconnected"
+        masked = jnp.where(jnp.asarray(reach), 0.0, jnp.inf)
+        d2 = jnp.sum(
+            (data[None, :, :] - queries[:, None, :]) ** 2, axis=-1
+        ) + masked[None, :]
+        _, want_ids = jax.lax.top_k(-d2, 5)
+        np.testing.assert_array_equal(
+            np.asarray(res.ids), np.asarray(want_ids),
+            err_msg=f"{algo}/{kind} pipeline != brute force",
+        )
+        # distances are exact squared L2 (equal to float reduction order)
+        want_d = jnp.take_along_axis(
+            jnp.sum((data[None, :, :] - queries[:, None, :]) ** 2, -1),
+            want_ids, axis=1,
+        )
+        np.testing.assert_allclose(
+            np.asarray(res.dists), np.asarray(want_d), rtol=1e-5, atol=1e-5
+        )
+
+
+class TestNoSilentDefaultChange:
+    """rerank='none' and rerank=True are bit-exact with the pre-pipeline
+    behaviors (hand-rolled seed references)."""
+
+    def _reference(self, idx, queries, *, k, ef, rerank):
+        """The pre-pipeline read path, reconstructed from primitives:
+        greedy descent + full-ef beam, then either a [:k] slice (no rerank)
+        or the legacy exact-rerank formulation."""
+        g = idx.graph
+        backend = g.backend
+        layered = idx.layered
+
+        def one(q):
+            qctx = backend.prepare_query(q)
+            if layered:
+                ep = g.entry
+                for l in range(g.adj_up.shape[0], 0, -1):
+                    ep = greedy_descent(backend, qctx, g.adj_up[l - 1], ep).node
+                adj = g.adj0
+            else:
+                ep = g.entry
+                adj = g.adj
+            res = beam_search(backend, qctx, adj, ep[None], ef=ef)
+            if not rerank:
+                return res.ids[:k], res.dists[:k]
+            safe = jnp.maximum(res.ids, 0)
+            dv = idx.data[safe] - q[None, :]
+            exact = jnp.where(
+                res.ids >= 0, jnp.sum(dv * dv, axis=-1), jnp.inf
+            )
+            _, pos = jax.lax.top_k(-exact, k)
+            return res.ids[pos], exact[pos]
+
+        ids, dists = jax.vmap(one)(queries)
+        return ids, dists
+
+    @pytest.mark.parametrize("algo,kind", [
+        ("hnsw", "fp32"), ("hnsw", "flash_blocked"), ("vamana", "flash"),
+    ])
+    def test_none_bit_exact_with_seed_scan(self, rr_data, algo, kind):
+        data, queries = rr_data
+        idx = AnnIndex.build(
+            data, algo=algo, backend=kind, params=PARAMS,
+            backend_kwargs=BACKEND_KW[kind],
+        )
+        res = idx.search(queries, k=5, ef=24, rerank=False)
+        want_ids, want_d = self._reference(idx, queries, k=5, ef=24, rerank=False)
+        np.testing.assert_array_equal(np.asarray(res.ids), np.asarray(want_ids))
+        np.testing.assert_array_equal(np.asarray(res.dists), np.asarray(want_d))
+        assert float(res.n_rerank) == 0.0
+
+    @pytest.mark.parametrize("algo,kind", [
+        ("hnsw", "flash_blocked"), ("vamana", "flash"),
+    ])
+    def test_exact_default_bit_exact_with_legacy_rerank(self, rr_data, algo, kind):
+        data, queries = rr_data
+        idx = AnnIndex.build(
+            data, algo=algo, backend=kind, params=PARAMS,
+            backend_kwargs=BACKEND_KW[kind],
+        )
+        res = idx.search(queries, k=5, ef=24)  # rerank=True default
+        want_ids, want_d = self._reference(idx, queries, k=5, ef=24, rerank=True)
+        np.testing.assert_array_equal(np.asarray(res.ids), np.asarray(want_ids))
+        # same formula, same candidates; XLA may fuse the two graphs'
+        # sum-reductions differently, so dists agree to reduction order
+        np.testing.assert_allclose(
+            np.asarray(res.dists), np.asarray(want_d), rtol=1e-6
+        )
+
+
+class TestCostSplit:
+    def test_counters_add_up_and_mult_bounds_rerank(self, rr_data):
+        data, queries = rr_data
+        idx = AnnIndex.build(
+            data, algo="hnsw", backend="flash_blocked", params=PARAMS,
+            backend_kwargs=FLASH_KW,
+        )
+        spec = SearchSpec(k=5, ef=32, rerank="exact", rerank_mult=2)
+        res = idx.search(queries, spec=spec)
+        assert float(res.n_scan) + float(res.n_rerank) == float(res.n_dists)
+        # a well-connected graph fills the superset: exactly n_keep
+        # second-stage evaluations per query
+        assert float(res.n_rerank) == queries.shape[0] * spec.n_keep
+        # the superset (and thus the rerank bill) shrinks with the mult
+        res1 = idx.search(queries, spec=SearchSpec(
+            k=5, ef=32, rerank="exact", rerank_mult=1))
+        res_all = idx.search(queries, spec=SearchSpec(k=5, ef=32, rerank="exact"))
+        assert float(res1.n_rerank) < float(res.n_rerank) < float(res_all.n_rerank)
+        # scan work is identical — the beam does not change with the mult
+        assert float(res1.n_scan) == float(res.n_scan) == float(res_all.n_scan)
+
+
+class TestKeepRaw:
+    def test_backend_hooks_and_facade_parity(self, rr_data):
+        data, queries = rr_data
+        kw = dict(FLASH_KW, keep_raw=True)
+        idx_raw = AnnIndex.build(
+            data, algo="hnsw", backend="flash_blocked", params=PARAMS,
+            backend_kwargs=kw,
+        )
+        idx_tab = AnnIndex.build(
+            data, algo="hnsw", backend="flash_blocked", params=PARAMS,
+            backend_kwargs=FLASH_KW,
+        )
+        assert idx_raw.backend.has_raw and not idx_tab.backend.has_raw
+        assert isinstance(idx_raw.reranker("exact").source, type(idx_raw.backend))
+        assert isinstance(idx_tab.reranker("exact").source, RawVectors)
+        r1 = idx_raw.search(queries, k=5, ef=24)
+        r2 = idx_tab.search(queries, k=5, ef=24)
+        np.testing.assert_array_equal(np.asarray(r1.ids), np.asarray(r2.ids))
+        np.testing.assert_array_equal(
+            np.asarray(r1.dists), np.asarray(r2.dists)
+        )
+
+    def test_raw_flows_through_extend_and_add(self, rr_data):
+        data, queries = rr_data
+        be = graph.make_backend("sq", data[:150], keep_raw=True, bits=8)
+        grown = be.extend(data[150:])
+        assert grown.has_raw and grown.raw.shape[0] == N
+        np.testing.assert_allclose(np.asarray(grown.raw), np.asarray(data))
+        idx = AnnIndex.build(
+            data[:150], algo="hnsw", backend=be, params=PARAMS
+        )
+        idx.add(data[150:])
+        assert idx.backend.raw.shape[0] == N
+
+    def test_raw_missing_without_keep(self, rr_data):
+        data, _ = rr_data
+        be = graph.make_backend("flash", data, **FLASH_KW)
+        with pytest.raises(ValueError, match="keep_raw"):
+            be.raw_dists(data[0], jnp.arange(4))
+
+    def test_snapshot_v3_roundtrip_and_v2_migration(self, rr_data, tmp_path):
+        data, queries = rr_data
+        assert serve.FORMAT_VERSION == 3
+        idx = AnnIndex.build(
+            data, algo="hnsw", backend="flash_blocked", params=PARAMS,
+            backend_kwargs=dict(FLASH_KW, keep_raw=True),
+        )
+        loaded = serve.load_index(serve.save_index(str(tmp_path / "s"), idx))
+        assert loaded.backend.has_raw
+        r1 = idx.search(queries, k=5, ef=24)
+        r2 = loaded.search(queries, k=5, ef=24)
+        np.testing.assert_array_equal(np.asarray(r1.ids), np.asarray(r2.ids))
+        np.testing.assert_array_equal(np.asarray(r1.dists), np.asarray(r2.dists))
+        # pre-v3 state (no backend.raw key) restores with raw=None and the
+        # facade fallback serves identical results
+        state = {
+            k: v for k, v in idx.backend.state_dict().items() if k != "raw"
+        }
+        be_v2 = type(idx.backend).from_state(state)
+        assert not be_v2.has_raw
+        r3 = AnnIndex.restore(*_strip_raw(idx.export_state())).search(
+            queries, k=5, ef=24
+        )
+        np.testing.assert_array_equal(np.asarray(r1.ids), np.asarray(r3.ids))
+
+
+def _strip_raw(state):
+    meta, arrays = state
+    return meta, {k: v for k, v in arrays.items() if k != "backend.raw"}
+
+
+class TestReconstructReranker:
+    def test_lossless_on_fp32(self, rr_data):
+        data, queries = rr_data
+        idx = AnnIndex.build(data, algo="hnsw", backend="fp32", params=PARAMS)
+        r_exact = idx.search(queries, k=5, ef=24, rerank="exact")
+        r_recon = idx.search(queries, k=5, ef=24, rerank="reconstruct")
+        np.testing.assert_array_equal(
+            np.asarray(r_exact.ids), np.asarray(r_recon.ids)
+        )
+
+    @pytest.mark.parametrize("kind", ["pq", "flash", "sq", "pca"])
+    def test_runs_on_coded_backends(self, rr_data, kind):
+        data, queries = rr_data
+        idx = AnnIndex.build(
+            data, algo="hnsw", backend=kind, params=PARAMS,
+            backend_kwargs=BACKEND_KW[kind],
+        )
+        res = idx.search(queries, k=5, ef=24, rerank="reconstruct")
+        assert res.ids.shape == (N_Q, 5)
+        assert float(res.n_rerank) > 0
+        truth, _ = exact_knn(queries, data, k=5)
+        rec_none = recall_at_k(
+            idx.search(queries, k=5, ef=24, rerank=False).ids, truth, 5
+        )
+        rec_recon = recall_at_k(res.ids, truth, 5)
+        # decoding + exact-query scoring should not be (much) worse than
+        # ranking on quantized scan sums
+        assert float(rec_recon) >= float(rec_none) - 0.1
+
+
+class TestSegmentedPipeline:
+    def test_full_fanout_equals_brute_force(self, rr_data):
+        data, queries = rr_data
+        segs = np.asarray(data).reshape(4, N // 4, -1)
+        seg_idx = SegmentedAnnIndex.build(
+            segs, algo="hnsw", backend="flash", params=PARAMS,
+            backend_kwargs=FLASH_KW,
+        )
+        res = seg_idx.search(
+            queries, spec=SearchSpec(k=5, ef=2 * N, rerank="exact")
+        )
+        want_ids, _ = _brute_topk(data, queries, 5)
+        np.testing.assert_array_equal(np.asarray(res.ids), np.asarray(want_ids))
+        assert float(res.n_scan) > 0 and float(res.n_rerank) > 0
+        assert float(res.n_dists) == float(res.n_scan) + float(res.n_rerank)
+
+    def test_merge_dedups_and_reranks_once(self):
+        """The shared merge: duplicate global ids survive once, scored on
+        the reranker scale, padding comes back as −1/+inf."""
+        vecs = jnp.asarray(np.eye(4, 3, dtype=np.float32))
+        rr = ExactReranker(RawVectors(vecs))
+        queries = jnp.asarray(np.zeros((1, 3), np.float32))
+        cand_ids = jnp.asarray([[2, 0, 2, -1, 1, 0]], jnp.int32)
+        cand_d = jnp.full((1, 6), 7.0, jnp.float32)  # never consulted
+        ids, dists, n_rr = merge_rerank_topk(rr, queries, cand_ids, cand_d, 5)
+        row = np.asarray(ids[0])
+        assert len(np.unique(row[row >= 0])) == (row >= 0).sum() == 3
+        assert row[3] == -1 and row[4] == -1  # only 3 unique candidates
+        assert np.isinf(np.asarray(dists[0][3:])).all()
+        assert int(n_rr) == 3  # {2, 0, 1}: duplicates and padding unscored
+        # the winner is scored on the reranker scale (exact L2 to q=0)
+        np.testing.assert_allclose(np.asarray(dists[0][:3]), 1.0, atol=1e-6)

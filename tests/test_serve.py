@@ -1,6 +1,6 @@
-"""Tests for the ``repro.serve`` runtime (DESIGN.md §9).
+"""Tests for the ``repro.serve`` runtime (DESIGN.md §9, §11).
 
-Five contracts:
+Contracts:
   1. Snapshots are lossless: for every registered algo × backend,
      ``load_index(save_index(p, idx))`` searches bit-identically to the live
      index — including after ``add()`` and ``delete()`` (the ISSUE-3
@@ -13,8 +13,8 @@ Five contracts:
      search; isolated requests still complete within the deadline.
   4. The SegmentRouter at full probe reproduces the coordinator's fan-out
      merge; at n_probe=1 it degrades gracefully, never returning invalid
-     ids.
-  5. ``vamana.search_flat`` is deprecated and now says so.
+     ids; a global id surfaced by two probed segments is returned at most
+     once (the DESIGN.md §11 dedup-before-rerank merge).
 """
 
 from __future__ import annotations
@@ -32,8 +32,7 @@ from repro.graph.backends import kinds
 from repro.graph.hnsw import HNSWParams
 from repro.graph.knn import exact_knn, recall_at_k
 from repro.graph.segmented import SegmentedAnnIndex
-from repro.graph.vamana import build_vamana, search_flat
-from repro.index import AnnIndex, algos
+from repro.index import AnnIndex, SearchSpec, algos
 from tests.conftest import make_clustered
 
 PARAMS = HNSWParams(r_upper=4, r_base=8, ef=16, batch=32, max_layers=2)
@@ -337,16 +336,127 @@ class TestSegmentRouter:
         with pytest.raises(ValueError, match="exceeds"):
             router.search(np.zeros((2, 16), np.float32), k=9)
 
-
-class TestDeprecations:
-    def test_search_flat_warns(self, serve_data):
+    def test_probe_overlap_same_global_id_scored_once(self, serve_data):
+        """Regression (DESIGN.md §11): two probed segments returning the
+        SAME global id (replicated segments) must yield that id at most
+        once — the pre-pipeline merge sorted duplicates into the top-k,
+        double-counting the overlap."""
         data, _, queries = serve_data
-        from repro import graph
-
-        idx, _ = build_vamana(
-            data, graph.make_backend("fp32", data), params=PARAMS,
-            two_pass=False,
+        half = np.asarray(data)[: N_BASE // 2]
+        # two replicas of one segment: identical vectors AND identical
+        # global ids (a replicated-for-availability deployment)
+        seg_idx = SegmentedAnnIndex.build(
+            [half, half], algo="hnsw", backend="fp32", params=PARAMS
         )
-        with pytest.warns(DeprecationWarning, match="search_flat"):
-            ids, dists = search_flat(idx, queries[:4], k=5, ef_search=24)
-        assert ids.shape == (4, 5)
+        gids0 = seg_idx.global_ids(0)
+        seg_idx._global_of[1] = gids0.copy()
+        router = serve.SegmentRouter(
+            seg_idx, n_probe=2, k=5, ef=24, q_buckets=(8, 16)
+        ).warmup()
+        got = router.search(np.asarray(queries))
+        ids = np.asarray(got.ids)
+        for row in ids:
+            row = row[row >= 0]
+            assert len(np.unique(row)) == len(row), (
+                f"duplicate global id in top-k: {row}"
+            )
+        # every returned id is a real candidate and k slots are filled
+        # (the replica's duplicates were struck, not the results)
+        assert (ids >= 0).all()
+        assert np.isin(ids, gids0).all()
+        # the coordinator's own fan-out merge dedups identically
+        got2 = seg_idx.search(queries, k=5, ef=24)
+        ids2 = np.asarray(got2.ids)
+        for row in ids2:
+            row = row[row >= 0]
+            assert len(np.unique(row)) == len(row)
+
+    def test_router_reranks_ids_added_after_construction(self, serve_data):
+        """Regression: the merge reranker must track a grown collection —
+        a reranker captured at construction would clamp-gather new global
+        ids against the old, smaller raw table and misrank them."""
+        data, extra, _ = serve_data
+        segs = np.asarray(data).reshape(3, N_BASE // 3, -1)
+        seg_idx = SegmentedAnnIndex.build(
+            segs, algo="hnsw", backend="fp32", params=PARAMS
+        )
+        router = serve.SegmentRouter(
+            seg_idx, n_probe=3, k=1, ef=24, q_buckets=(8,)
+        ).warmup()
+        gids = seg_idx.add(extra)
+        router.refresh()
+        res = router.search(np.asarray(extra[:8]))
+        hits = np.asarray(res.ids)[:, 0]
+        assert (np.isin(hits, gids)).any(), (
+            "no added vector found itself — merge reranked against a "
+            "stale raw table"
+        )
+        # ...and the returned distances are the true exact distances
+        for q, (gid, d) in zip(np.asarray(extra[:8]), zip(hits, np.asarray(res.dists)[:, 0])):
+            if gid >= N_BASE:
+                true = float(((np.asarray(seg_idx.raw_vectors)[gid] - q) ** 2).sum())
+                np.testing.assert_allclose(d, true, rtol=1e-5)
+
+
+class TestSpecKeyedEngine:
+    """(Q-bucket × SearchSpec) compilation: a reranked spec serves at zero
+    steady-state recompiles, and a per-call spec override compiles once."""
+
+    def test_reranked_spec_zero_recompiles(self, serve_data):
+        data, _, queries = serve_data
+        idx = AnnIndex.build(
+            data, algo="hnsw", backend="flash_blocked", params=PARAMS,
+            backend_kwargs=FLASH_KW,
+        )
+        spec = SearchSpec(k=5, ef=24, rerank="exact", rerank_mult=4)
+        engine = serve.SearchEngine(idx, spec=spec, q_buckets=(1, 8)).warmup()
+        assert engine.n_compiles == 2  # one per bucket, rerank included
+        engine.search(queries[:3])
+        engine.search(queries[:8])
+        engine.search(queries[0])
+        assert engine.n_compiles == 2, "reranked steady state recompiled"
+        stats = engine.stats()
+        # the split accounting is visible at the serving layer
+        assert stats["n_rerank_per_query"] > 0
+        assert stats["n_scan_per_query"] > 0
+
+    def test_per_call_spec_override_compiles_once(self, serve_data):
+        data, _, queries = serve_data
+        idx = AnnIndex.build(
+            data, algo="hnsw", backend="flash_blocked", params=PARAMS,
+            backend_kwargs=FLASH_KW,
+        )
+        engine = serve.SearchEngine(
+            idx, k=5, ef=24, q_buckets=(8,)
+        ).warmup()
+        assert engine.n_compiles == 1
+        premium = SearchSpec(k=5, ef=24, rerank="exact", rerank_mult=2)
+        engine.search(queries[:8], spec=premium)  # first use: one trace
+        assert engine.n_compiles == 2
+        engine.search(queries[:4], spec=premium)  # warm thereafter
+        engine.search(queries[:8])                # default spec still warm
+        assert engine.n_compiles == 2
+        # warmup(specs=...) pre-pays the override trace
+        engine2 = serve.SearchEngine(
+            idx, k=5, ef=24, q_buckets=(8,)
+        ).warmup(specs=(premium,))
+        n0 = engine2.n_compiles
+        engine2.search(queries[:8], spec=premium)
+        assert engine2.n_compiles == n0
+
+    def test_override_results_match_facade_spec(self, serve_data):
+        data, _, queries = serve_data
+        idx = AnnIndex.build(
+            data, algo="hnsw", backend="flash_blocked", params=PARAMS,
+            backend_kwargs=FLASH_KW,
+        )
+        spec = SearchSpec(k=5, ef=24, rerank="exact", rerank_mult=2)
+        engine = serve.SearchEngine(idx, spec=spec, q_buckets=(8,)).warmup()
+        res = engine.search(queries[:8])
+        direct = idx.search(queries[:8], spec=spec)
+        np.testing.assert_array_equal(
+            np.asarray(res.ids), np.asarray(direct.ids)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(res.dists), np.asarray(direct.dists)
+        )
