@@ -84,8 +84,12 @@ def width_sweep(
     out = {}
     for w in widths:
         params = dataclasses.replace(DEFAULT_PARAMS, width=w)
+        # beam width W is an incremental-acquisition knob; pin the strategy
+        # so the sweep keeps measuring the fused expand() path (the bulk
+        # default never runs a construction beam)
         build = lambda: AnnIndex.build(  # noqa: B023
-            data, algo="hnsw", backend=be, params=params
+            data, algo="hnsw", backend=be, params=params,
+            strategy="incremental",
         )
         index = build()
         jax.block_until_ready(index.graph.adj0)
@@ -105,12 +109,13 @@ def width_sweep(
             build_s_samples=samples,
             n_dists=n_dists,
             us_per_dist=warm / n_dists * 1e6,
+            vectors_per_s=n / warm,
             recall_at_10=rec,
         )
         emit(
             f"indexing/width_{w}", warm * 1e6,
             f"n_dists={n_dists:.0f} us_per_dist={warm / n_dists * 1e6:.4f} "
-            f"recall={rec:.3f}",
+            f"vectors_per_s={n / warm:.0f} recall={rec:.3f}",
         )
     mirror = be.nbr_codes
     return dict(
@@ -129,6 +134,70 @@ def width_sweep(
             ),
             code_bytes_per_vector=float(be.coder.code_bytes),
         ),
+        widths=out,
+    )
+
+
+def bulk_vs_incremental(
+    widths=(4, 8), *, n: int = 3000, d: int = 48, repeats: int = 3
+) -> dict:
+    """Bulk-construction fast path vs the incremental insertion loop
+    (DESIGN.md §12): same data, same params, same backend instance.
+
+    Per width config (the incremental side's beam width; bulk has no beam,
+    its acquisition is the batched refinement rounds): warm wall-clock
+    build medians, build throughput in vectors/s, distance evaluations,
+    and recall@10 at ef=96. The acceptance bar this section reports on:
+    ``throughput_ratio`` (bulk vectors/s over incremental) ≥ 2 with
+    ``recall_delta`` within ±0.005 on each config.
+    """
+    data, queries = bench_data(n, d)
+    tids, _ = exact_knn(queries, data, k=10)
+    key = jax.random.PRNGKey(0)
+    be = graph.make_backend(
+        "flash_blocked", data, key,
+        r_for_blocked=DEFAULT_PARAMS.r_base, **FLASH_KW,
+    )
+    out = {}
+    for w in widths:
+        params = dataclasses.replace(DEFAULT_PARAMS, width=w)
+        row: dict = dict(width=w)
+        for strat in ("incremental", "bulk"):
+            build = lambda: AnnIndex.build(  # noqa: B023
+                data, algo="hnsw", backend=be, params=params, strategy=strat
+            )
+            index = build()
+            jax.block_until_ready(index.graph.adj0)
+            samples = time_samples(
+                lambda: build().graph.adj0, repeats=repeats, warmup=0  # noqa: B023
+            )
+            warm = float(np.median(samples))
+            rec = float(
+                recall_at_k(index.search(queries, k=10, ef=96).ids, tids, 10)
+            )
+            row[strat] = dict(
+                build_s=warm,
+                build_s_samples=samples,
+                vectors_per_s=n / warm,
+                n_dists=float(index.last_stats.n_dists),
+                recall_at_10=rec,
+            )
+        ratio = row["incremental"]["build_s"] / row["bulk"]["build_s"]
+        delta = row["bulk"]["recall_at_10"] - row["incremental"]["recall_at_10"]
+        row["throughput_ratio"] = ratio
+        row["recall_delta"] = delta
+        out[str(w)] = row
+        emit(
+            f"indexing/bulk_w{w}", row["bulk"]["build_s"] * 1e6,
+            f"speedup={ratio:.2f}x "
+            f"bulk_vps={row['bulk']['vectors_per_s']:.0f} "
+            f"inc_vps={row['incremental']['vectors_per_s']:.0f} "
+            f"recall_delta={delta:+.4f}",
+        )
+    return dict(
+        bench="bulk_vs_incremental",
+        n=n, d=d, repeats=repeats,
+        params=dataclasses.asdict(DEFAULT_PARAMS) | {"width": "swept"},
         widths=out,
     )
 

@@ -7,6 +7,9 @@ loop, so kernel-level regressions are visible without graph-build noise:
     several ``block_n`` tilings (Pallas-level knob; on this TPU-less host
     interpret mode is what can execute the tiled program, with the pure-jnp
     ref alongside as the production-CPU dispatch),
+  * ``flash_round`` round-size × R sweep: the bulk build's batched-table
+    refinement-round scan (DESIGN.md §12) at the candidate widths the
+    builder actually issues (C = 2R + R²),
   * width sweep, gather+scan vs fused expand: for each W, one jitted
     ``beam_search`` step compiled both ways (``fused=True`` vs ``False``)
     over a synthetic blocked index — the unfused three-stage pipeline
@@ -63,6 +66,54 @@ def scan_block_sweep(
             block_n=bn, us=_median_us(s), us_samples=s
         )
         emit(f"kernels/scan_interp_bn{bn}", _median_us(s), f"n={n}")
+    return out
+
+
+def round_scan_sweep(
+    *, m: int = 16, k: int = 16, round_bs=(256, 1024), rs=(8, 16, 32),
+    repeats: int = 3,
+) -> dict:
+    """``flash_round`` sweep — the bulk build's refinement-round scan
+    (DESIGN.md §12) over round size B × degree R.
+
+    Candidate width follows the bulk builder's shape: pool P = 2R plus the
+    R² neighbor-of-neighbor expansion, so C = 2R + R². The ref dispatch
+    (the production-CPU path on this host) is timed per (B, R) cell with
+    per-candidate cost derived; one interpret-mode Pallas execution at the
+    smallest cell exercises the tiled program itself.
+    """
+    rng = np.random.default_rng(2)
+    out: dict = {"m": m, "k": k, "repeats": repeats, "cells": {}}
+    for b in round_bs:
+        for r in rs:
+            c = 2 * r + r * r
+            codes = jnp.asarray(rng.integers(0, k, (b, c, m)), jnp.int32)
+            adts = jnp.asarray(rng.integers(0, 255, (b, m, k)), jnp.int32)
+            s = time_samples(
+                lambda: ops.flash_round(codes, adts, impl="ref"),  # noqa: B023
+                repeats=repeats,
+            )
+            us = _median_us(s)
+            row = dict(
+                round_b=b, r=r, c=c, us=us, us_samples=s,
+                ns_per_cand=us * 1e3 / (b * c),
+            )
+            out["cells"][f"b{b}_r{r}"] = row
+            emit(
+                f"kernels/round_b{b}_r{r}", us,
+                f"C={c} ns_per_cand={row['ns_per_cand']:.2f}",
+            )
+    b0, r0 = min(round_bs), min(rs)
+    c0 = 2 * r0 + r0 * r0
+    codes = jnp.asarray(rng.integers(0, k, (b0, c0, m)), jnp.int32)
+    adts = jnp.asarray(rng.integers(0, 255, (b0, m, k)), jnp.int32)
+    interp_s = time_samples(
+        lambda: ops.flash_round(codes, adts, impl="interpret"),
+        repeats=repeats,
+    )
+    out["interpret_min_cell"] = dict(
+        round_b=b0, r=r0, us=_median_us(interp_s), us_samples=interp_s
+    )
     return out
 
 
@@ -163,6 +214,7 @@ def kernels_bench(*, repeats: int = 3) -> dict:
         bench="kernels_scan_vs_expand",
         repeats_requested=repeats,
         scan_block_sweep=scan_block_sweep(repeats=repeats),
+        round_scan_sweep=round_scan_sweep(repeats=repeats),
         expand_width_sweep=expand_width_sweep(repeats=max(repeats, 5)),
     )
 

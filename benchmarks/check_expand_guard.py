@@ -12,8 +12,13 @@ build the moment the dispatch table drifts:
     layout at its mirror width, False everywhere else (including the
     blocked layout at a mismatched width — upper HNSW layers),
   * forcing ``fused=True`` on a hook-less backend must raise, not degrade,
-  * and the fused path must agree bit-exactly with the gather+scan
-    fallback on one smoke search.
+  * the fused path must agree bit-exactly with the gather+scan fallback on
+    one smoke search,
+  * and the bulk-round entry point (DESIGN.md §12) is held to the same
+    discipline: ``supports_bulk_round()`` True exactly for the Flash
+    family (whose ``round_dists`` routes through ``kernels.ops
+    .flash_round``), with the kernel path asserted bit-exact against the
+    default vmapped gather-and-score every backend inherits.
 
 Exit 0 = dispatch table sound.  Usage: PYTHONPATH=src python
 benchmarks/check_expand_guard.py
@@ -82,6 +87,36 @@ def main() -> int:
         failures.append("beam_search(fused=True) on fp32 did not raise")
     except ValueError:
         pass
+
+    # Bulk-round capability table (DESIGN.md §12): the batched-round kernel
+    # path may only be claimed by the Flash family — a hook-less backend
+    # "supporting" it would hand ``flash_round`` a qctx with no quantized
+    # ADT and fail deep inside the bulk builder's chunked lax.map.
+    bulk_expected = {"flash", "flash_blocked"}
+    for kind, be in backends.items():
+        expect = kind in bulk_expected
+        got = bool(be.supports_bulk_round())
+        if got is not expect:
+            failures.append(
+                f"{kind}: supports_bulk_round() = {got}, expected {expect}"
+            )
+
+    # Kernel round_dists == the vmapped gather-and-score every backend
+    # inherits (bit-exact on the int32 quantized tables), for every backend
+    # claiming the hook.
+    cand = jnp.asarray(rng.integers(0, 256, (8, 24)), jnp.int32)
+    for kind in sorted(bulk_expected & set(backends)):
+        be = backends[kind]
+        if not be.supports_bulk_round():
+            continue  # already reported above
+        qctxs = jax.vmap(be.prepare_query)(data[:8])
+        got = np.asarray(be.round_dists(qctxs, cand))
+        want = np.asarray(jax.vmap(be.query_dists)(qctxs, cand))
+        if not np.array_equal(got, want):
+            failures.append(
+                f"{kind}: kernel round_dists disagrees with the default "
+                "vmapped gather-and-score"
+            )
 
     # Fused == fallback on one smoke search (bit-exact).
     blocked = backends["flash_blocked"]

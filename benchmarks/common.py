@@ -47,11 +47,20 @@ def time_samples(fn, *args, repeats: int = 3, warmup: int = 1) -> list[float]:
     timed benchmark section runs ``--repeats`` times (benchmarks/run.py),
     reports the median, and records the raw samples in its JSON payload so
     outliers are visible after the fact.
+
+    A ``gc.collect()`` precedes every timed sample: cyclic garbage left by
+    *earlier* sections otherwise gets collected inside whichever section
+    happens to be timing when the collector fires (measured +60% on a
+    build that follows a heavy section), which made sample medians depend
+    on section order rather than on the code under test.
     """
+    import gc
+
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     ts = []
     for _ in range(repeats):
+        gc.collect()
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
         ts.append(time.perf_counter() - t0)

@@ -50,7 +50,21 @@ def _json_indexing_widths(repeats: int) -> tuple[dict, list[str]]:
 
     payload = bench_indexing.width_sweep(repeats=repeats)
     payload["update"] = bench_indexing.update_bench(repeats=repeats)
+    payload["bulk_vs_incremental"] = bench_indexing.bulk_vs_incremental(
+        repeats=repeats
+    )
     warnings = []
+    for w, row in payload["bulk_vs_incremental"]["widths"].items():
+        if row["throughput_ratio"] < 2.0:
+            warnings.append(
+                f"bulk build throughput only {row['throughput_ratio']:.2f}x "
+                f"incremental at width={w} (acceptance bar: >= 2x)"
+            )
+        if abs(row["recall_delta"]) > 0.005:
+            warnings.append(
+                f"bulk recall@10 delta {row['recall_delta']:+.4f} at "
+                f"width={w} outside the +/-0.005 acceptance band"
+            )
     upd = payload["update"]["add"]
     if upd["n_dists_vs_rebuild"] >= 0.5:
         warnings.append(

@@ -29,6 +29,23 @@ L2, or a monotone affine image of it; never mixed across backends):
                                   (static — checked once at trace time by
                                   ``beam_search``; False everywhere except
                                   the Flash blocked layout)
+    round_dists(qctxs, ids)     -> f32    the BULK-round hot path (DESIGN.md
+                                  §12): qctxs a query-context pytree with
+                                  leading (B,), ids (B, C) candidate blocks
+                                  (callers mask invalid slots) — one
+                                  refinement round of the ``strategy="bulk"``
+                                  build scored in a single batched call.
+                                  Default: vmapped ``query_dists`` (correct
+                                  for every backend); the Flash family
+                                  overrides with one blocked Pallas launch
+                                  (kernels.ops.flash_round).
+    supports_bulk_round()       -> bool   capability hook: does
+                                  ``round_dists`` dispatch through the
+                                  batched-round kernel (rather than the
+                                  vmapped gather default)? Static — the
+                                  CI guard (benchmarks/check_expand_guard)
+                                  asserts it is claimed exactly by the
+                                  backends whose hook reaches the kernel.
     expand(qctx, nodes, adjacency) -> (rows, dists)  the FUSED CA hot path
                                   (DESIGN.md §10): one whole beam-expansion
                                   step in a single kernel — scalar-prefetch
@@ -159,6 +176,17 @@ class _Base:
 
     def supports_expand(self, r: int) -> bool:  # noqa: ARG002
         """Fused-expansion capability (DESIGN.md §10): default unsupported."""
+        return False
+
+    def round_dists(self, qctxs, ids):
+        """Bulk-round scoring (DESIGN.md §12): qctxs pytree with leading
+        (B,), ids (B, C) -> (B, C) f32. Default: one vmapped gather-and-
+        score — semantically the ground truth the kernel path must match."""
+        return jax.vmap(self.query_dists)(qctxs, ids)
+
+    def supports_bulk_round(self) -> bool:
+        """Batched-round kernel capability: default False (``round_dists``
+        falls back to the vmapped gather, which is always available)."""
         return False
 
     def expand(self, qctx, nodes, adjacency):
@@ -405,6 +433,16 @@ class FlashBackend(_Base):
         return core.sdc_lookup(
             self.coder, self.codes[ids_a], self.codes[ids_b]
         ).astype(jnp.float32)
+
+    def round_dists(self, qctxs, ids):
+        """One blocked kernel launch per bulk round (DESIGN.md §12): gather
+        the candidates' code rows, contract against the per-vertex ADTs.
+        Integer tables → bit-exact with the vmapped ``query_dists`` default
+        (one-hot select-sum == table gather-sum on the same int32 levels)."""
+        return ops.flash_round(self.codes[ids], qctxs.adt_q).astype(jnp.float32)
+
+    def supports_bulk_round(self) -> bool:
+        return True
 
     def recon_vectors(self, ids):
         cb = self.coder.codebooks  # (M, K, ds)

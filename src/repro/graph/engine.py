@@ -37,6 +37,7 @@ stays in sync through ``with_updated_edges``).
 
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 from typing import NamedTuple
 
@@ -63,6 +64,20 @@ class BuildParams:
     width:    W — beam expansions per iteration (1 = classic HNSW beam;
               >1 = multi-expansion, denser distance blocks per iteration).
     select_mode: NS policy ("heuristic" = MRNG rule, "closest" = top-R).
+    bulk_rounds: refinement-round cap for ``strategy="bulk"`` builds
+              (DESIGN.md §12); rounds stop early on convergence.
+    bulk_pool: candidate-pool width P kept per vertex between bulk rounds
+              (0 = auto: 2·R of the layer being built — wide enough that
+              the MRNG selection sees the same candidate diversity an
+              ef-beam gives the incremental path).
+    bulk_eps: convergence threshold — stop when the fraction of vertices
+              whose pool changed in a round drops below this.
+    bulk_alpha: selection slack used by bulk commits only (effective
+              alpha = max(alpha, bulk_alpha)). Bulk pools are NN-balls
+              plus random long-range candidates, not beam paths; without
+              extra slack MRNG occlusion strips the long edges and the
+              graph degenerates into per-cluster islands. 1.2 matches
+              Vamana's recommended robust-prune slack.
     """
 
     r_upper: int = 16
@@ -75,6 +90,14 @@ class BuildParams:
     max_iters: int | None = None
     width: int = 1
     select_mode: str = "heuristic"
+    bulk_rounds: int = 3
+    bulk_pool: int = 0
+    bulk_eps: float = 0.02
+    bulk_alpha: float = 1.2
+
+    def bulk_select_alpha(self) -> float:
+        """Effective RNG slack for bulk selection/reverse pruning."""
+        return max(self.alpha, self.bulk_alpha)
 
 
 class CostAccount(NamedTuple):
@@ -439,3 +462,534 @@ class BuildEngine:
             (adj0, adj0_d, adj_up, adj_up_d, backend, CostAccount.zero()),
         )
         return adj0, adj0_d, adj_up, adj_up_d, backend, acct
+
+
+# ---------------------------------------------------------------------------
+# Insert scheduling (shared by dynamic maintenance and bulk repair)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("engine",))
+def run_insert_schedule(
+    engine: BuildEngine, data, adj0, adj0_d, adj_up, adj_up_d, backend,
+    levels, ids, entries, mask,
+):
+    """Run ``engine.insert_batch`` over a (nb, P) id schedule against an
+    existing graph — the device program behind every post-build insertion:
+    dynamic growth and compaction (``repro.index.grow_index`` delegates
+    here, DESIGN.md §8) and the bulk build's reachability repair (§12).
+
+    ids/mask (nb, P): padded id batches; entries (nb,): per-batch entry
+    point. Returns the updated graph arrays, backend, and a CostAccount of
+    the insertions' distance evaluations.
+    """
+
+    def body(b, carry):
+        adj0, adj0_d, adj_up, adj_up_d, backend, acct = carry
+        return engine.insert_batch(
+            data, adj0, adj0_d, adj_up, adj_up_d, backend, levels,
+            ids[b], entries[b], mask[b], acct=acct,
+        )
+
+    return jax.lax.fori_loop(
+        0, ids.shape[0], body,
+        (adj0, adj0_d, adj_up, adj_up_d, backend, CostAccount.zero()),
+    )
+
+
+def batch_schedule(ids: np.ndarray, batch: int):
+    """Host-side: pad a flat id list to full (nb, P) batches + validity mask."""
+    n = len(ids)
+    nb = -(-n // batch)
+    pad = nb * batch - n
+    ids_p = np.concatenate([ids, np.full(pad, ids[-1] if n else 0, np.int32)])
+    mask = np.concatenate([np.ones(n, bool), np.zeros(pad, bool)])
+    return ids_p.reshape(nb, batch).astype(np.int32), mask.reshape(nb, batch)
+
+
+# ---------------------------------------------------------------------------
+# Bulk construction (strategy="bulk"): RNN-Descent refinement rounds
+# (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+#
+# The incremental path above is serial in the graph prefix: batch b's beam
+# searches need batch b−1's edges. The bulk path removes that dependency by
+# bootstrapping the k-NN pool with whole-dataset refinement rounds à la
+# Relative NN-Descent: every vertex keeps a pool of its P best candidates,
+# and each round scores pool ∪ neighbor-of-neighbor expansion for ALL
+# vertices in one dense batched pass (``backend.round_dists`` — for Flash
+# one blocked Pallas launch per chunk, kernels.ops.flash_round). The refined
+# pools then feed the SAME neighbor selection, forward commit, and reverse
+# pass as the incremental path (``BuildEngine.select``, ``commit_forward``,
+# ``reverse_pass``), so graph semantics are unchanged — only candidate
+# acquisition is replaced.
+
+#: vertices scored per round_dists launch — bounds the (chunk, C) gather and
+#: the (chunk, M, K) query-context block resident at once.
+_BULK_CHUNK = 256
+
+#: pool prefix expanded per round (NN-Descent's sampled join): candidates
+#: per round are P + E² — E=8 keeps the block dense but bounded, trading a
+#: round or two of convergence for a ~3× smaller scoring block per round.
+_BULK_EXPAND = 8
+
+#: random extra candidates appended to each final pool before selection —
+#: MRNG keeps the un-occluded ones, which is where the graph gets its
+#: long-range (cross-cluster) edges; pure refined pools converge to local
+#: k-NN islands that no beam can enter. 32 per vertex (with the extra
+#: occlusion slack of ``bulk_alpha``) is enough for the clustered
+#: benchmark distributions; the cost is one extra scoring pass, no merge.
+_BULK_RANDOM = 32
+
+
+def _bulk_score(backend, qctxs, members, cand, chunk: int):
+    """Chunked ``round_dists`` scoring of a (m, C) candidate block.
+
+    Scores against precomputed per-member query contexts and masks
+    self/invalid entries to +inf. ``m`` must be a multiple of ``chunk``
+    (the caller pads once). Returns (dists (m, C), bad (m, C) mask).
+    """
+    m, c = cand.shape
+    n_chunks = m // chunk
+
+    def score(args):
+        qctx, cd = args  # pytree (chunk, …), (chunk, C)
+        return backend.round_dists(qctx, jnp.maximum(cd, 0))
+
+    qc = jax.tree.map(lambda a: a.reshape(n_chunks, chunk, *a.shape[1:]), qctxs)
+    d = jax.lax.map(
+        score, (qc, cand.reshape(n_chunks, chunk, c))
+    ).reshape(m, c)
+
+    bad = (cand < 0) | (cand == members[:, None])
+    return jnp.where(bad, INF, d), bad
+
+
+def _bulk_score_topk(backend, qctxs, members, cand, pool_p: int, chunk: int):
+    """Score a (m, C) candidate block and keep the best P per row — NO
+    dedup. A repeated id occupies repeated pool slots for a round, which
+    wastes a little pool width but skips the per-row id-sort (the single
+    most expensive op in a refinement round); the loop exit runs one
+    exact dedup merge (:func:`_bulk_score_merge`) so downstream consumers
+    never see duplicates. Returns (ids, dists, n_scored) like the merge.
+    """
+    m, c = cand.shape
+    d, bad = _bulk_score(backend, qctxs, members, cand, chunk)
+    neg, idx = jax.lax.top_k(-d, pool_p)
+    new_d = -neg
+    new_ids = jnp.take_along_axis(cand, idx, axis=1)
+    fin = jnp.isfinite(new_d)
+    return (
+        jnp.where(fin, new_ids, -1),
+        jnp.where(fin, new_d, INF),
+        jnp.sum(~bad),
+    )
+
+
+def _bulk_score_merge(backend, qctxs, members, cand, pool_p: int, chunk: int):
+    """Score a (m, C) candidate block and merge to the best P per row.
+
+    Traced helper shared by pool init and the loop-exit cleanup: chunked
+    scoring (:func:`_bulk_score`), per-row dedup (sort by id, strike
+    adjacent repeats), then a top-P merge. Returns (ids (m, P) ascending
+    by distance −1-padded, dists (m, P) +inf-padded, n_scored).
+    """
+    m, c = cand.shape
+    d, bad = _bulk_score(backend, qctxs, members, cand, chunk)
+    n_scored = jnp.sum(~bad)
+    # Dedup: stable-sort each row by id (invalids to a sentinel past any
+    # real id), strike adjacent repeats; merging then works directly on the
+    # id-sorted row — top_k tie-breaks by position, so results are
+    # deterministic.
+    idkey = jnp.where(bad, jnp.int32(2**30), cand)
+    order = jnp.argsort(idkey, axis=1, stable=True)
+    ids_s = jnp.take_along_axis(cand, order, axis=1)
+    d_s = jnp.take_along_axis(d, order, axis=1)
+    dup = jnp.concatenate(
+        [jnp.zeros((m, 1), bool), ids_s[:, 1:] == ids_s[:, :-1]], axis=1
+    )
+    d_s = jnp.where(dup, INF, d_s)
+    neg, idx = jax.lax.top_k(-d_s, pool_p)
+    new_d = -neg
+    new_ids = jnp.take_along_axis(ids_s, idx, axis=1)
+    fin = jnp.isfinite(new_d)
+    return (
+        jnp.where(fin, new_ids, -1),
+        jnp.where(fin, new_d, INF),
+        n_scored,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("r_exp", "chunk", "max_rounds", "pool_p")
+)
+def _bulk_refine_jit(
+    data, backend, members, valid, cand0, rnd_aug, inv, eps_count,
+    *, pool_p: int, r_exp: int, chunk: int, max_rounds: int,
+):
+    """The whole refinement schedule as ONE compiled program.
+
+    Seeds pools from ``cand0``, then a ``while_loop`` of refinement rounds
+    (candidates = pool ∪ neighbor-of-neighbor prefix block, one batched
+    scoring pass each) until fewer than ``eps_count`` valid rows change or
+    ``max_rounds`` is hit — no host round-trips between rounds. A final
+    pass scores ``rnd_aug`` random candidates (see ``_BULK_RANDOM``) and
+    appends them to the pool tail for selection to occlusion-filter.
+
+    ``members``/``cand0``/``rnd_aug`` come in padded to a multiple of
+    ``chunk`` with ``valid`` marking real rows; ``inv`` maps global id →
+    member row. Returns (pool_ids (m_pad, P+S), pool_d, n_rounds,
+    n_scored).
+    """
+    qctxs = jax.vmap(backend.prepare_query)(data[members])
+    pool_ids, pool_d, nsc0 = _bulk_score_merge(
+        backend, qctxs, members, cand0, pool_p, chunk
+    )
+
+    def cond(carry):
+        _, _, rounds, changed, _ = carry
+        return (rounds < max_rounds) & (changed > eps_count)
+
+    def body(carry):
+        pool_ids, pool_d, rounds, _, n_scored = carry
+        m = pool_ids.shape[0]
+        top = pool_ids[:, :r_exp]  # (m, E) global ids
+        ok = top >= 0
+        rows = pool_ids[inv[jnp.maximum(top, 0)]][:, :, :r_exp]  # (m, E, E)
+        non = jnp.where(ok[:, :, None], rows, -1).reshape(m, r_exp * r_exp)
+        cand = jnp.concatenate([pool_ids, non], axis=1)  # (m, P + E²)
+        new_ids, new_d, nsc = _bulk_score_topk(
+            backend, qctxs, members, cand, pool_p, chunk
+        )
+        changed = jnp.sum(jnp.any(new_ids != pool_ids, axis=1) & valid)
+        return new_ids, new_d, rounds + 1, changed, n_scored + nsc
+
+    pool_ids, pool_d, rounds, _, n_scored = jax.lax.while_loop(
+        cond, body,
+        (pool_ids, pool_d, jnp.int32(0), jnp.int32(2**30), nsc0),
+    )
+    # Rounds merge duplicate-tolerant (_bulk_score_topk); one exact merge
+    # of the pool against itself strikes the accumulated repeats before
+    # anything downstream consumes it.
+    pool_ids, pool_d, nsc_c = _bulk_score_merge(
+        backend, qctxs, members, pool_ids, pool_p, chunk
+    )
+    n_scored = n_scored + nsc_c
+    # Random augmentation: append S scored random members to each pool so
+    # MRNG selection sees long-range candidates. No merge pass is needed —
+    # ``prune_list`` sorts its candidates and the occlusion rule strikes
+    # any duplicate of a pool entry (pair distance 0), so the tail only
+    # has to be scored. The refined NN prefix stays intact (NSG's knn
+    # slice is safe).
+    aug_d, aug_bad = _bulk_score(backend, qctxs, members, rnd_aug, chunk)
+    pool_ids = jnp.concatenate(
+        [pool_ids, jnp.where(aug_bad, -1, rnd_aug)], axis=1
+    )
+    pool_d = jnp.concatenate([pool_d, aug_d], axis=1)
+    return pool_ids, pool_d, rounds, n_scored + jnp.sum(~aug_bad)
+
+
+def bulk_pool_width(params: BuildParams, r: int, m: int) -> int:
+    """Resolved candidate-pool width P for a layer of degree ``r`` over
+    ``m`` members (``bulk_pool`` knob, 0 = auto 2·R, clamped to m−1)."""
+    p = params.bulk_pool if params.bulk_pool > 0 else 2 * r
+    return max(1, min(p, m - 1))
+
+
+def bulk_refine(
+    data, backend, member_ids: np.ndarray, *, r: int, params: BuildParams,
+    seed: int, layer: int = 0,
+):
+    """Refine a k-NN candidate pool over ``member_ids`` by batched rounds.
+
+    Host wrapper around the single compiled refinement program
+    (:func:`_bulk_refine_jit`): pads the member set to the scoring chunk,
+    seeds each pool with random members, draws the random-augmentation
+    block, and unpads the result. Convergence (``bulk_eps``/``bulk_rounds``)
+    runs entirely on-device.
+
+    Returns (pool_ids (m, P+S), pool_d, n_dists, n_hops, n_rounds): the
+    first P columns are the refined pool ascending by distance, the S-wide
+    tail the scored random augmentation (unsorted); n_hops counts
+    adjacency-pool row fetches (m·E per round), the bulk analogue of beam
+    hops.
+    """
+    m = int(len(member_ids))
+    if m < 2:
+        raise ValueError(f"bulk_refine needs ≥ 2 members, got {m}")
+    n = data.shape[0]
+    pool_p = bulk_pool_width(params, r, m)
+    r_exp = min(r, pool_p, _BULK_EXPAND)
+    s_aug = min(_BULK_RANDOM, m - 1)
+    chunk = min(_BULK_CHUNK, m)
+    m_pad = -(-m // chunk) * chunk
+    mem_np = np.asarray(member_ids, np.int32)
+    rng = np.random.default_rng([seed, 0xB07B, layer])
+    rnd = rng.integers(0, m - 1, size=(m, pool_p))
+    rnd += rnd >= np.arange(m)[:, None]  # shift past self: uniform on m−1
+    cand0 = mem_np[rnd]
+    aug = mem_np[rng.integers(0, m, size=(m, s_aug))]
+
+    pad = m_pad - m
+    mem_p = np.concatenate([mem_np, np.full(pad, mem_np[0], np.int32)])
+    cand0 = np.concatenate([cand0, np.full((pad, pool_p), -1, np.int32)])
+    aug = np.concatenate([aug, np.full((pad, s_aug), -1, np.int32)])
+    valid = np.concatenate([np.ones(m, bool), np.zeros(pad, bool)])
+    inv = (
+        jnp.zeros((n,), jnp.int32)
+        .at[jnp.asarray(mem_np)].set(jnp.arange(m, dtype=jnp.int32))
+    )
+
+    pool_ids, pool_d, rounds, n_scored = _bulk_refine_jit(
+        data, backend, jnp.asarray(mem_p), jnp.asarray(valid),
+        jnp.asarray(cand0), jnp.asarray(aug), inv,
+        jnp.int32(int(params.bulk_eps * m)),
+        pool_p=pool_p, r_exp=r_exp, chunk=chunk,
+        max_rounds=params.bulk_rounds,
+    )
+    rounds = int(rounds)
+    return (
+        pool_ids[:m], pool_d[:m],
+        float(n_scored), float(m * r_exp * rounds), rounds,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("params",))
+def bulk_reverse(adj, adj_d, backend, members, sel_ids, sel_d,
+                 *, params: BuildParams):
+    """Reverse pass for a whole-membership commit — batched, not serial.
+
+    The incremental ``reverse_pass`` walks inserts one by one because
+    concurrent inserts may touch the same destination row. A bulk commit
+    has ALL forward lists at once, so the reverse direction becomes a
+    grouping problem: flatten every forward edge x→y into a proposal
+    y←x, bucket proposals by destination (sort by (y, d), rank within
+    group, keep the best K=2R per destination), and prune each touched
+    row's existing ∪ proposed candidates with the SAME MRNG heuristic the
+    serial pass applies (``prune_list``) — one vmapped prune over n rows
+    instead of an m-step ``fori_loop``.
+    """
+    m, r = sel_ids.shape
+    n = adj.shape[0]
+    k_cap = 2 * r
+    src = jnp.repeat(members, r)  # (m·r,)
+    dst = sel_ids.reshape(-1)
+    dd = sel_d.reshape(-1)
+    dstk = jnp.where(dst >= 0, dst, n)  # invalid edges bucket to sentinel n
+    # group by destination, ascending distance within each group: stable
+    # sort by d, then stable sort by destination
+    o1 = jnp.argsort(dd, stable=True)
+    o2 = jnp.argsort(dstk[o1], stable=True)
+    o = o1[o2]
+    dst_s, src_s, dd_s = dstk[o], src[o], dd[o]
+    idx = jnp.arange(m * r)
+    first = jnp.concatenate(
+        [jnp.ones((1,), bool), dst_s[1:] != dst_s[:-1]]
+    )
+    start = jax.lax.cummax(jnp.where(first, idx, 0))
+    rank = idx - start
+    ok = (dst_s < n) & (rank < k_cap)
+    row = jnp.where(ok, dst_s, n)  # OOB rows dropped by the scatter
+    col = jnp.where(ok, rank, 0)
+    prop_ids = jnp.full((n, k_cap), -1, jnp.int32).at[row, col].set(
+        src_s, mode="drop"
+    )
+    prop_d = jnp.full((n, k_cap), INF).at[row, col].set(dd_s, mode="drop")
+    touched = prop_ids[:, 0] >= 0
+
+    cand_ids = jnp.concatenate([adj, prop_ids], axis=1)  # (n, r + K)
+    cand_d = jnp.concatenate([adj_d, prop_d], axis=1)
+    # dedup (x may already sit in y's row): sort by id, strike repeats
+    badc = cand_ids < 0
+    idkey = jnp.where(badc, jnp.int32(2**30), cand_ids)
+    order = jnp.argsort(idkey, axis=1, stable=True)
+    ids_s = jnp.take_along_axis(cand_ids, order, axis=1)
+    d_s = jnp.take_along_axis(
+        jnp.where(badc, INF, cand_d), order, axis=1
+    )
+    dup = jnp.concatenate(
+        [jnp.zeros((n, 1), bool), ids_s[:, 1:] == ids_s[:, :-1]], axis=1
+    )
+    ids_s = jnp.where(dup, -1, ids_s)
+    d_s = jnp.where(dup, INF, d_s)
+
+    pruned = jax.vmap(
+        lambda ci, cd: prune_list(
+            backend, ci, cd, r=r,
+            alpha=params.bulk_select_alpha(), mode=params.prune_mode,
+        )
+    )(ids_s, d_s)
+    new_adj = jnp.where(touched[:, None], pruned.ids, adj)
+    new_adj_d = jnp.where(touched[:, None], pruned.dists, adj_d)
+    backend = backend.with_updated_edges(
+        jnp.arange(n, dtype=jnp.int32), new_adj
+    )
+    return new_adj, new_adj_d, backend
+
+
+@functools.partial(jax.jit, static_argnames=("engine", "r"))
+def bulk_commit(engine: BuildEngine, adj, adj_d, backend, members,
+                pool_ids, pool_d, *, r: int):
+    """Commit refined pools through the engine's NS machinery: MRNG
+    selection over each pool, forward commit, then the batched reverse
+    pass (:func:`bulk_reverse`) — the same occlusion rule as an
+    incremental insert, with the serial destination walk replaced by
+    grouped reverse proposals (DESIGN.md §12). Selection runs with the
+    widened ``bulk_select_alpha()`` slack so the random long-range
+    candidates in the pool tail survive occlusion."""
+    p = engine.params
+    # The random tail is appended unsorted — selection's greedy occlusion
+    # walk needs candidates ascending by distance.
+    pool_d = jnp.where(pool_ids >= 0, pool_d, INF)
+    order = jnp.argsort(pool_d, axis=1)
+    pool_ids = jnp.take_along_axis(pool_ids, order, axis=1)
+    pool_d = jnp.take_along_axis(pool_d, order, axis=1)
+    if p.select_mode == "heuristic":
+        sel = jax.vmap(
+            lambda ci, cd: select_neighbors(
+                backend, ci, cd, r=r, alpha=p.bulk_select_alpha()
+            )
+        )(pool_ids, pool_d)
+    else:
+        sel = engine.select(backend, pool_ids, pool_d, r=r)
+    mask = jnp.ones(members.shape, bool)
+    adj, adj_d, backend = commit_forward(
+        adj, adj_d, backend, members, sel.ids, sel.dists, mask
+    )
+    adj, adj_d, backend = bulk_reverse(
+        adj, adj_d, backend, members, sel.ids, sel.dists,
+        params=engine.params,
+    )
+    return adj, adj_d, backend
+
+
+def bfs_reachable(adj: np.ndarray, entry: int) -> np.ndarray:
+    """Host-side BFS over an adjacency table: (n,) bool reachability from
+    ``entry`` (the bulk build's connectivity check; vectorized frontier)."""
+    n = adj.shape[0]
+    seen = np.zeros(n, bool)
+    if n == 0:
+        return seen
+    seen[entry] = True
+    frontier = np.asarray([entry])
+    while frontier.size:
+        nxt = adj[frontier].reshape(-1)
+        nxt = np.unique(nxt[nxt >= 0])
+        nxt = nxt[~seen[nxt]]
+        seen[nxt] = True
+        frontier = nxt
+    return seen
+
+
+def repair_reachability(
+    data, adj0, adj0_d, adj_up, adj_up_d, backend, levels, entry: int,
+    *, params: BuildParams, max_passes: int = 2,
+):
+    """Make every vertex reachable from ``entry`` on the base layer.
+
+    Randomly-seeded refinement can leave islands (a cluster whose pools
+    never sample outside itself); incremental insertion cannot, because
+    every vertex is acquired via a beam from the entry. The repair is that
+    same machinery: BFS the base layer, re-insert unreachable vertices
+    through ``run_insert_schedule`` (safe for re-insertion via the engine's
+    self-exclusion and already-present reverse-edge guards), repeat up to
+    ``max_passes``. Any pathological leftovers (every reverse edge pruned)
+    are force-linked to their nearest reachable vertex.
+
+    Returns (adj0, adj0_d, adj_up, adj_up_d, backend, n_dists, n_hops).
+    """
+    engine = BuildEngine(params)
+    n = int(adj0.shape[0])
+    n_d = n_h = 0.0
+    for _ in range(max_passes):
+        seen = bfs_reachable(np.asarray(adj0), int(entry))
+        unreach = np.nonzero(~seen)[0].astype(np.int32)
+        if unreach.size == 0:
+            return adj0, adj0_d, adj_up, adj_up_d, backend, n_d, n_h
+        if unreach.size > n // 4:
+            break  # mostly islands: beams from the tiny reachable core
+            # cannot acquire island-local neighbors — go structural
+        ids, mask = batch_schedule(unreach, params.batch)
+        # pad the schedule length to a power of two so repair passes of
+        # similar size share one run_insert_schedule compile
+        nb = ids.shape[0]
+        nb_p = 1 << (nb - 1).bit_length()
+        ids = np.concatenate([ids, np.zeros((nb_p - nb, params.batch), np.int32)])
+        mask = np.concatenate([mask, np.zeros((nb_p - nb, params.batch), bool)])
+        ent = np.full((nb_p,), int(entry), np.int32)
+        adj0, adj0_d, adj_up, adj_up_d, backend, acct = run_insert_schedule(
+            engine, data, adj0, adj0_d, adj_up, adj_up_d, backend,
+            jnp.asarray(levels), jnp.asarray(ids), jnp.asarray(ent),
+            jnp.asarray(mask),
+        )
+        n_d += float(acct.n_dists)
+        n_h += float(acct.n_hops)
+    adj_np = np.asarray(adj0).copy()
+    adj_d_np = np.asarray(adj0_d).copy()
+    seen = bfs_reachable(adj_np, int(entry))
+    if not seen.all():
+        unreach = np.nonzero(~seen)[0].astype(np.int32)
+        all_ids = jnp.arange(n, dtype=jnp.int32)
+        # ONE batched distance call (unreachable × everyone) — per-u calls
+        # would recompile per shape as the reachable set grows.
+        d_all = np.asarray(backend.pair_dists(
+            jnp.asarray(unreach[:, None]), all_ids[None, :],
+        ))
+        n_d += float(d_all.size)
+        row_of = {int(u): i for i, u in enumerate(unreach)}
+
+        def dists_from(v: int) -> np.ndarray:
+            i = row_of.get(v)
+            if i is not None:
+                return d_all[i]
+            return np.asarray(backend.pair_dists(
+                jnp.full((1, 1), v, jnp.int32), all_ids[None, :],
+            ))[0]
+
+        grafted = np.zeros(adj_np.shape, bool)  # graft slots are permanent
+
+        def link(u: int, y: int, d: float) -> bool:
+            row = adj_np[y]
+            free = np.nonzero(row < 0)[0]
+            if free.size:
+                slot = int(free[0])
+            else:
+                evictable = np.nonzero(~grafted[y])[0]
+                if evictable.size == 0:
+                    return False  # row is all grafts — caller picks another y
+                # evict the smallest-distance edge: its target sits in the
+                # dense local neighborhood with many alternative in-edges
+                slot = int(evictable[np.argmin(adj_d_np[y, evictable])])
+            adj_np[y, slot] = u
+            adj_d_np[y, slot] = d
+            grafted[y, slot] = True
+            return True
+
+        # Per island (forward-closure component): graft the best border
+        # pair (u*, y*) — min distance from any island member to any
+        # reachable vertex — then flood the island's closure as seen.
+        # Grafts never evict each other (no ping-pong), so every pass
+        # makes permanent progress; the outer BFS re-run heals nodes cut
+        # loose when a graft evicted their only in-edge.
+        for _ in range(64):
+            todo = np.nonzero(~seen)[0]
+            if todo.size == 0:
+                break
+            for u in todo:
+                while not seen[u]:
+                    comp = bfs_reachable(adj_np, int(u)) & ~seen
+                    members = np.nonzero(comp)[0]
+                    d_sub = np.stack([dists_from(int(v)) for v in members])
+                    d_sub = np.where(seen[None, :], d_sub, np.inf)
+                    while True:
+                        flat = int(np.argmin(d_sub))
+                        ui, y = divmod(flat, n)
+                        if link(int(members[ui]), y, float(d_sub[ui, y])):
+                            break
+                        d_sub[:, y] = np.inf  # row saturated with grafts
+                    seen |= bfs_reachable(adj_np, int(members[ui]))
+            seen = bfs_reachable(adj_np, int(entry))
+        adj0 = jnp.asarray(adj_np)
+        adj0_d = jnp.asarray(adj_d_np)
+        backend = backend.with_updated_edges(all_ids, adj0)
+    return adj0, adj0_d, adj_up, adj_up_d, backend, n_d, n_h

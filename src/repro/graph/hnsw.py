@@ -32,11 +32,15 @@ import numpy as np
 from repro.graph.beam import beam_search, greedy_descent
 from repro.graph.rerank import SearchSpec, rerank_topk, resolve_search_args
 from repro.graph.engine import (  # noqa: F401 — re-exported public API
+    INF,
     BuildEngine,
     BuildParams,
     BuildStats,
     CostAccount,
+    bulk_commit,
+    bulk_refine,
     prefix_entries,
+    repair_reachability,
     sample_levels,
 )
 
@@ -79,6 +83,79 @@ def build_hnsw_jit(data, backend, levels, entries, *, params: HNSWParams):
     )
 
 
+def _build_hnsw_bulk(
+    data, backend, levels: np.ndarray, *, params: HNSWParams, seed: int
+) -> tuple[HNSWIndex, BuildStats]:
+    """Bulk-construction fast path (``strategy="bulk"``, DESIGN.md §12).
+
+    Each layer's k-NN pools are bootstrapped by whole-dataset RNN-Descent
+    refinement rounds (``engine.bulk_refine`` — dense batched scans, no
+    serial beam dependency on the graph prefix), then committed through the
+    SAME MRNG selection / forward / reverse machinery as the incremental
+    path (``engine.bulk_commit``), so edge semantics are unchanged. Upper
+    layers refine only their member subsets (levels ≥ l). A final BFS +
+    re-insert pass guarantees base-layer reachability from the entry
+    (incremental insertion gets this for free; random pools do not).
+    """
+    data = jnp.asarray(data, jnp.float32)
+    n = data.shape[0]
+    levels_np = np.asarray(levels)
+    engine = BuildEngine(params)
+    l_up = params.max_layers - 1
+    adj0 = jnp.full((n, params.r_base), -1, jnp.int32)
+    adj0_d = jnp.full((n, params.r_base), INF)
+    adj_up = jnp.full((l_up, n, params.r_upper), -1, jnp.int32)
+    adj_up_d = jnp.full((l_up, n, params.r_upper), INF)
+    n_d = n_h = 0.0
+
+    if n >= 2:
+        members = np.arange(n, dtype=np.int32)
+        pool_ids, pool_d, nd, nh, _ = bulk_refine(
+            data, backend, members, r=params.r_base, params=params,
+            seed=seed, layer=0,
+        )
+        adj0, adj0_d, backend = bulk_commit(
+            engine, adj0, adj0_d, backend, jnp.asarray(members),
+            pool_ids, pool_d, r=params.r_base,
+        )
+        n_d += nd
+        n_h += nh
+
+    for l in range(1, params.max_layers):
+        members = np.nonzero(levels_np >= l)[0].astype(np.int32)
+        if members.size < 2:
+            continue  # nothing to link at this layer
+        pool_ids, pool_d, nd, nh, _ = bulk_refine(
+            data, backend, members, r=params.r_upper, params=params,
+            seed=seed, layer=l,
+        )
+        a, ad, backend = bulk_commit(
+            engine, adj_up[l - 1], adj_up_d[l - 1], backend,
+            jnp.asarray(members), pool_ids, pool_d, r=params.r_upper,
+        )
+        adj_up = adj_up.at[l - 1].set(a)
+        adj_up_d = adj_up_d.at[l - 1].set(ad)
+        n_d += nd
+        n_h += nh
+
+    entry = int(np.argmax(levels_np)) if n else 0
+    lv = jnp.asarray(levels_np)
+    adj0, adj0_d, adj_up, adj_up_d, backend, rd, rh = repair_reachability(
+        data, adj0, adj0_d, adj_up, adj_up_d, backend, lv, entry,
+        params=params,
+    )
+    n_d += rd
+    n_h += rh
+
+    index = HNSWIndex(
+        adj0=adj0, adj0_d=adj0_d, adj_up=adj_up, adj_up_d=adj_up_d,
+        levels=lv, entry=jnp.int32(entry), backend=backend,
+    )
+    return index, BuildStats(
+        n_dists=jnp.float32(n_d), n_hops=jnp.float32(n_h)
+    )
+
+
 def build_hnsw(
     data,
     backend,
@@ -86,6 +163,7 @@ def build_hnsw(
     params: HNSWParams = HNSWParams(),
     seed: int = 0,
     levels: np.ndarray | None = None,
+    strategy: str = "incremental",
 ) -> tuple[HNSWIndex, BuildStats]:
     """Public entry: build an HNSW index over ``data`` with ``backend``.
 
@@ -93,6 +171,12 @@ def build_hnsw(
     vector's own context — for Flash that is its ADT, built once per insert,
     paper Remark 2); all candidate/neighbor comparisons go through the
     backend's compact representation.
+
+    ``strategy`` picks candidate acquisition: ``"incremental"`` is the
+    paper's batch-synchronous insertion loop; ``"bulk"`` bootstraps each
+    layer with RNN-Descent refinement rounds (DESIGN.md §12 — much higher
+    build throughput, same selection/commit semantics). The facade
+    (``repro.index.AnnIndex.build``) defaults from-scratch builds to bulk.
     """
     data = jnp.asarray(data, jnp.float32)
     n = data.shape[0]
@@ -100,6 +184,10 @@ def build_hnsw(
         levels = sample_levels(
             seed, n, r_upper=params.r_upper, max_layers=params.max_layers
         )
+    if strategy == "bulk":
+        return _build_hnsw_bulk(data, backend, levels, params=params, seed=seed)
+    if strategy != "incremental":
+        raise ValueError(f"unknown build strategy {strategy!r}")
     entries = prefix_entries(levels, params.batch)
     return build_hnsw_jit(
         data, backend, jnp.asarray(levels), jnp.asarray(entries), params=params

@@ -40,7 +40,6 @@ enforced in tests).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable
 
 import jax
@@ -52,8 +51,9 @@ from repro.graph.engine import (
     BuildEngine,
     BuildParams,
     BuildStats,
-    CostAccount,
+    batch_schedule,
     prefix_entries,
+    run_insert_schedule,
     sample_levels,
 )
 from repro.graph.hnsw import HNSWIndex, SearchResult, build_hnsw, search_hnsw
@@ -81,11 +81,13 @@ __all__ = [
 class AlgoSpec:
     """One pluggable graph algorithm.
 
-    builder(data, backend, params, seed, **algo_kwargs) -> (graph, stats)
-    where ``graph`` is the algorithm's index pytree (HNSWIndex for layered,
-    FlatIndex otherwise) and ``stats`` is anything with n_dists/n_hops (or
-    None). ``layered`` selects the search routine and whether levels are
-    sampled for added vectors.
+    builder(data, backend, params, seed, *, strategy, **algo_kwargs)
+    -> (graph, stats) where ``graph`` is the algorithm's index pytree
+    (HNSWIndex for layered, FlatIndex otherwise) and ``stats`` is anything
+    with n_dists/n_hops (or None). ``strategy`` is the facade's
+    construction mode (``"bulk"`` | ``"incremental"``, DESIGN.md §12) —
+    every registered builder must accept it. ``layered`` selects the search
+    routine and whether levels are sampled for added vectors.
     """
 
     name: str
@@ -108,18 +110,33 @@ def algos() -> tuple[str, ...]:
     return tuple(_REGISTRY)
 
 
-def _build_hnsw_adapter(data, backend, params, seed, *, levels=None):
-    return build_hnsw(data, backend, params=params, seed=seed, levels=levels)
+def _build_hnsw_adapter(
+    data, backend, params, seed, *, strategy="incremental", levels=None
+):
+    return build_hnsw(
+        data, backend, params=params, seed=seed, levels=levels,
+        strategy=strategy,
+    )
 
 
-def _build_vamana_adapter(data, backend, params, seed, *, two_pass=True):
-    del seed  # vamana's schedule is deterministic (medoid entry)
-    return build_vamana(data, backend, params=params, two_pass=two_pass)
+def _build_vamana_adapter(
+    data, backend, params, seed, *, strategy="incremental", two_pass=True
+):
+    # seed only steers the bulk pools; the incremental schedule is
+    # deterministic (medoid entry).
+    return build_vamana(
+        data, backend, params=params, two_pass=two_pass,
+        strategy=strategy, seed=seed,
+    )
 
 
-def _build_nsg_adapter(data, backend, params, seed, *, knn_k=16):
-    del seed
-    index, _knn_adj = build_nsg(data, backend, params=params, knn_k=knn_k)
+def _build_nsg_adapter(
+    data, backend, params, seed, *, strategy="incremental", knn_k=16
+):
+    index, _knn_adj = build_nsg(
+        data, backend, params=params, knn_k=knn_k,
+        strategy=strategy, seed=seed,
+    )
     return index, None
 
 
@@ -153,7 +170,6 @@ _KIND_OF_TYPE: dict[type, str] = {
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("engine",))
 def grow_index(
     engine: BuildEngine, data, adj0, adj0_d, adj_up, adj_up_d, backend,
     levels, ids, entries, mask,
@@ -162,32 +178,20 @@ def grow_index(
     existing graph — the whole of dynamic maintenance, expressed as more
     batches of the original build program (DESIGN.md §8).
 
+    A thin public alias for :func:`repro.graph.engine.run_insert_schedule`
+    (one jitted program, also the bulk build's reachability-repair engine):
     ids/mask (nb, P): padded id batches; entries (nb,): per-batch entry
     point. Returns the updated graph arrays, backend, and a CostAccount of
     the growth's distance evaluations.
     """
-
-    def body(b, carry):
-        adj0, adj0_d, adj_up, adj_up_d, backend, acct = carry
-        return engine.insert_batch(
-            data, adj0, adj0_d, adj_up, adj_up_d, backend, levels,
-            ids[b], entries[b], mask[b], acct=acct,
-        )
-
-    return jax.lax.fori_loop(
-        0, ids.shape[0], body,
-        (adj0, adj0_d, adj_up, adj_up_d, backend, CostAccount.zero()),
+    return run_insert_schedule(
+        engine, data, adj0, adj0_d, adj_up, adj_up_d, backend,
+        levels, ids, entries, mask,
     )
 
 
-def _batch_schedule(ids: np.ndarray, batch: int):
-    """Pad a flat id list to full (nb, P) batches + validity mask."""
-    n = len(ids)
-    nb = -(-n // batch)
-    pad = nb * batch - n
-    ids_p = np.concatenate([ids, np.full(pad, ids[-1] if n else 0, np.int32)])
-    mask = np.concatenate([np.ones(n, bool), np.zeros(pad, bool)])
-    return ids_p.reshape(nb, batch).astype(np.int32), mask.reshape(nb, batch)
+# Maintenance schedules share the engine's host-side batch padder.
+_batch_schedule = batch_schedule
 
 
 def _purge_rows(adj: np.ndarray, adj_d: np.ndarray, dead: np.ndarray):
@@ -229,12 +233,13 @@ class AnnIndex:
     """
 
     def __init__(self, *, spec, params, graph, data, backend_kind, seed,
-                 stats=None):
+                 stats=None, strategy="incremental"):
         self._spec = spec
         self.params = params
         self._graph = graph
         self._data = data
         self.backend_kind = backend_kind
+        self.build_strategy = strategy
         self._seed = seed
         self._n_adds = 0
         self._tombs = np.zeros(int(data.shape[0]), bool)
@@ -254,6 +259,7 @@ class AnnIndex:
         params: BuildParams | None = None,
         seed: int = 0,
         backend_kwargs: dict | None = None,
+        strategy: str = "bulk",
         **algo_kwargs,
     ) -> "AnnIndex":
         """Build an index over ``data``.
@@ -263,6 +269,13 @@ class AnnIndex:
                   ``data`` with ``backend_kwargs``) or a prebuilt backend
                   instance (then ``backend_kwargs`` must be empty).
         params    BuildParams; defaults to the algorithm's registered set.
+        strategy  from-scratch construction mode (DESIGN.md §12):
+                  ``"bulk"`` (default) bootstraps the graph with batched
+                  RNN-Descent refinement rounds — much higher build
+                  throughput at matching recall; ``"incremental"`` is the
+                  paper's batch-synchronous insertion loop. Either way,
+                  :meth:`add` routes through ``BuildEngine.insert_batch``
+                  (dynamic growth is always incremental).
         algo_kwargs  forwarded to the algorithm builder (e.g. ``knn_k`` for
                   nsg, ``two_pass`` for vamana, ``levels`` for hnsw).
         """
@@ -270,6 +283,11 @@ class AnnIndex:
         if spec is None:
             raise ValueError(
                 f"unknown algo {algo!r}; registered: {', '.join(algos())}"
+            )
+        if strategy not in ("bulk", "incremental"):
+            raise ValueError(
+                f"unknown build strategy {strategy!r}; "
+                "valid: 'bulk', 'incremental'"
             )
         data = jnp.asarray(data, jnp.float32)
         params = spec.default_params if params is None else params
@@ -292,10 +310,13 @@ class AnnIndex:
                 )
             be = backend
             kind = _KIND_OF_TYPE.get(type(backend), "custom")
-        graph, raw_stats = spec.builder(data, be, params, seed, **algo_kwargs)
+        graph, raw_stats = spec.builder(
+            data, be, params, seed, strategy=strategy, **algo_kwargs
+        )
         return cls(
             spec=spec, params=params, graph=graph, data=data,
             backend_kind=kind, seed=seed, stats=_as_stats(raw_stats),
+            strategy=strategy,
         )
 
     # ---- introspection --------------------------------------------------
@@ -423,6 +444,7 @@ class AnnIndex:
             "params": dataclasses.asdict(self.params),
             "seed": int(self._seed),
             "n_adds": int(self._n_adds),
+            "strategy": self.build_strategy,
         }
         g = self._graph
         arrays = {
@@ -491,6 +513,8 @@ class AnnIndex:
             spec=spec, params=BuildParams(**meta["params"]), graph=graph,
             data=jnp.asarray(arrays["data"]),
             backend_kind=meta["backend_kind"], seed=int(meta["seed"]),
+            # pre-§12 snapshots predate the strategy field (all incremental)
+            strategy=meta.get("strategy", "incremental"),
         )
         obj._n_adds = int(meta["n_adds"])
         obj._tombs = np.asarray(arrays["tombs"], bool).copy()

@@ -15,12 +15,21 @@ neighbors from beam ∪ kNN candidates, (4) reverse edges + prune.
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.graph.engine import INF, BuildEngine, BuildParams
+from repro.graph.engine import (
+    INF,
+    BuildEngine,
+    BuildParams,
+    bulk_commit,
+    bulk_refine,
+    repair_reachability,
+)
 from repro.graph.hnsw import HNSWParams  # noqa: F401 — canonical param alias
 from repro.graph.knn import exact_knn
 from repro.graph.vamana import FlatIndex, medoid_id
@@ -81,17 +90,76 @@ def _build_nsg_jit(data, backend, knn_adj, entry, *, params: BuildParams):
     return FlatIndex(adj=adj, adj_d=adj_d, entry=entry, backend=backend)
 
 
+def _build_nsg_bulk(data, backend, entry, *, params: BuildParams,
+                    knn_k: int, seed: int):
+    """Bulk NSG (DESIGN.md §12): the refinement rounds ARE the k-NN stage.
+
+    NSG's pipeline starts from an approximate k-NN graph; the bulk path
+    produces exactly that as its refined pools — so the exact-k-NN oracle
+    pass of the incremental path is skipped entirely (an extra win on top
+    of the batched acquisition) and the returned ``knn_adj`` is the pools'
+    top-k slice. Selection/commit/reverse and medoid-reachability repair
+    are shared with the other bulk builders.
+    """
+    n = data.shape[0]
+    flat = dataclasses.replace(params, max_layers=1)
+    engine = BuildEngine(flat)
+    r = flat.r_base
+    adj = jnp.full((n, r), -1, jnp.int32)
+    adj_d = jnp.full((n, r), INF)
+    n_d = n_h = 0.0
+    knn_adj = jnp.full((n, knn_k), -1, jnp.int32)
+
+    if n >= 2:
+        members = np.arange(n, dtype=np.int32)
+        pool_ids, pool_d, n_d, n_h, _ = bulk_refine(
+            data, backend, members, r=r, params=flat, seed=seed, layer=0
+        )
+        adj, adj_d, backend = bulk_commit(
+            engine, adj, adj_d, backend, jnp.asarray(members),
+            pool_ids, pool_d, r=r,
+        )
+        pool_p = pool_ids.shape[1]
+        if pool_p >= knn_k:
+            knn_adj = pool_ids[:, :knn_k]
+        else:
+            knn_adj = knn_adj.at[:, :pool_p].set(pool_ids)
+
+    adj_up = jnp.full((0, n, flat.r_upper), -1, jnp.int32)
+    adj_up_d = jnp.full((0, n, flat.r_upper), INF)
+    levels = jnp.zeros((n,), jnp.int32)
+    adj, adj_d, adj_up, adj_up_d, backend, rd, rh = repair_reachability(
+        data, adj, adj_d, adj_up, adj_up_d, backend, levels, int(entry),
+        params=flat,
+    )
+    del rd, rh  # FlatIndex carries no stats; counters kept for symmetry
+    return FlatIndex(adj=adj, adj_d=adj_d, entry=entry, backend=backend), knn_adj
+
+
 def build_nsg(
     data,
     backend,
     *,
     params: BuildParams = BuildParams(),
     knn_k: int = 16,
+    strategy: str = "incremental",
+    seed: int = 0,
 ):
-    """Build an NSG-style index. Returns (FlatIndex, knn_adj)."""
+    """Build an NSG-style index. Returns (FlatIndex, knn_adj).
+
+    ``strategy="bulk"`` replaces BOTH the exact k-NN oracle pass and the
+    per-batch beam acquisition with RNN-Descent refinement rounds
+    (DESIGN.md §12); ``knn_adj`` then comes from the refined pools.
+    """
     data = jnp.asarray(data, jnp.float32)
+    entry = medoid_id(data)
+    if strategy == "bulk":
+        return _build_nsg_bulk(
+            data, backend, entry, params=params, knn_k=knn_k, seed=seed
+        )
+    if strategy != "incremental":
+        raise ValueError(f"unknown build strategy {strategy!r}")
     ids, _ = exact_knn(data, data, k=knn_k + 1)
     # Strip self-matches (first column is the point itself).
     knn_adj = ids[:, 1:]
-    entry = medoid_id(data)
     return _build_nsg_jit(data, backend, knn_adj, entry, params=params), knn_adj

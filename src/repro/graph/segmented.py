@@ -249,19 +249,24 @@ class SegmentedAnnIndex:
         params: HNSWParams | None = None,
         seed: int = 0,
         backend_kwargs: dict | None = None,
+        strategy: str = "bulk",
         **algo_kwargs,
     ) -> "SegmentedAnnIndex":
         """data_segs: (S, n_s, D) array or list of per-segment (n_s, D)
         arrays. Each segment fits its own coder (offline shared-coder
         deployments should build per-segment ``AnnIndex`` objects themselves
-        and pass prebuilt backends)."""
+        and pass prebuilt backends). ``strategy`` is forwarded to every
+        per-segment :meth:`AnnIndex.build` — segments are the natural unit
+        for the bulk fast path (DESIGN.md §12): each one is a from-scratch
+        build over its own shard."""
         segs = [jnp.asarray(s, jnp.float32) for s in data_segs]
         segments, global_of, locate = [], [], []
         next_gid = 0
         for s, seg_data in enumerate(segs):
             segments.append(AnnIndex.build(
                 seg_data, algo=algo, backend=backend, params=params,
-                seed=seed + s, backend_kwargs=backend_kwargs, **algo_kwargs,
+                seed=seed + s, backend_kwargs=backend_kwargs,
+                strategy=strategy, **algo_kwargs,
             ))
             n_s = int(seg_data.shape[0])
             global_of.append(np.arange(next_gid, next_gid + n_s, dtype=np.int64))

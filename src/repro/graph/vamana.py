@@ -20,9 +20,17 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.graph.beam import INF, beam_search
-from repro.graph.engine import BuildEngine, BuildParams, CostAccount
+from repro.graph.engine import (
+    BuildEngine,
+    BuildParams,
+    CostAccount,
+    bulk_commit,
+    bulk_refine,
+    repair_reachability,
+)
 from repro.graph.hnsw import HNSWParams  # noqa: F401 — canonical param alias
 from repro.graph.hnsw import SearchResult
 from repro.graph.rerank import SearchSpec, rerank_topk, resolve_search_args
@@ -87,15 +95,63 @@ def _build_flat_jit(data, backend, entry, *, params: BuildParams, two_pass: bool
     return index, s1
 
 
+def _build_vamana_bulk(data, backend, entry, *, params: BuildParams, seed: int):
+    """Bulk Vamana (DESIGN.md §12): RNN-Descent pools + one α-relaxed commit.
+
+    The refinement rounds subsume DiskANN's two-pass schedule — every
+    vertex's pool is already refined against the whole dataset when the
+    robust prune (α = ``params.alpha``) runs, so there is no second
+    insertion sweep. Reachability from the medoid is repaired the same way
+    as bulk HNSW.
+    """
+    n = data.shape[0]
+    flat = dataclasses.replace(params, max_layers=1)
+    engine = BuildEngine(flat)
+    adj0 = jnp.full((n, flat.r_base), -1, jnp.int32)
+    adj0_d = jnp.full((n, flat.r_base), INF)
+    adj_up = jnp.full((0, n, flat.r_upper), -1, jnp.int32)
+    adj_up_d = jnp.full((0, n, flat.r_upper), INF)
+    levels = jnp.zeros((n,), jnp.int32)
+    n_d = n_h = 0.0
+
+    if n >= 2:
+        members = np.arange(n, dtype=np.int32)
+        pool_ids, pool_d, n_d, n_h, _ = bulk_refine(
+            data, backend, members, r=flat.r_base, params=flat,
+            seed=seed, layer=0,
+        )
+        adj0, adj0_d, backend = bulk_commit(
+            engine, adj0, adj0_d, backend, jnp.asarray(members),
+            pool_ids, pool_d, r=flat.r_base,
+        )
+
+    adj0, adj0_d, adj_up, adj_up_d, backend, rd, rh = repair_reachability(
+        data, adj0, adj0_d, adj_up, adj_up_d, backend, levels, int(entry),
+        params=flat,
+    )
+    index = FlatIndex(adj=adj0, adj_d=adj0_d, entry=entry, backend=backend)
+    return index, CostAccount(
+        n_dists=jnp.float32(n_d + rd), n_hops=jnp.float32(n_h + rh)
+    )
+
+
 def build_vamana(
     data,
     backend,
     *,
     params: BuildParams = BuildParams(alpha=1.2),
     two_pass: bool = True,
+    strategy: str = "incremental",
+    seed: int = 0,
 ):
     data = jnp.asarray(data, jnp.float32)
     entry = medoid_id(data)
+    if strategy == "bulk":
+        # ``two_pass`` is an incremental-schedule knob; the bulk rounds
+        # replace both passes, so it is accepted and ignored here.
+        return _build_vamana_bulk(data, backend, entry, params=params, seed=seed)
+    if strategy != "incremental":
+        raise ValueError(f"unknown build strategy {strategy!r}")
     return _build_flat_jit(data, backend, entry, params=params, two_pass=two_pass)
 
 

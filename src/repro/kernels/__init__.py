@@ -8,6 +8,9 @@ ref.py holds the pure-jnp oracle; ops.py the jit'd dispatching wrappers):
   flash_expand — one fused beam-expansion step (DESIGN.md §10): scalar-
                  prefetched in-kernel gather of adjacency + packed 4-bit
                  code rows, MXU one-hot ADT contraction.
+  flash_round  — bulk refinement-round scan (DESIGN.md §12): one RNN-
+                 Descent round's (B, C) candidate block scored against
+                 per-vertex ADTs (the batched-table flash_scan).
   l2_batch     — tiled ‖x‖²+‖y‖²−2x·yᵀ distance matrix on the MXU
                  (full-precision baseline path + k-means training).
   sq_l2        — int-domain scaled L2 for the optimized HNSW-SQ baseline.
@@ -16,6 +19,7 @@ ref.py holds the pure-jnp oracle; ops.py the jit'd dispatching wrappers):
 from repro.kernels import ops, ref  # noqa: F401
 from repro.kernels.ops import (  # noqa: F401
     flash_expand,
+    flash_round,
     flash_scan,
     flash_scan_blocked,
     l2_batch,

@@ -1,0 +1,85 @@
+"""Pallas TPU kernel: the bulk refinement-round scan (DESIGN.md §12).
+
+One RNN-Descent round (``strategy="bulk"`` builds) scores, for every vertex
+of the dataset, a (C,)-wide candidate block — current pool ∪ neighbor-of-
+neighbor expansion — against that vertex's own ADT. Layout-wise this is
+``flash_scan`` with a *batched table*: the (M, K) ADT gains a leading axis
+because every row of the block is a different "query" vertex (there is no
+shared query the way the beam-search kernels have).
+
+The lookup itself is the same gather-free one-hot idiom as
+``flash_scan.py``: compare the codewords against a broadcast iota over the
+K axis, select from the (per-row) table, reduce over (M, K) on the VPU.
+
+Tiling: grid over ⌈B / block_b⌉; each program handles ``block_b`` round
+vertices across all C candidates and M subspaces. The per-row tables ride
+in the same tile (block_b × M × K), so each program is self-contained — no
+cross-program state, embarrassingly parallel over the round.
+
+VMEM budget per program (defaults, block_b=8, C=288, M=16, K=16):
+  codes tile  8×288×16×4 B          = 144 KiB
+  adts tile   8×16×16×4 B           =   8 KiB
+  one-hot intermediate               (vreg-resident, fused by Mosaic)
+  out         8×288×4 B             =   9 KiB              « 16 MiB VMEM ✓
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.utils import round_up
+
+
+def _flash_round_kernel(codes_ref, adts_ref, out_ref, *, k: int):
+    """One tile: codes (bb, C, M) int32, adts (bb, M, K) -> out (bb, C)."""
+    codes = codes_ref[...]  # (bb, C, M) int32
+    adts = adts_ref[...]  # (bb, M, K)
+    kk = jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, k), 3)  # (1, 1, 1, K)
+    onehot = codes[:, :, :, None] == kk  # (bb, C, M, K) bool
+    vals = jnp.where(
+        onehot, adts[:, None, :, :], jnp.zeros_like(adts[:, None, :, :])
+    )
+    out_ref[...] = jnp.sum(vals, axis=(2, 3))
+
+
+def flash_round_pallas(
+    codes: jax.Array,
+    adts: jax.Array,
+    *,
+    block_b: int = 8,
+    interpret: bool = True,
+) -> jax.Array:
+    """codes (B, C, M) int in [0, K); adts (B, M, K) -> (B, C).
+
+    ``interpret=True`` executes the kernel body in Python on CPU (this
+    container has no TPU); on real hardware pass ``interpret=False``.
+    """
+    b, c, m = codes.shape
+    b2, m2, k = adts.shape
+    if b != b2 or m != m2:
+        raise ValueError(
+            f"codes (B={b}, M={m}) != adts (B={b2}, M={m2})"
+        )
+    b_pad = round_up(max(b, 1), block_b)
+    codes_p = jnp.zeros((b_pad, c, m), jnp.int32).at[:b].set(
+        codes.astype(jnp.int32)
+    )
+    adts_p = jnp.zeros((b_pad, m, k), adts.dtype).at[:b].set(adts)
+    grid = (b_pad // block_b,)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_round_kernel, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, c, m), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_b, m, k), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b_pad, c), adts.dtype),
+        interpret=interpret,
+    )(codes_p, adts_p)
+    return out[:b]

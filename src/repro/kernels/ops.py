@@ -23,6 +23,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_expand import flash_expand_pallas
+from repro.kernels.flash_round import flash_round_pallas
 from repro.kernels.flash_scan import flash_scan_blocked_pallas, flash_scan_pallas
 from repro.kernels.l2_batch import l2_batch_pallas
 from repro.kernels.sq_l2 import sq_l2_pallas
@@ -91,6 +92,26 @@ def flash_scan_batch(
         raise ValueError(f"rows M={m} != adt M={m2}")
     blocks = jnp.transpose(rows, (0, 2, 1))  # (W, M, R)
     return flash_scan_blocked(blocks, adt, impl=impl, block_g=block_g)
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "block_b"))
+def flash_round(
+    codes: jax.Array, adts: jax.Array, *, impl: str = "auto", block_b: int = 8
+) -> jax.Array:
+    """Bulk refinement-round scan: codes (B, C, M), adts (B, M, K) -> (B, C).
+
+    The ``strategy="bulk"`` build's kernel entry point (DESIGN.md §12): one
+    RNN-Descent round scores every vertex's candidate block against that
+    vertex's OWN ADT, so the table is batched per row — ``flash_scan`` with
+    a leading B axis on both operands. The Flash backends' ``round_dists``
+    capability hook routes here.
+    """
+    impl = resolve_impl(impl)
+    if impl == "ref":
+        return ref.flash_round_ref(codes, adts)
+    return flash_round_pallas(
+        codes, adts, block_b=block_b, interpret=(impl == "interpret")
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("impl",))

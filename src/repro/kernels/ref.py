@@ -74,6 +74,24 @@ def flash_expand_ref(
     return rows, sums
 
 
+def flash_round_ref(codes: jax.Array, adts: jax.Array) -> jax.Array:
+    """Bulk refinement-round scan (DESIGN.md §12) — per-row ADT batch.
+
+    One RNN-Descent round scores, for every vertex b in the round block, its
+    whole candidate set against that vertex's OWN lookup table — unlike
+    ``flash_scan_batch`` there is no shared query, so the table gains a
+    leading batch axis.
+
+    codes: (B, C, M) integer codewords — B round vertices × C candidates.
+    adts:  (B, M, K) per-vertex partial-distance tables (int32 levels from
+           the shared quantizer, or float32 PQ-style tables).
+    Returns (B, C) — Σ_m adts[b, m, codes[b, c, m]], dtype follows ``adts``.
+    """
+    b_idx = jnp.arange(codes.shape[0])[:, None, None]
+    m_idx = jnp.arange(adts.shape[1])[None, None, :]
+    return jnp.sum(adts[b_idx, m_idx, codes], axis=-1)
+
+
 def flash_scan_blocked_ref(blocks: jax.Array, adt: jax.Array) -> jax.Array:
     """Access-aware blocked layout variant (paper §3.3.4 / Figure 5).
 

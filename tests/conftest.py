@@ -111,6 +111,20 @@ def make_clustered(
     return x.astype(np.float32)
 
 
+@pytest.fixture(autouse=True, scope="module")
+def _bounded_executable_cache():
+    """Drop compiled executables at module boundaries.
+
+    XLA-CPU's JIT segfaults inside ``backend_compile`` once one process
+    holds a few hundred live compiled computations (reproducible at the
+    same test ~70% through a full-suite run; every module passes alone).
+    Clearing per module keeps the resident count bounded — modules pay
+    their own compiles either way, only cross-module reuse is lost.
+    """
+    yield
+    jax.clear_caches()
+
+
 @pytest.fixture(scope="session")
 def small_data():
     """(data (2000, 48), queries (64, 48)) jnp arrays."""

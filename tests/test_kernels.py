@@ -113,6 +113,60 @@ class TestFlashScanBlocked:
         np.testing.assert_array_equal(np.asarray(got), np.asarray(expect))
 
 
+class TestFlashRound:
+    """Bulk refinement-round scan (DESIGN.md §12): per-row batched tables."""
+
+    @pytest.mark.parametrize("b,c", [(1, 8), (7, 33), (8, 288), (50, 40)])
+    def test_shapes_exact(self, b, c):
+        rng = _rng(b * 131 + c)
+        codes = jnp.asarray(rng.integers(0, 16, (b, c, 16)), jnp.int32)
+        adts = jnp.asarray(rng.integers(0, 255, (b, 16, 16)), jnp.int32)
+        np.testing.assert_array_equal(
+            np.asarray(ops.flash_round(codes, adts, impl="interpret")),
+            np.asarray(ref.flash_round_ref(codes, adts)),
+        )
+
+    def test_rows_equal_flat_scan(self):
+        """Each row is exactly flash_scan against that row's own table."""
+        rng = _rng(6)
+        b, c, m = 5, 24, 8
+        codes = jnp.asarray(rng.integers(0, 16, (b, c, m)), jnp.int32)
+        adts = jnp.asarray(rng.integers(0, 255, (b, m, 16)), jnp.int32)
+        got = np.asarray(ops.flash_round(codes, adts, impl="ref"))
+        for i in range(b):
+            np.testing.assert_array_equal(
+                got[i], np.asarray(ref.flash_scan_ref(codes[i], adts[i]))
+            )
+
+    def test_float_tables_close(self):
+        """f32 tables: one-hot select-sum vs gather-sum may differ in
+        accumulation order — allclose, not bit-equal (int32, the Flash
+        production dtype, is exact above)."""
+        rng = _rng(7)
+        codes = jnp.asarray(rng.integers(0, 16, (9, 30, 16)), jnp.int32)
+        adts = jnp.asarray(rng.uniform(0, 250, (9, 16, 16)), jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(ops.flash_round(codes, adts, impl="interpret")),
+            np.asarray(ref.flash_round_ref(codes, adts)),
+            rtol=1e-5, atol=1e-3,
+        )
+
+    def test_block_b_sweep(self):
+        rng = _rng(8)
+        codes = jnp.asarray(rng.integers(0, 16, (21, 40, 16)), jnp.int32)
+        adts = jnp.asarray(rng.integers(0, 255, (21, 16, 16)), jnp.int32)
+        expect = np.asarray(ref.flash_round_ref(codes, adts))
+        for bb in (1, 4, 16):
+            got = ops.flash_round(codes, adts, impl="interpret", block_b=bb)
+            np.testing.assert_array_equal(np.asarray(got), expect)
+
+    def test_shape_mismatch_raises(self):
+        codes = jnp.zeros((4, 8, 16), jnp.int32)
+        adts = jnp.zeros((5, 16, 16), jnp.int32)
+        with pytest.raises(ValueError, match="codes"):
+            ops.flash_round(codes, adts, impl="interpret")
+
+
 class TestL2Batch:
     @pytest.mark.parametrize(
         "n,c,d", [(1, 1, 4), (17, 33, 48), (256, 256, 128), (300, 70, 130)]
