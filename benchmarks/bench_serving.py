@@ -7,9 +7,15 @@ Measures the three serve-subsystem claims on a flash_blocked HNSW index:
   * shape-bucketed engine: QPS and p50/p99 latency at Q ∈ {1, 8, 32} with
     ZERO recompiles after ``warmup()`` (the compile counter is asserted);
   * micro-batching: the acceptance bar — a coalesced Q=32 block through the
-    engine (and through the MicroBatcher's deadline scheduler) vs 32
+    engine (and through the Runtime's continuous-batching scheduler) vs 32
     sequential single-query ``AnnIndex.search`` calls; the batched path must
-    clear 3× (recorded in BENCH_serving.json, warned on regression).
+    clear 3× (recorded in BENCH_serving.json, warned on regression);
+  * mixed workload (ISSUE 7): sustained QPS and p99 under ~95% search /
+    ~5% add with a periodic compact through ``serve.Runtime`` — mutations
+    land as copy-on-write generation flips while the read stream keeps
+    flowing; bars on mixed speedup (≥3× sequential), p99 inflation (≤2×
+    read-only), and shed rate, with ``cold_dispatches == 0`` as the
+    zero-steady-state-recompile witness.
 
 ``serving_bench()`` is the machine-readable entry (``run.py --json
 BENCH_serving.json --only serving``); ``run()`` emits the CSV rows.
@@ -17,6 +23,7 @@ BENCH_serving.json --only serving``); ``run()`` emits the CSV rows.
 
 from __future__ import annotations
 
+import gc
 import shutil
 import tempfile
 import time
@@ -31,6 +38,13 @@ from repro.index import AnnIndex
 
 #: Acceptance bar (ISSUE 3): batched QPS >= 3x sequential single-query QPS.
 SPEEDUP_BAR = 3.0
+
+#: Acceptance bars (ISSUE 7, mixed workload through the Runtime): sustained
+#: mixed QPS >= 3x sequential single-query QPS, p99 under mutation pressure
+#: <= 2x the read-only p99, and (deadlines are generous) ~nothing shed.
+MIXED_SPEEDUP_BAR = 3.0
+MIXED_P99_RATIO_BAR = 2.0
+SHED_RATE_BAR = 0.01
 
 
 def serving_bench(
@@ -107,7 +121,7 @@ def serving_bench(
     # after sustained bursts, which would punish whatever runs last); the
     # cooldown gives the CFS quota a moment to recover.
     time.sleep(0.5)
-    with serve.MicroBatcher(engine, max_wait_ms=5.0) as mb:
+    with serve.Runtime(engine=engine, max_wait_ms=5.0) as mb:
         waves = []
         for wave in range(max(repeats, 3) + 1):
             t0 = time.perf_counter()
@@ -164,6 +178,10 @@ def serving_bench(
         f"recompiles_after_warmup={recompiles}",
     )
 
+    # one engine across the mixed rounds: its executable table (and jit's
+    # shape-keyed trace cache) IS the steady-state story being measured
+    mixed = mixed_workload(idx, queries, engine=engine, seq_qps=seq_qps)
+
     return dict(
         bench="serving",
         n=n, d=d, n_q=n_q, k=k, ef=ef,
@@ -197,6 +215,168 @@ def serving_bench(
             scheduler_batches=sched_stats["batches"],
             scheduler_mean_batch=sched_stats["mean_batch"],
         ),
+        mixed=mixed,
+    )
+
+
+def mixed_workload(
+    idx, queries, *, engine, seq_qps: float,
+    n_waves: int = 80, wave: int = 32, add_total: int = 128,
+    n_delete: int = 10,
+) -> dict:
+    """Sustained mixed traffic through the Runtime (ISSUE 7): ~95% search /
+    ~5% writes (an add burst, a delete, a compact) riding copy-on-write
+    generation flips while the read stream keeps flowing.
+
+    Load is open-loop with a bounded window (several waves in flight) so
+    the scheduler packs back-to-back blocks — a closed-loop barrier per
+    wave would idle it — while waves submitted after a flip still pin the
+    new generation. Queries are pre-materialized numpy rows: per-submit
+    device slices would otherwise dominate the per-request cost.
+
+    The mutation schedule is deterministic and the scenario runs THREE
+    rounds over the same engine, each from the same base index (the
+    Runtime's copy-on-write handle never touches ``idx``):
+
+      * **cold mixed** — the first time each flip's grown shape exists,
+        the mutator pays the jit traces (insert program + per-bucket
+        search executables) off the request path; reported as the
+        cold-start cost, NOT judged against the bars (on a 2-core box the
+        compile contention dominates everything);
+      * **read-only** — load structure alone; the p99 baseline the SLO
+        ratio is judged against (adjacent to the judged round so both
+        see the same CFS-throttle state);
+      * **steady mixed** — the measured round. Identical schedule to the
+        cold round, so every flip re-uses its traces (jit caches by
+        shape): mutation cost collapses to clone + cached executables,
+        which is the recurring-shape steady state a long-lived server
+        lives in. Bars: QPS ≥ 3× sequential, p99 ≤ 2× read-only, ~zero
+        shed, zero ``cold_dispatches`` and zero mutator traces.
+
+    Sustained QPS is the search stream's wall clock (mutations overlap
+    it; their completion tail is ``flip_wait_s``), p99 comes from the
+    runtime's admission books.
+    """
+    n_search = n_waves * wave
+    q_np = np.asarray(queries, dtype=np.float32)
+    rng = np.random.default_rng(7)
+    growth = rng.normal(size=(add_total, q_np.shape[1])).astype(np.float32)
+    victims = list(range(0, n_delete * 7, 7))
+
+    def run_round(rt, *, mutate: bool) -> dict:
+        def submit_wave():
+            return [rt.submit(q_np[i % len(q_np)]) for i in range(wave)]
+
+        def drain(futs):
+            for f in futs:
+                f.result(timeout=600)
+
+        drain(submit_wave())  # warm the scheduler path
+        rt.reset_stats()
+        compiles_before = rt.engine.n_compiles
+        gc.collect()  # earlier sections' cyclic garbage must not fire
+        #               collection pauses inside the timed window (§12)
+        mut_futs = []
+        in_flight = []
+        t0 = time.perf_counter()
+        for w in range(n_waves):
+            if mutate and w == n_waves // 4:
+                # one grouped add burst -> ONE flip at a deterministic
+                # grown shape (group commit is the write-side batching)
+                mut_futs.append(rt.add(growth))
+            if mutate and w == n_waves // 2:
+                mut_futs.append(rt.delete(victims))
+            if mutate and w == 3 * n_waves // 4:
+                mut_futs.append(rt.compact())
+            in_flight.append(submit_wave())
+            if len(in_flight) > 16:
+                drain(in_flight.pop(0))
+        for futs in in_flight:
+            drain(futs)
+        elapsed = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        for f in mut_futs:
+            f.result(timeout=600)
+        flip_wait = time.perf_counter() - t0
+        stats = rt.stats()
+        return dict(
+            qps=n_search / elapsed,
+            p50_ms=stats["p50_ms"], p99_ms=stats["p99_ms"],
+            queue_p99_ms=stats["queue_p99_ms"],
+            served=stats["served"], shed=stats["shed"],
+            rejected=stats["rejected"],
+            deadline_misses=stats["deadline_misses"],
+            shed_rate=stats["shed_rate"],
+            generations=stats["generation"],
+            cold_dispatches=stats["cold_dispatches"],
+            mutator_compiles=rt.engine.n_compiles - compiles_before,
+            flip_wait_s=flip_wait,
+        )
+
+    rounds = {}
+    for name, mutate in (
+        ("cold", True), ("read_only", False), ("steady", True),
+    ):
+        with serve.Runtime(
+            idx, engine=engine, max_wait_ms=5.0,
+            default_deadline_ms=30_000.0,
+        ) as rt:
+            rounds[name] = run_round(rt, mutate=mutate)
+        if name == "cold":
+            # sequential single-query baseline, measured ADJACENT to the
+            # judged rounds (the early-run batching-section figure sees a
+            # fresh CFS quota this late-run section never gets — comparing
+            # across that boundary measures the container, not the
+            # scheduler); the cold round just warmed every executable,
+            # and the loop gets the same quota-recovery pause + gc
+            # discipline as the rounds it is compared against
+            time.sleep(1.0)
+            gc.collect()
+            for i in range(16):
+                engine.search(q_np[i % len(q_np)])
+            t0 = time.perf_counter()
+            for i in range(64):
+                engine.search(q_np[i % len(q_np)])
+            seq_adjacent_qps = 64 / (time.perf_counter() - t0)
+        time.sleep(1.0)  # let the CFS quota recover between rounds
+
+    read, cold, steady = rounds["read_only"], rounds["cold"], rounds["steady"]
+    p99_ratio = (
+        steady["p99_ms"] / read["p99_ms"] if read["p99_ms"] > 0 else 0.0
+    )
+    speedup = (
+        steady["qps"] / seq_adjacent_qps if seq_adjacent_qps > 0 else 0.0
+    )
+    emit(
+        "serving/mixed", 1e6 / steady["qps"],
+        f"steady={steady['qps']:.0f}qps (read-only {read['qps']:.0f}, "
+        f"cold {cold['qps']:.0f}, seq {seq_adjacent_qps:.0f}) "
+        f"p99={steady['p99_ms']:.2f}ms "
+        f"({p99_ratio:.2f}x read-only) speedup={speedup:.2f}x "
+        f"flips={steady['generations']} cold_dispatches="
+        f"{steady['cold_dispatches']} shed_rate={steady['shed_rate']:.4f}",
+    )
+    return dict(
+        n_search=n_search, n_waves=n_waves, wave=wave,
+        add_total=add_total, n_delete=n_delete, n_compacts=1,
+        write_fraction=(add_total + n_delete + 1)
+        / (n_search + add_total + n_delete + 1),
+        seq_qps=seq_adjacent_qps,
+        seq_qps_batching_section=seq_qps,
+        read_only=read,
+        cold=cold,
+        mixed=steady,
+        generations=steady["generations"],
+        cold_dispatches=steady["cold_dispatches"],
+        mutator_warm_compiles=steady["mutator_compiles"],
+        cold_mutator_warm_compiles=cold["mutator_compiles"],
+        flip_wait_s=steady["flip_wait_s"],
+        cold_flip_wait_s=cold["flip_wait_s"],
+        p99_ratio=p99_ratio,
+        p99_ratio_bar=MIXED_P99_RATIO_BAR,
+        speedup_vs_sequential=speedup,
+        speedup_bar=MIXED_SPEEDUP_BAR,
+        shed_rate_bar=SHED_RATE_BAR,
     )
 
 

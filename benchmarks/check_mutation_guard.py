@@ -1,0 +1,183 @@
+"""CI guard: serve/ code may only mutate an AnnIndex through IndexHandle.
+
+The serving runtime's whole consistency story (DESIGN.md §13) rests on one
+rule: an index that is being served is never mutated in place — every
+``add``/``delete``/``compact`` runs against a private clone inside
+``IndexHandle.mutate`` and lands as an atomic generation flip. A single
+``self.index.add(...)`` in engine/runtime/router code would silently
+reintroduce the torn-read window the handle exists to close (readers
+observing purged adjacency rows next to a not-yet-rewired mirror), and
+nothing in the type system stops it. This script fails the CI build the
+moment that discipline drifts, two ways:
+
+  * **static sweep** — every ``src/repro/serve/*.py`` file except
+    ``handle.py`` (the one sanctioned mutation path) is scanned for facade
+    mutation calls on attribute-reached index objects
+    (``self.index.add(``, ``engine.index.delete(``, ``gen.index.compact(``
+    …). Bare-parameter calls like ``index.add(…)`` inside a mutation
+    closure are the sanctioned idiom (they execute on the clone, under
+    ``IndexHandle.mutate``) and are left to the dynamic check;
+  * **dynamic stack check** — ``AnnIndex.add/delete/compact`` are wrapped
+    to inspect the call stack, then a live Runtime scenario (searches
+    racing an add, a delete, and a compact) is driven end to end: every
+    mutation that executes with a ``repro/serve/`` frame on its stack must
+    also have ``IndexHandle.mutate`` below it. The detector itself is
+    verified with a negative control (a mutation call compiled under a
+    spoofed ``repro/serve/`` filename must be flagged).
+
+Exit 0 = mutation discipline sound.  Usage: PYTHONPATH=src python
+benchmarks/check_mutation_guard.py
+"""
+
+from __future__ import annotations
+
+import inspect
+import pathlib
+import re
+import sys
+
+import numpy as np
+
+from repro import serve
+from repro.graph.hnsw import HNSWParams
+from repro.graph.index import AnnIndex
+
+SERVE_DIR = pathlib.Path(__file__).resolve().parent.parent / "src" / "repro" / "serve"
+
+#: facade mutation reached through an attribute-held (i.e. live, published)
+#: index object — the in-place idiom the handle replaced
+_STATIC_VIOLATION = re.compile(
+    r"[\w\)\]]\s*\.\s*_?index\s*\.\s*(add|delete|compact)\s*\("
+)
+
+MUTATORS = ("add", "delete", "compact")
+
+
+def static_sweep() -> list[str]:
+    failures = []
+    for path in sorted(SERVE_DIR.glob("*.py")):
+        if path.name == "handle.py":
+            continue  # the one sanctioned mutation path
+        for lineno, line in enumerate(path.read_text().splitlines(), 1):
+            m = _STATIC_VIOLATION.search(line)
+            if m:
+                failures.append(
+                    f"static: {path.name}:{lineno} calls .{m.group(1)}() on "
+                    f"a held index outside IndexHandle: {line.strip()!r}"
+                )
+    return failures
+
+
+def _is_sanctioned(frames) -> tuple[bool, object]:
+    """(stack crosses repro/serve outside IndexHandle.mutate?, first serve frame)."""
+    serve_frame = None
+    sanctioned = False
+    for f in frames:
+        fn = f.filename.replace("\\", "/")
+        if "repro/serve/" in fn and serve_frame is None:
+            serve_frame = f
+        if f.function == "mutate" and fn.endswith("repro/serve/handle.py"):
+            sanctioned = True
+    return sanctioned, serve_frame
+
+
+def dynamic_check() -> list[str]:
+    failures: list[str] = []
+    observed: list[str] = []
+
+    originals = {name: getattr(AnnIndex, name) for name in MUTATORS}
+
+    def make_wrapper(name, orig):
+        def wrapper(self, *args, **kwargs):
+            sanctioned, serve_frame = _is_sanctioned(inspect.stack())
+            if serve_frame is not None and not sanctioned:
+                failures.append(
+                    f"dynamic: AnnIndex.{name} mutated a live index from "
+                    f"serve code outside IndexHandle.mutate "
+                    f"({serve_frame.filename}:{serve_frame.lineno} in "
+                    f"{serve_frame.function})"
+                )
+            observed.append(name)
+            return orig(self, *args, **kwargs)
+
+        return wrapper
+
+    for name, orig in originals.items():
+        setattr(AnnIndex, name, make_wrapper(name, orig))
+    try:
+        rng = np.random.default_rng(0)
+        data = rng.normal(size=(200, 16)).astype(np.float32)
+        queries = rng.normal(size=(8, 16)).astype(np.float32)
+        params = HNSWParams(r_upper=4, r_base=8, ef=16, batch=32, max_layers=2)
+        idx = AnnIndex.build(data, algo="hnsw", backend="fp32", params=params)
+
+        # the live scenario: searches riding every flavor of flip
+        with serve.Runtime(
+            idx, k=5, ef=16, q_buckets=(1, 8), max_wait_ms=2.0
+        ) as rt:
+            rt.warmup()
+            rt.search(queries[0], 60)
+            rt.add(rng.normal(size=(4, 16)).astype(np.float32)).result(300)
+            rt.search(queries[1], 60)
+            rt.delete([0, 1]).result(300)
+            rt.compact().result(300)
+            rt.search(queries[2], 60)
+
+        for name in MUTATORS:
+            if name not in observed:
+                failures.append(
+                    f"dynamic: scenario never exercised AnnIndex.{name} — "
+                    "the guard watched nothing"
+                )
+
+        # direct facade use outside serve/ is not the guard's business
+        n_before = len(failures)
+        idx.clone().delete([2])
+        if len(failures) != n_before:
+            failures.append(
+                "dynamic: facade mutation outside serve/ was wrongly flagged"
+            )
+
+        # negative control: the detector must flag a mutation whose stack
+        # crosses serve/ without IndexHandle.mutate. Compile the offending
+        # call under a spoofed serve/ filename so the stack looks exactly
+        # like a rogue scheduler mutating in place.
+        src = (
+            "def rogue_mutation(index, ids):\n"
+            "    return index.delete(ids)\n"
+        )
+        spoofed = str(SERVE_DIR / "_guard_negative_control.py")
+        ns: dict = {}
+        exec(compile(src, spoofed, "exec"), ns)  # noqa: S102 — self-test
+        n_before = len(failures)
+        ns["rogue_mutation"](idx.clone(), [3])
+        if len(failures) == n_before:
+            failures.append(
+                "dynamic: negative control NOT flagged — the stack detector "
+                "is blind, the guard proves nothing"
+            )
+        else:
+            failures.pop()  # the control's own (expected) violation
+    finally:
+        for name, orig in originals.items():
+            setattr(AnnIndex, name, orig)
+    return failures
+
+
+def main() -> int:
+    failures = static_sweep()
+    failures += dynamic_check()
+    if failures:
+        print("mutation guard FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print(
+        "mutation guard OK (static sweep of serve/ + live Runtime "
+        "add/delete/compact scenario)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

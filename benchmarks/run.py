@@ -101,6 +101,29 @@ def _json_serving(repeats: int) -> tuple[dict, list[str]]:
             f"batched serving speedup {speedup:.2f}x below the "
             f"{bench_serving.SPEEDUP_BAR:.0f}x acceptance bar"
         )
+    mixed = payload["mixed"]
+    if mixed["speedup_vs_sequential"] < bench_serving.MIXED_SPEEDUP_BAR:
+        warnings.append(
+            f"mixed-workload QPS {mixed['speedup_vs_sequential']:.2f}x "
+            f"sequential, below the {bench_serving.MIXED_SPEEDUP_BAR:.0f}x "
+            "acceptance bar"
+        )
+    if mixed["p99_ratio"] > bench_serving.MIXED_P99_RATIO_BAR:
+        warnings.append(
+            f"mixed-workload p99 {mixed['mixed']['p99_ms']:.2f}ms is "
+            f"{mixed['p99_ratio']:.2f}x the read-only p99 (bar: <= "
+            f"{bench_serving.MIXED_P99_RATIO_BAR:.0f}x)"
+        )
+    if mixed["mixed"]["shed_rate"] > bench_serving.SHED_RATE_BAR:
+        warnings.append(
+            f"mixed-workload shed rate {mixed['mixed']['shed_rate']:.4f} "
+            f"exceeds the {bench_serving.SHED_RATE_BAR:.2f} bar"
+        )
+    if mixed["cold_dispatches"]:
+        warnings.append(
+            f"mixed workload hit {mixed['cold_dispatches']} cold "
+            "dispatches — a generation flip published without pre-warming"
+        )
     return payload, warnings
 
 

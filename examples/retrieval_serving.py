@@ -7,10 +7,13 @@ runtime — the full production loop on one page:
   3. stand up a ``SearchEngine`` pinned to a reranked ``SearchSpec``
      (quantized scan + exact rerank over k·rerank_mult candidates,
      DESIGN.md §11; pre-jitted (bucket × spec) executables, zero
-     steady-state recompiles) and a ``MicroBatcher`` (deadline-coalesced
-     single-query traffic), reporting batched vs unbatched QPS and the
-     scan/rerank cost split,
-  4. keep serving while the catalog changes: ``add()`` new items in place.
+     steady-state recompiles) and a ``serve.Runtime`` (continuous-batching
+     scheduler with per-request deadlines, DESIGN.md §13), reporting
+     batched vs unbatched QPS and the scan/rerank cost split,
+  4. keep serving while the catalog changes: ``Runtime.add()`` lands new
+     items as a copy-on-write generation flip — in-flight requests keep
+     their pinned snapshot, and the flip costs zero request-path
+     recompiles (pre-warmed off the request path).
 
     PYTHONPATH=src python examples/retrieval_serving.py
 """
@@ -106,31 +109,44 @@ def main():
           f"batched Q={n_req} {n_req / t_block:6.0f} qps "
           f"({t_seq / t_block:.1f}x)")
 
-    # micro-batching scheduler: the same coalescing for live single-query
-    # traffic — requests submitted independently, served as blocks
-    with serve.MicroBatcher(engine, max_wait_ms=2.0) as mb:
-        futs = [mb.submit(np.asarray(q[i])) for i in range(n_req)]
+    # continuous-batching runtime (DESIGN.md §13): live single-query
+    # traffic submitted independently with per-request deadlines, packed
+    # into the engine's warm (bucket × spec) executables
+    with serve.Runtime(engine=engine, max_wait_ms=2.0) as rt:
+        futs = [
+            rt.submit(np.asarray(q[i]), deadline_ms=500.0)
+            for i in range(n_req)
+        ]
         for f in futs:
             f.result(timeout=60)
-        coalesced = mb.stats()
+        coalesced = rt.stats()
+        print(f"runtime        : {coalesced['served']} requests -> "
+              f"{coalesced['batches']} dense blocks "
+              f"(mean batch {coalesced['mean_batch']:.0f}, deadline 500 ms, "
+              f"shed {coalesced['shed']}, "
+              f"e2e p99 {coalesced['p99_ms']:.1f} ms)")
+
+        # keep serving while the catalog changes: a fresh item batch lands
+        # as a copy-on-write generation flip — the clone is built and
+        # pre-warmed on the mutator thread, then swapped in atomically;
+        # in-flight requests finish on their pinned snapshot
+        new_items = (
+            table[:256] + 0.01 * jax.random.normal(key, (256, cfg.embed_dim))
+        )
+        rt.add(np.asarray(new_items)).result(timeout=600)
+        final = rt.stats()
+        print(f"cow flip       : generation {final['generation']}, index now "
+              f"{rt.engine.index.n_active} active (no rebuild, no coder "
+              f"refit, cold dispatches {final['cold_dispatches']})")
+
     stats = engine.stats()
-    print(f"scheduler      : {coalesced['requests']} requests -> "
-          f"{coalesced['batches']} dense blocks "
-          f"(mean batch {coalesced['mean_batch']:.0f}, deadline 2 ms)")
     print(f"engine         : p50 {stats['p50_ms']:.1f} ms, "
           f"p99 {stats['p99_ms']:.1f} ms, compiles={stats['compiles']} "
-          f"(all at warmup — steady state never recompiles)")
+          f"(warmup + one pre-warmed flip — requests never hit a trace)")
     print(f"pipeline       : rerank={spec.rerank} mult={spec.rerank_mult} -> "
           f"{stats['n_scan_per_query']:.0f} quantized scan + "
           f"{stats['n_rerank_per_query']:.0f} exact rerank dists/query "
           f"(quantized sums never cross the rerank boundary)")
-
-    # the serving index is mutable: list a fresh item batch in place
-    new_items = table[:256] + 0.01 * jax.random.normal(key, (256, cfg.embed_dim))
-    index.add(new_items)
-    engine.refresh()
-    print(f"added 256 items in place -> index now {index.n_active} active "
-          f"(no rebuild, no coder refit)")
 
 
 def _bench(fn, repeats=3):

@@ -521,6 +521,21 @@ class AnnIndex:
         obj._retired = np.asarray(arrays["retired"], bool).copy()
         return obj
 
+    def clone(self) -> "AnnIndex":
+        """A fully independent copy of this index — the generation-safe
+        state hand-off (DESIGN.md §13).
+
+        Round-trips through :meth:`export_state`/:meth:`restore`, so the
+        clone is exactly as decoupled as a snapshot load: its graph arrays,
+        backend state, raw vectors, and tombstone/retired masks share no
+        mutable state with the original, and maintenance applied to either
+        side (``add``/``delete``/``compact``) is invisible to the other.
+        ``serve.IndexHandle`` builds every copy-on-write generation through
+        this hook; searches on the clone are bit-exact with the source at
+        clone time (the snapshot contract, tests/test_serve.py).
+        """
+        return type(self).restore(*self.export_state())
+
     # ---- dynamic maintenance -------------------------------------------
 
     def _maint_params(self) -> BuildParams:

@@ -1,4 +1,4 @@
-"""``repro.serve`` — the serving runtime around a built index (DESIGN.md §9).
+"""``repro.serve`` — the serving runtime around a built index (DESIGN.md §9, §13).
 
 The paper accelerates *building* the index; this package is the other half
 of the ROADMAP's north star ("serve heavy traffic"): turning a built
@@ -10,9 +10,17 @@ service whose unit of work is a request stream, not an array.
     engine     SearchEngine: pre-jitted search callables per (padded Q-shape
                × SearchSpec) bucket, warmup(), QPS/latency/compile telemetry
                with the scan/rerank cost split (DESIGN.md §11)
-    scheduler  MicroBatcher: coalesces single-query requests into the next
-               shape bucket under a max-wait deadline (the serving twin of
-               the build beam's width-W argument)
+    runtime    Runtime: continuous-batching scheduler — deadline-ordered
+               request queue packed into warm executables, admission
+               control (reject / shed / miss accounting + latency
+               percentiles), and background copy-on-write index mutation
+    admission  AdmissionConfig/AdmissionController: queue-depth rejection,
+               deadline shedding, and the SLO bookkeeping behind
+               ``Runtime.stats()``
+    handle     IndexHandle/Generation: RCU-style snapshot-swap container —
+               readers pin an immutable generation, mutators clone-apply-flip
+    scheduler  MicroBatcher (deprecated): the original coalescing front-end,
+               now a thin wrapper over Runtime
     router     SegmentRouter: nearest-centroid fan-out over segments; the
                merge is the shared two-stage rerank (dedup by global id +
                one exact re-score — quantized sums never cross segments)
@@ -28,14 +36,25 @@ Quickstart::
     spec = SearchSpec(k=10, ef=64, rerank="exact", rerank_mult=4)
     engine = serve.SearchEngine(index, spec=spec).warmup()
     res = engine.search(queries)                    # zero recompiles
-    with serve.MicroBatcher(engine) as mb:          # single-query traffic
-        fut = mb.submit(one_query)
+    with serve.Runtime(index, max_queue=256) as rt: # request traffic
+        rt.warmup()
+        fut = rt.submit(one_query, deadline_ms=20.0)
         print(fut.result().ids)
+        rt.add(new_vectors).result()                # COW flip, readers
+                                                    # never blocked
 """
 
 from repro.graph.rerank import SearchSpec  # noqa: F401 — serving config
+from repro.serve.admission import (  # noqa: F401
+    AdmissionConfig,
+    AdmissionController,
+    DeadlineExceededError,
+    QueueFullError,
+)
 from repro.serve.engine import DEFAULT_BUCKETS, SearchEngine  # noqa: F401
+from repro.serve.handle import Generation, IndexHandle  # noqa: F401
 from repro.serve.router import SegmentRouter  # noqa: F401
+from repro.serve.runtime import Runtime  # noqa: F401
 from repro.serve.scheduler import MicroBatcher  # noqa: F401
 from repro.serve.snapshot import (  # noqa: F401
     FORMAT_VERSION,
@@ -45,9 +64,16 @@ from repro.serve.snapshot import (  # noqa: F401
 )
 
 __all__ = [
+    "AdmissionConfig",
+    "AdmissionController",
     "DEFAULT_BUCKETS",
+    "DeadlineExceededError",
     "FORMAT_VERSION",
+    "Generation",
+    "IndexHandle",
     "MicroBatcher",
+    "QueueFullError",
+    "Runtime",
     "SearchEngine",
     "SearchSpec",
     "SegmentRouter",

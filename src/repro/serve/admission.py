@@ -1,0 +1,183 @@
+"""Admission control for the serving runtime (DESIGN.md §13).
+
+A serving system's cheapest request is the one it never runs: under
+overload, queueing theory guarantees unbounded latency unless work is
+refused *before* it burns compute. This module owns that policy for
+:class:`repro.serve.runtime.Runtime` and keeps the books the SLO story is
+told from:
+
+  * **Reject at the door** — a queue-depth limit (``max_queue``): a submit
+    against a full queue raises :class:`QueueFullError` synchronously
+    (backpressure the client can see), costing zero scheduler or engine
+    work.
+  * **Shed at dequeue** — per-request deadlines: a request whose deadline
+    has already passed when the scheduler pops it is failed with
+    :class:`DeadlineExceededError` instead of being packed into a batch —
+    the compute it would have burned goes to requests that can still make
+    their SLO.
+  * **Account for misses** — a request that is served but completes after
+    its deadline still returns its result, and is counted as a
+    ``deadline_miss`` (the lenient half of the policy: sunk compute is
+    delivered, not discarded).
+
+Every decision increments a counter and the served path records queue /
+service / end-to-end latency into bounded windows, all exported through
+:meth:`AdmissionController.stats` — the arithmetic contract
+(``admitted == served + shed + pending``; rejected requests are never
+admitted) is asserted in tests/test_runtime.py.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+
+import numpy as np
+
+
+class QueueFullError(RuntimeError):
+    """Submit refused: the runtime's queue is at its depth limit."""
+
+
+class DeadlineExceededError(TimeoutError):
+    """Request shed: its deadline expired before any compute was spent."""
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionConfig:
+    """Admission policy knobs.
+
+    max_queue            pending-request ceiling; ``None`` = unbounded.
+    default_deadline_ms  deadline applied to submits that don't carry one;
+                         ``None`` = no deadline (never shed).
+    """
+
+    max_queue: int | None = None
+    default_deadline_ms: float | None = None
+
+    def __post_init__(self):
+        if self.max_queue is not None and self.max_queue < 0:
+            raise ValueError(f"max_queue must be >= 0, got {self.max_queue}")
+        if (
+            self.default_deadline_ms is not None
+            and self.default_deadline_ms < 0
+        ):
+            raise ValueError(
+                f"default_deadline_ms must be >= 0, got "
+                f"{self.default_deadline_ms}"
+            )
+
+
+def _pcts(window) -> tuple[float, float]:
+    lat = np.asarray(window, np.float64)
+    if not lat.size:
+        return 0.0, 0.0
+    return (
+        float(np.percentile(lat, 50) * 1e3),
+        float(np.percentile(lat, 99) * 1e3),
+    )
+
+
+class AdmissionController:
+    """Counters + policy for one :class:`~repro.serve.runtime.Runtime`.
+
+    Thread-safe: submits (client threads), sheds (scheduler thread), and
+    serve records (scheduler thread) all mutate under one lock. Latency
+    windows are bounded deques (most recent 4096 requests) so a long-lived
+    server never grows per-request state.
+    """
+
+    WINDOW = 4096
+
+    def __init__(self, config: AdmissionConfig | None = None):
+        self.config = config or AdmissionConfig()
+        self._lock = threading.Lock()
+        self._admitted = 0
+        self._rejected = 0
+        self._shed = 0
+        self._served = 0
+        self._missed = 0
+        self._queue_lat: collections.deque = collections.deque(maxlen=self.WINDOW)
+        self._service_lat: collections.deque = collections.deque(maxlen=self.WINDOW)
+        self._e2e_lat: collections.deque = collections.deque(maxlen=self.WINDOW)
+
+    # ---- policy ----------------------------------------------------------
+
+    def deadline_for(
+        self, deadline_ms: float | None, now: float | None = None
+    ) -> float | None:
+        """Absolute ``perf_counter`` deadline for a submit, or None."""
+        if deadline_ms is None:
+            deadline_ms = self.config.default_deadline_ms
+        if deadline_ms is None:
+            return None
+        if deadline_ms < 0:
+            raise ValueError(f"deadline_ms must be >= 0, got {deadline_ms}")
+        return (time.perf_counter() if now is None else now) + deadline_ms / 1e3
+
+    def admit(self, queue_depth: int) -> None:
+        """Gate one submit against ``queue_depth`` already-pending requests.
+
+        Raises :class:`QueueFullError` (and counts the reject) at the
+        limit; otherwise counts the admit."""
+        mq = self.config.max_queue
+        with self._lock:
+            if mq is not None and queue_depth >= mq:
+                self._rejected += 1
+                raise QueueFullError(
+                    f"queue full: {queue_depth} pending >= max_queue={mq}"
+                )
+            self._admitted += 1
+
+    def shed(self, n: int = 1) -> None:
+        """Count ``n`` requests shed at dequeue (deadline already past)."""
+        with self._lock:
+            self._shed += n
+
+    def record_served(
+        self, queue_s: float, service_s: float, *, missed: bool
+    ) -> None:
+        """Fold one served request into the latency/SLO books."""
+        with self._lock:
+            self._served += 1
+            self._missed += bool(missed)
+            self._queue_lat.append(queue_s)
+            self._service_lat.append(service_s)
+            self._e2e_lat.append(queue_s + service_s)
+
+    # ---- telemetry -------------------------------------------------------
+
+    def stats(self) -> dict:
+        """Counters + p50/p99 of the queue / service / end-to-end windows.
+
+        ``admitted - served - shed`` is the number still pending (0 after a
+        drain); ``rejected`` requests were never admitted."""
+        with self._lock:
+            q50, q99 = _pcts(self._queue_lat)
+            s50, s99 = _pcts(self._service_lat)
+            e50, e99 = _pcts(self._e2e_lat)
+            return {
+                "admitted": self._admitted,
+                "rejected": self._rejected,
+                "shed": self._shed,
+                "served": self._served,
+                "deadline_misses": self._missed,
+                "shed_rate": self._shed / self._admitted if self._admitted else 0.0,
+                "queue_p50_ms": q50,
+                "queue_p99_ms": q99,
+                "service_p50_ms": s50,
+                "service_p99_ms": s99,
+                "p50_ms": e50,
+                "p99_ms": e99,
+            }
+
+    def reset_stats(self) -> "AdmissionController":
+        with self._lock:
+            self._admitted = self._rejected = self._shed = 0
+            self._served = self._missed = 0
+            self._queue_lat.clear()
+            self._service_lat.clear()
+            self._e2e_lat.clear()
+        return self

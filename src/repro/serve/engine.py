@@ -21,6 +21,17 @@ The engine reads the index's graph pytree per call, so in-place maintenance
 :meth:`refresh` after maintenance to re-sync the device-side tombstone mask
 (and note a changed vector count changes array shapes, which legitimately
 costs one recompile per bucket — the same cost model as ``AnnIndex.add``).
+
+Under the continuous-batching runtime (DESIGN.md §13) the engine is also
+generation-aware: ``search(view=...)`` serves a pinned copy-on-write
+:class:`~repro.serve.handle.Generation` instead of ``self.index`` through
+the SAME compiled (bucket × spec) executables — the jitted callables close
+over nothing index-specific (graph, mask, and reranker are traced
+*arguments*), so flipping generations re-uses every warm executable whose
+array shapes match. ``refresh(index=new)`` rebinds the default index across
+a flip without dropping the executable table, and ``warm_view`` pre-pays
+the one legitimate recompile a *grown* generation costs, off the request
+path (the mutator thread), so the serving loop itself never compiles.
 """
 
 from __future__ import annotations
@@ -115,9 +126,20 @@ class SearchEngine:
 
     # ---- lifecycle ------------------------------------------------------
 
-    def refresh(self) -> "SearchEngine":
+    def refresh(self, index=None) -> "SearchEngine":
         """Re-sync the device tombstone mask with the index (call after
-        ``delete``/``add``/``compact``)."""
+        ``delete``/``add``/``compact``).
+
+        ``index=`` rebinds the engine to a different index object — the
+        generation-flip hand-off (DESIGN.md §13): the compiled (bucket ×
+        spec) executable table is KEPT, because the jitted callables take
+        the graph/mask/reranker as traced arguments, so a flip between
+        same-shaped generations (delete, compact) re-uses every warm
+        executable and a grown generation retraces exactly the buckets a
+        same-object ``add`` would have (pre-payable via :meth:`warm_view`).
+        """
+        if index is not None:
+            self.index = index
         mask = np.zeros(self.index.n, bool)
         mask[self.index.deleted_ids] = True
         self._banned = jnp.asarray(mask)
@@ -158,15 +180,21 @@ class SearchEngine:
 
     def _dispatch(
         self, bucket: int, queries_padded, spec: SearchSpec, *,
-        record: bool = False,
+        record: bool = False, view=None,
     ) -> SearchResult:
-        reranker = self.index.reranker(spec.rerank)
+        """One padded-bucket dispatch. ``view`` (anything with ``index`` and
+        ``banned`` — a :class:`~repro.serve.handle.Generation`) serves that
+        pinned index instead of ``self.index`` through the same executable
+        table; views are immutable so no mask resync applies."""
+        index = self.index if view is None else view.index
+        banned = self._banned if view is None else view.banned
+        reranker = index.reranker(spec.rerank)
         # a grown index changes array shapes: this dispatch retraces, so it
         # is not a cache hit even though the bucket fn exists
-        key = (bucket, spec, self.index.n)
+        key = (bucket, spec, index.n)
         hit = key in self._compiled
         res = self._fn(bucket, spec)(
-            self.index.graph, queries_padded, self._banned, reranker
+            index.graph, queries_padded, banned, reranker
         )
         self._compiled.add(key)
         if record and hit:
@@ -190,10 +218,49 @@ class SearchEngine:
             off += c
         return total
 
+    def is_warm(
+        self, q: int, spec: SearchSpec | None = None, *, n: int | None = None
+    ) -> bool:
+        """Whether serving a block of ``q`` queries with ``spec`` against an
+        index of ``n`` vectors (default: the bound index) would hit only
+        already-compiled executables — the scheduler's "already-warm"
+        packing predicate and the zero-steady-state-recompile meter
+        (DESIGN.md §13)."""
+        spec = self.spec if spec is None else spec
+        n = self.index.n if n is None else int(n)
+        off = 0
+        while off < q:
+            c = min(q - off, self.q_buckets[-1])
+            if (self._bucket_for(c), spec, n) not in self._compiled:
+                return False
+            off += c
+        return True
+
+    def warm_view(self, view, *, specs: tuple = ()) -> "SearchEngine":
+        """Compile every not-yet-warm (bucket × spec) executable for
+        ``view``'s index shapes — the generation-flip prepare hook
+        (DESIGN.md §13). Called off the request path (the mutator thread)
+        on a clone *before* it is published, so a grown generation's one
+        legitimate retrace per bucket is paid where readers never wait on
+        it. Same-shaped generations (delete/compact flips) find everything
+        warm and this is a no-op."""
+        d = int(view.index.data.shape[1])
+        n = view.index.n
+        for sp in dict.fromkeys((self.spec, *specs)):
+            for b in self.q_buckets:
+                if (b, sp, n) in self._compiled:
+                    continue
+                dummy = jnp.zeros((b, d), jnp.float32)
+                jax.block_until_ready(
+                    self._dispatch(b, dummy, sp, view=view).ids
+                )
+        return self
+
     # ---- serving --------------------------------------------------------
 
     def search(
-        self, queries, *, spec: SearchSpec | None = None, record: bool = True
+        self, queries, *, spec: SearchSpec | None = None, record: bool = True,
+        view=None,
     ) -> SearchResult:
         """Serve one query block (1D single query or (Q, d) batch).
 
@@ -202,6 +269,8 @@ class SearchEngine:
         than the top bucket, and folds latency/cost into the telemetry.
         ``spec=`` overrides the engine default for this call (first use of
         a new spec compiles its buckets; ``warmup(specs=…)`` pre-pays that).
+        ``view=`` serves a pinned :class:`~repro.serve.handle.Generation`
+        instead of the bound index (same executables, immutable mask).
         """
         spec = self.spec if spec is None else spec
         queries = jnp.asarray(queries, jnp.float32)
@@ -211,7 +280,7 @@ class SearchEngine:
         q_total = int(queries.shape[0])
         if q_total == 0:
             raise ValueError("empty query block")
-        if int(self._banned.shape[0]) != self.index.n:
+        if view is None and int(self._banned.shape[0]) != self.index.n:
             # index grew since the last refresh(): a stale mask would be
             # clamp-gathered against new ids and silently misclassify them
             self.refresh()
@@ -225,7 +294,7 @@ class SearchEngine:
             if q < bucket:
                 pad = jnp.broadcast_to(chunk[:1], (bucket - q,) + chunk.shape[1:])
                 chunk = jnp.concatenate([chunk, pad])
-            res = self._dispatch(bucket, chunk, spec, record=record)
+            res = self._dispatch(bucket, chunk, spec, record=record, view=view)
             out_ids.append(res.ids[:q])
             out_dists.append(res.dists[:q])
             nd += float(res.n_dists)  # also syncs the dispatch

@@ -1,0 +1,159 @@
+"""Copy-on-write index handle — RCU-style generations (DESIGN.md §13).
+
+The facade's ``add``/``delete``/``compact`` mutate the index *in place*,
+which is exactly right for a single-threaded pipeline and exactly wrong for
+a serving runtime: a reader that picks up ``index.graph`` mid-``compact``
+can observe purged adjacency rows next to a not-yet-rewired backend mirror.
+:class:`IndexHandle` removes that window the classic read-copy-update way:
+
+  * **Readers** grab :attr:`current` — an immutable :class:`Generation`
+    holding one fully-consistent index plus its device tombstone mask — and
+    use that object for the *whole* request. A generation is never mutated
+    after publication, so a reader can take arbitrarily long without ever
+    observing a half-applied update; it simply finishes on the generation it
+    started with.
+  * **Mutators** call :meth:`mutate` (or the ``add``/``delete``/``compact``
+    conveniences): the current index is cloned through the existing
+    ``export_state``/``restore`` machinery (``AnnIndex.clone``), the
+    mutation runs against the private clone (``add`` grows the clone's
+    backend via ``backend.extend`` exactly as always), and the new
+    generation is published by ONE reference assignment — atomic under the
+    GIL, so readers see either the old index or the new one, never a blend.
+  * **Prepare hooks** run on the fully-built clone *before* the flip:
+    the serving runtime uses this to pre-compile (Q-bucket × spec)
+    executables for a grown index's new array shapes off the request path,
+    so steady-state serving stays at zero recompiles across flips
+    (DESIGN.md §13; ``SearchEngine.warm_view``/``refresh``).
+
+Mutations are serialized by the handle's lock (last-writer-wins is not a
+thing here: each mutation builds on the previously published generation),
+and this module is the ONE sanctioned mutation path for any index that is
+being served — ``benchmarks/check_mutation_guard.py`` fails CI if other
+``serve/`` code calls the facade's mutating methods directly.
+"""
+
+from __future__ import annotations
+
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class Generation:
+    """One published, immutable index version.
+
+    ``gen`` is the monotonically increasing generation number (0 = the
+    handle's initial index); ``index`` is the index object itself, which
+    must not be mutated after publication. ``banned`` is the device-side
+    tombstone mask search dispatches need, built lazily and cached — safe
+    because the underlying tombstone set is frozen with the generation.
+    """
+
+    __slots__ = ("gen", "index", "_banned")
+
+    def __init__(self, gen: int, index):
+        self.gen = int(gen)
+        self.index = index
+        self._banned = None
+
+    @property
+    def banned(self):
+        """(n,) bool device mask of tombstoned ids (True = never return)."""
+        if self._banned is None:
+            mask = np.zeros(self.index.n, bool)
+            mask[self.index.deleted_ids] = True
+            self._banned = jnp.asarray(mask)  # idempotent if raced
+        return self._banned
+
+    def __repr__(self) -> str:
+        return f"Generation(gen={self.gen}, index={self.index!r})"
+
+
+class IndexHandle:
+    """Atomic snapshot-swap container around one :class:`repro.index.AnnIndex`.
+
+    Usage::
+
+        handle = IndexHandle(index)
+        gen = handle.current            # reader: pin a generation
+        ...serve the whole request from gen.index / gen.banned...
+        handle.add(new_vectors)         # mutator: clone -> apply -> flip
+        handle.current.gen              # readers now see the new generation
+
+    The handle never mutates a published index: every maintenance op runs on
+    a private clone and publishes a fresh generation. In-flight readers keep
+    their pinned generation alive (plain refcounting — no epoch bookkeeping
+    needed) and retired generations are garbage once the last reader drops
+    them.
+    """
+
+    def __init__(self, index):
+        if not hasattr(index, "export_state"):
+            raise TypeError(
+                "IndexHandle wraps a repro.index.AnnIndex-like object with "
+                f"export_state/restore snapshot hooks; got {type(index).__name__}"
+            )
+        self._generation = Generation(0, index)
+        self._mutex = threading.Lock()  # serializes mutators, not readers
+        self._prepare_hooks: list = []
+
+    # ---- reader side -----------------------------------------------------
+
+    @property
+    def current(self) -> Generation:
+        """The latest published generation (atomic reference read)."""
+        return self._generation
+
+    @property
+    def generation(self) -> int:
+        """The latest published generation number."""
+        return self._generation.gen
+
+    # ---- mutator side ----------------------------------------------------
+
+    def on_prepare(self, hook) -> "IndexHandle":
+        """Register ``hook(generation)`` to run on every fully-built clone
+        *before* it is published — the warm-executables window. Hooks run
+        under the mutation lock, off the reader path; a raising hook aborts
+        the flip (the old generation stays current)."""
+        self._prepare_hooks.append(hook)
+        return self
+
+    def mutate(self, fn):
+        """Clone-apply-flip: run ``fn(clone)`` against a private copy of the
+        current index, then atomically publish the result.
+
+        Returns ``(generation, result)`` — the newly published
+        :class:`Generation` and whatever ``fn`` returned. ``fn`` may call
+        any facade maintenance method (or several: a batched group of
+        mutations flips once). If ``fn`` raises, nothing is published.
+        """
+        with self._mutex:
+            base = self._generation
+            clone = base.index.clone()
+            result = fn(clone)
+            new = Generation(base.gen + 1, clone)
+            new.banned  # build the device mask before readers can need it
+            for hook in self._prepare_hooks:
+                hook(new)
+            self._generation = new  # the flip: one atomic reference store
+        return new, result
+
+    def add(self, vectors) -> Generation:
+        """Publish a generation with ``vectors`` inserted (facade ``add``)."""
+        return self.mutate(lambda index: index.add(vectors))[0]
+
+    def delete(self, ids) -> Generation:
+        """Publish a generation with ``ids`` tombstoned (facade ``delete``)."""
+        return self.mutate(lambda index: index.delete(ids))[0]
+
+    def compact(self) -> Generation:
+        """Publish a generation with tombstones rewired out (facade
+        ``compact``) — array shapes are preserved (retired slots keep their
+        rows), so this flip costs zero recompiles downstream."""
+        return self.mutate(lambda index: index.compact())[0]
+
+    def __repr__(self) -> str:
+        g = self._generation
+        return f"IndexHandle(gen={g.gen}, index={g.index!r})"

@@ -85,8 +85,29 @@ class SegmentRouter:
             engine.warmup()
         return self
 
-    def refresh(self) -> "SegmentRouter":
-        """Re-sync every segment engine after maintenance on the index."""
+    def refresh(self, seg_index=None) -> "SegmentRouter":
+        """Re-sync every segment engine after maintenance on the index.
+
+        ``seg_index=`` rebinds the router to a different
+        ``SegmentedAnnIndex`` object — the copy-on-write flip path
+        (DESIGN.md §13): a mutator builds the next collection version
+        privately, then swaps it in here without dropping any segment
+        engine's compiled executables (segment count must match; same-shape
+        segments re-serve with zero recompiles, grown ones retrace only
+        their own buckets)."""
+        if seg_index is not None:
+            if len(seg_index.segments) != len(self.engines):
+                raise ValueError(
+                    f"segment count changed: router has {len(self.engines)} "
+                    f"engines, new index has {len(seg_index.segments)} "
+                    "segments; build a new SegmentRouter instead"
+                )
+            self.seg_index = seg_index
+            self._centroids = np.asarray(seg_index.centroids, np.float64)
+            seg_index.reranker(self.spec.rerank)
+            for engine, seg in zip(self.engines, seg_index.segments):
+                engine.refresh(index=seg)
+            return self
         for engine in self.engines:
             engine.refresh()
         return self

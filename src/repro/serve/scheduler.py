@@ -1,146 +1,85 @@
-"""Micro-batching request scheduler (DESIGN.md §9).
+"""Deprecated micro-batching scheduler — now a shim over the runtime.
 
-Serving traffic arrives as single queries; the hardware (and the whole
-compact-code pipeline) wants dense blocks. This is the serving twin of the
-build engine's width-W beam: where the beam batches W vertex expansions into
-one (W·R, M) distance block, the scheduler coalesces up to ``max_batch``
-concurrent requests into one padded (Q, d) block through the
-:class:`~repro.serve.engine.SearchEngine` — one dense pass through
-``flash_scan_batch`` instead of Q slivers.
+:class:`MicroBatcher` was the original serving front-end (DESIGN.md §9): one
+worker coalescing single queries into engine-sized blocks. The
+continuous-batching :class:`~repro.serve.runtime.Runtime` (DESIGN.md §13)
+subsumes it — same coalescing, plus deadline-ordered packing, admission
+control, and copy-on-write index mutation — so this class survives only as
+a thin deprecated wrapper that preserves the old constructor and semantics:
 
-Deadline semantics: the FIRST request of a forming batch starts a
-``max_wait_ms`` clock. The batch is dispatched as soon as it reaches
-``max_batch`` *or* the clock expires — so an isolated request pays at most
-``max_wait_ms`` of queueing latency, and a busy stream pays ~none (the
-bucket fills first). Requests never starve: every submitted query is served
-exactly once, in arrival order, including on :meth:`close` (the queue drains
-before the worker exits).
+  * ``MicroBatcher(engine, max_wait_ms=…, max_batch=…)`` over an existing
+    :class:`~repro.serve.engine.SearchEngine`;
+  * the FIRST request of a forming batch starts the ``max_wait_ms`` clock,
+    dispatch on fill-or-expiry, strict drain on :meth:`close`;
+  * ``submit`` returns a Future of a per-request ``SearchResult`` whose
+    cost counters are the batch's per-padded-slot average;
+  * no deadlines, no shedding, no queue limit — exactly the old contract.
 
-Thread model: one daemon worker owns the engine call; ``submit`` is
-thread-safe and returns a ``concurrent.futures.Future`` resolving to a
-per-request ``SearchResult`` (ids (k,), dists (k,), n_dists = the batch's
-per-query average).
+New code should construct :class:`~repro.serve.runtime.Runtime` directly.
 """
 
 from __future__ import annotations
 
-import threading
-import time
+import warnings
 from concurrent.futures import Future
 
-import numpy as np
-
 from repro.graph.hnsw import SearchResult
+from repro.serve.runtime import Runtime
 
 
 class MicroBatcher:
-    """Coalesce single-query requests into engine-sized blocks.
+    """Deprecated: coalesce single-query requests into engine-sized blocks.
 
-    Usage::
+    Usage (legacy)::
 
         engine = SearchEngine(index, k=10, ef=64).warmup()
         with MicroBatcher(engine, max_wait_ms=2.0) as mb:
             futs = [mb.submit(q) for q in queries]
             results = [f.result() for f in futs]
+
+    Every call forwards to an internal :class:`Runtime` configured with an
+    unbounded queue and no deadlines, which reproduces the original
+    behavior exactly (arrival-order dispatch, drain-on-close, identical
+    error messages and ``stats()`` keys).
     """
 
     def __init__(self, engine, *, max_wait_ms: float = 2.0, max_batch: int | None = None):
-        if max_wait_ms < 0:
-            raise ValueError(f"max_wait_ms must be >= 0, got {max_wait_ms}")
-        self.engine = engine
-        self.max_wait = float(max_wait_ms) / 1e3
-        self.max_batch = int(max_batch or engine.q_buckets[-1])
-        if self.max_batch < 1:
-            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
-        self._cv = threading.Condition()
-        self._pending: list = []  # (query np (d,), Future)
-        self._closed = False
-        self._n_batches = 0
-        self._batch_sizes: list = []
-        self._worker = threading.Thread(
-            target=self._loop, name="microbatcher", daemon=True
+        warnings.warn(
+            "MicroBatcher is deprecated; use repro.serve.Runtime, which "
+            "adds deadline scheduling, admission control, and "
+            "copy-on-write index mutation (DESIGN.md §13)",
+            DeprecationWarning,
+            stacklevel=2,
         )
-        self._worker.start()
+        self._rt = Runtime(engine=engine, max_wait_ms=max_wait_ms, max_batch=max_batch)
+
+    @property
+    def engine(self):
+        return self._rt.engine
+
+    @property
+    def max_wait(self) -> float:
+        return self._rt.max_wait
+
+    @property
+    def max_batch(self) -> int:
+        return self._rt.max_batch
 
     # ---- client side ----------------------------------------------------
 
     def submit(self, query) -> Future:
         """Enqueue one query vector; returns a Future of its SearchResult."""
-        q = np.asarray(query, np.float32)
-        if q.ndim != 1:
-            raise ValueError(
-                f"submit takes a single (d,) query, got shape {q.shape}; "
-                "batches go straight to SearchEngine.search"
-            )
-        fut: Future = Future()
-        with self._cv:
-            if self._closed:
-                raise RuntimeError("MicroBatcher is closed")
-            self._pending.append((q, fut))
-            self._cv.notify_all()
-        return fut
+        return self._rt.submit(query)
 
     def search(self, query, timeout: float | None = None) -> SearchResult:
         """Blocking convenience wrapper around :meth:`submit`."""
-        return self.submit(query).result(timeout)
-
-    # ---- worker side ----------------------------------------------------
-
-    def _loop(self) -> None:
-        while True:
-            with self._cv:
-                while not self._pending and not self._closed:
-                    self._cv.wait()
-                if not self._pending and self._closed:
-                    return
-                # First request of the batch starts the deadline clock.
-                deadline = time.perf_counter() + self.max_wait
-                while len(self._pending) < self.max_batch and not self._closed:
-                    left = deadline - time.perf_counter()
-                    if left <= 0:
-                        break
-                    self._cv.wait(left)
-                batch = self._pending[: self.max_batch]
-                del self._pending[: self.max_batch]
-            self._serve(batch)
-
-    def _serve(self, batch: list) -> None:
-        try:
-            block = np.stack([q for q, _ in batch])
-            res = self.engine.search(block)
-            ids = np.asarray(res.ids)
-            dists = np.asarray(res.dists)
-            # n_dists covers the padded block; every padded row runs the
-            # same program, so the honest per-query cost divides by the
-            # dispatched slot count, not the real batch size
-            slots = self.engine.padded_queries(len(batch))
-            per_query = float(res.n_dists) / slots
-            per_scan = float(res.n_scan) / slots
-            per_rerank = float(res.n_rerank) / slots
-            self._n_batches += 1
-            self._batch_sizes.append(len(batch))
-            for i, (_, fut) in enumerate(batch):
-                fut.set_result(
-                    SearchResult(
-                        ids=ids[i], dists=dists[i],
-                        n_dists=np.float32(per_query),
-                        n_scan=np.float32(per_scan),
-                        n_rerank=np.float32(per_rerank),
-                    )
-                )
-        except BaseException as exc:  # noqa: BLE001 — fail the waiters, not the worker
-            for _, fut in batch:
-                if not fut.done():
-                    fut.set_exception(exc)
+        return self._rt.search(query, timeout)
 
     # ---- lifecycle / telemetry ------------------------------------------
 
     def close(self) -> None:
         """Drain the queue, serve everything pending, stop the worker."""
-        with self._cv:
-            self._closed = True
-            self._cv.notify_all()
-        self._worker.join()
+        self._rt.close()
 
     def __enter__(self) -> "MicroBatcher":
         return self
@@ -149,10 +88,6 @@ class MicroBatcher:
         self.close()
 
     def stats(self) -> dict:
-        sizes = np.asarray(self._batch_sizes, np.float64)
-        return {
-            "batches": self._n_batches,
-            "requests": int(sizes.sum()) if sizes.size else 0,
-            "mean_batch": float(sizes.mean()) if sizes.size else 0.0,
-            "max_batch_seen": int(sizes.max()) if sizes.size else 0,
-        }
+        """The legacy four-key surface (the runtime exports the full set)."""
+        stats = self._rt.stats()
+        return {k: stats[k] for k in ("batches", "requests", "mean_batch", "max_batch_seen")}

@@ -1,0 +1,550 @@
+"""Tests for the continuous-batching serving runtime (DESIGN.md §13).
+
+Contracts:
+  1. ``AnnIndex.clone`` is a fully independent copy: mutations on the clone
+     never touch the source (arrays, tombstones, or search results).
+  2. ``IndexHandle`` is RCU: generation numbers are monotonic, published
+     generations are immutable (a pinned generation keeps serving its
+     snapshot bit-exactly across later flips), a raising mutation publishes
+     nothing, and prepare hooks see the clone before readers can.
+  3. ``SearchEngine`` serves pinned generations through the same executable
+     table (``view=``) and rebinds across flips (``refresh(index=…)``)
+     with zero steady-state recompiles for shape-preserving flips.
+  4. ``Runtime`` packs coalesced requests bit-identically to a direct
+     batched search, drains on close, rejects at the door (queue depth),
+     sheds expired deadlines before compute, and keeps the admission
+     arithmetic exact: ``admitted == served + shed + pending``.
+  5. The RCU stress test: a mutator continuously flipping generations
+     (each flip atomically add-new-sentinel + delete-old-sentinel) races
+     reader threads; every result set must be consistent with exactly one
+     published generation — exactly one live sentinel visible, never two
+     (half-applied add) and never the torn orderings in between.
+  6. ``MicroBatcher`` survives as a deprecated wrapper: same results, same
+     error messages, same stats keys, plus a ``DeprecationWarning``.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+import warnings
+
+import numpy as np
+import pytest
+
+from repro import serve
+from repro.graph.hnsw import HNSWParams
+from repro.index import AnnIndex, SearchSpec
+from repro.serve.admission import AdmissionConfig, AdmissionController
+from tests.conftest import make_clustered
+
+PARAMS = HNSWParams(r_upper=4, r_base=8, ef=16, batch=32, max_layers=2)
+N_BASE, N_GROW, N_Q = 240, 24, 16
+DIM = 16
+
+
+@pytest.fixture(scope="module")
+def runtime_data():
+    x = make_clustered(N_BASE + N_GROW + N_Q, DIM, n_clusters=12, seed=11)
+    x = np.asarray(x, np.float32)
+    return (
+        x[:N_BASE],
+        x[N_BASE:N_BASE + N_GROW],
+        x[N_BASE + N_GROW:],
+    )
+
+
+@pytest.fixture(scope="module")
+def fp32_idx(runtime_data):
+    data, _, _ = runtime_data
+    return AnnIndex.build(data, algo="hnsw", backend="fp32", params=PARAMS)
+
+
+class TestClone:
+    def test_clone_is_independent(self, runtime_data, fp32_idx):
+        _, growth, queries = runtime_data
+        before = np.asarray(fp32_idx.search(queries, k=5, ef=24).ids)
+        clone = fp32_idx.clone()
+        clone.add(growth)
+        clone.delete([0, 1, 2])
+        assert clone.n == fp32_idx.n + N_GROW
+        assert fp32_idx.n == N_BASE, "clone mutation leaked into the source"
+        assert fp32_idx.deleted_ids.size == 0
+        after = np.asarray(fp32_idx.search(queries, k=5, ef=24).ids)
+        np.testing.assert_array_equal(before, after)
+
+    def test_clone_searches_bit_identically(self, runtime_data, fp32_idx):
+        _, _, queries = runtime_data
+        clone = fp32_idx.clone()
+        a = fp32_idx.search(queries, k=5, ef=24)
+        b = clone.search(queries, k=5, ef=24)
+        np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+        np.testing.assert_array_equal(np.asarray(a.dists), np.asarray(b.dists))
+
+
+class TestIndexHandle:
+    def test_rejects_snapshotless_objects(self):
+        with pytest.raises(TypeError, match="export_state"):
+            serve.IndexHandle(object())
+
+    def test_flips_are_monotonic_and_immutable(self, runtime_data, fp32_idx):
+        _, growth, queries = runtime_data
+        handle = serve.IndexHandle(fp32_idx)
+        g0 = handle.current
+        assert g0.gen == 0 and g0.index is fp32_idx
+        before = np.asarray(g0.index.search(queries, k=5, ef=24).ids)
+
+        g1 = handle.add(growth)
+        assert g1.gen == 1 and handle.current is g1
+        assert g1.index is not fp32_idx
+        assert g1.index.n == N_BASE + N_GROW
+
+        victim = int(before[0, 0])
+        g2 = handle.delete([victim])
+        assert g2.gen == 2 and handle.generation == 2
+        assert bool(g2.banned[victim])
+
+        # published generations never mutate: gen-0 still serves the
+        # original snapshot bit-exactly, nothing banned, original n
+        assert g0.index.n == N_BASE
+        assert not bool(g0.banned.any())
+        after = np.asarray(g0.index.search(queries, k=5, ef=24).ids)
+        np.testing.assert_array_equal(before, after)
+        # and gen-1 (pinned mid-history) never saw the delete
+        assert not bool(g1.banned[victim])
+
+    def test_raising_mutation_publishes_nothing(self, fp32_idx):
+        handle = serve.IndexHandle(fp32_idx)
+
+        def bad(index):
+            index.delete([0])
+            raise RuntimeError("boom")
+
+        with pytest.raises(RuntimeError, match="boom"):
+            handle.mutate(bad)
+        assert handle.generation == 0
+        assert handle.current.index is fp32_idx
+        assert fp32_idx.deleted_ids.size == 0
+
+    def test_prepare_hook_runs_before_flip(self, runtime_data, fp32_idx):
+        _, growth, _ = runtime_data
+        handle = serve.IndexHandle(fp32_idx)
+        seen = []
+
+        def hook(gen):
+            # the clone is fully built but not yet published
+            seen.append((gen.gen, gen.index.n, handle.generation))
+
+        handle.on_prepare(hook)
+        handle.add(growth)
+        assert seen == [(1, N_BASE + N_GROW, 0)]
+
+
+class TestEngineViews:
+    def test_view_parity_and_refresh_keeps_executables(
+        self, runtime_data, fp32_idx
+    ):
+        _, growth, queries = runtime_data
+        engine = serve.SearchEngine(
+            fp32_idx, k=5, ef=24, q_buckets=(1, 8)
+        ).warmup()
+        handle = serve.IndexHandle(fp32_idx)
+        g0 = handle.current
+        g1 = handle.add(growth)
+
+        # a grown generation retraces once per bucket — paid via warm_view
+        # off the request path — then serves warm
+        engine.warm_view(g1)
+        n_compiles = engine.n_compiles
+        res = engine.search(queries[:8], view=g1)
+        assert engine.n_compiles == n_compiles
+        direct = g1.index.search(queries[:8], k=5, ef=24)
+        np.testing.assert_array_equal(
+            np.asarray(res.ids), np.asarray(direct.ids)
+        )
+
+        # the pinned old generation still serves through the same engine
+        res0 = engine.search(queries[:8], view=g0)
+        direct0 = fp32_idx.search(queries[:8], k=5, ef=24)
+        np.testing.assert_array_equal(
+            np.asarray(res0.ids), np.asarray(direct0.ids)
+        )
+
+        # rebinding the default index across the flip keeps every compiled
+        # executable: serving the new generation costs zero further traces
+        engine.refresh(index=g1.index)
+        engine.search(queries[:8])
+        engine.search(queries[0])
+        assert engine.n_compiles == n_compiles
+
+    def test_shape_preserving_flip_is_compile_free(
+        self, runtime_data, fp32_idx
+    ):
+        _, _, queries = runtime_data
+        engine = serve.SearchEngine(
+            fp32_idx, k=5, ef=24, q_buckets=(1, 8)
+        ).warmup()
+        handle = serve.IndexHandle(fp32_idx)
+        n_compiles = engine.n_compiles
+        g1 = handle.delete([3, 4])
+        engine.warm_view(g1)  # no-op: same shapes
+        engine.refresh(index=g1.index)
+        res = engine.search(queries[:8])
+        assert engine.n_compiles == n_compiles, (
+            "delete flip recompiled despite unchanged array shapes"
+        )
+        ids = np.asarray(res.ids)
+        assert 3 not in ids and 4 not in ids
+
+
+class TestRuntime:
+    def test_packed_results_match_direct_batch(self, runtime_data, fp32_idx):
+        _, _, queries = runtime_data
+        with serve.Runtime(
+            fp32_idx, k=5, ef=24, q_buckets=(1, 8), max_wait_ms=100.0
+        ) as rt:
+            rt.warmup()
+            futs = [rt.submit(queries[i]) for i in range(12)]
+            results = [f.result(timeout=30) for f in futs]
+            direct = np.asarray(
+                rt.engine.search(queries[:12], record=False).ids
+            )
+            for i, res in enumerate(results):
+                np.testing.assert_array_equal(np.asarray(res.ids), direct[i])
+                assert float(res.n_dists) > 0
+            stats = rt.stats()
+        assert stats["requests"] == 12
+        assert stats["batches"] < 12, "nothing was coalesced"
+        assert stats["max_batch_seen"] >= 2
+        assert stats["admitted"] == 12
+        assert stats["served"] == 12
+        assert stats["shed"] == stats["rejected"] == 0
+        assert stats["cold_dispatches"] == 0
+        assert stats["p99_ms"] >= stats["p50_ms"] >= 0.0
+
+    def test_drain_on_close(self, runtime_data, fp32_idx):
+        _, _, queries = runtime_data
+        rt = serve.Runtime(
+            fp32_idx, k=5, ef=24, q_buckets=(1, 8), max_wait_ms=2000.0
+        ).warmup()
+        futs = [rt.submit(queries[i]) for i in range(6)]
+        rt.close()  # must serve all six, not abandon them
+        for f in futs:
+            assert f.done()
+            assert f.result(0).ids.shape == (5,)
+        stats = rt.stats()
+        assert stats["served"] == 6
+        assert stats["admitted"] == stats["served"] + stats["shed"]
+        assert stats["pending"] == 0
+        with pytest.raises(RuntimeError, match="closed"):
+            rt.submit(queries[0])
+        with pytest.raises(RuntimeError, match="closed"):
+            rt.add(queries[:2])
+
+    def test_submit_validates_single_query(self, runtime_data, fp32_idx):
+        _, _, queries = runtime_data
+        with serve.Runtime(fp32_idx, k=5, ef=24, q_buckets=(1,)) as rt:
+            with pytest.raises(ValueError, match="single"):
+                rt.submit(queries[:2])
+
+    def test_queue_depth_rejects_at_the_door(self, runtime_data, fp32_idx):
+        _, _, queries = runtime_data
+        with serve.Runtime(
+            fp32_idx, k=5, ef=24, q_buckets=(1,), max_queue=0
+        ) as rt:
+            with pytest.raises(serve.QueueFullError, match="queue full"):
+                rt.submit(queries[0])
+            stats = rt.stats()
+        assert stats["rejected"] == 1
+        assert stats["admitted"] == 0, "a rejected request was admitted"
+
+    def test_expired_deadline_sheds_before_compute(
+        self, runtime_data, fp32_idx
+    ):
+        _, _, queries = runtime_data
+        with serve.Runtime(
+            fp32_idx, k=5, ef=24, q_buckets=(1, 8), max_wait_ms=50.0
+        ) as rt:
+            rt.warmup()
+            rt.reset_stats()
+            dead = rt.submit(queries[0], deadline_ms=0.0)
+            with pytest.raises(serve.DeadlineExceededError):
+                dead.result(timeout=30)
+            live = [rt.submit(q) for q in queries[1:5]]
+            for f in live:
+                assert f.result(timeout=30).ids.shape == (5,)
+            stats = rt.stats()
+        assert stats["shed"] == 1
+        assert stats["served"] == 4
+        assert stats["admitted"] == stats["served"] + stats["shed"]
+        assert stats["shed_rate"] == pytest.approx(1 / 5)
+        assert stats["cold_dispatches"] == 0
+
+    def test_mutations_flip_generations_and_stay_warm(
+        self, runtime_data, fp32_idx
+    ):
+        _, growth, queries = runtime_data
+        with serve.Runtime(
+            fp32_idx, k=5, ef=24, q_buckets=(1, 8), max_wait_ms=5.0
+        ) as rt:
+            rt.warmup()
+            assert rt.generation == 0
+            rt.add(growth).result(timeout=120)
+            assert rt.generation == 1
+            assert rt.engine.index.n == N_BASE + N_GROW
+            assert fp32_idx.n == N_BASE, "runtime mutated the live index"
+
+            # the grown generation was pre-warmed on the mutator thread:
+            # searches after the flip hit only compiled executables
+            r = rt.search(queries[0], 30)
+            assert r.ids.shape == (5,)
+            victim = int(np.asarray(r.ids)[0])
+            n_compiles = rt.engine.n_compiles
+
+            rt.delete([victim]).result(timeout=120)
+            assert rt.generation == 2
+            ids = np.asarray(rt.search(queries[0], 30).ids)
+            assert victim not in ids
+            rt.compact().result(timeout=120)
+            assert rt.generation == 3
+            ids = np.asarray(rt.search(queries[0], 30).ids)
+            assert victim not in ids
+            stats = rt.stats()
+            # delete + compact preserve array shapes: zero recompiles, and
+            # no request ever hit a cold executable
+            assert rt.engine.n_compiles == n_compiles
+        assert stats["cold_dispatches"] == 0
+        assert stats["generation"] == 3
+
+    def test_atomic_multi_op_mutation(self, runtime_data, fp32_idx):
+        _, growth, _ = runtime_data
+        with serve.Runtime(fp32_idx, k=5, ef=24, q_buckets=(1,)) as rt:
+            gen_before = rt.generation
+
+            def swap(index):
+                index.add(growth[:1])
+                return index.delete([0])
+
+            ndel = rt.mutate(swap).result(timeout=120)
+            assert ndel == 1
+            # add + delete landed as ONE generation flip
+            assert rt.generation == gen_before + 1
+            gen = rt.handle.current
+            assert gen.index.n == N_BASE + 1
+            assert bool(gen.banned[0])
+
+    def test_failed_mutation_leaves_generation_unchanged(
+        self, runtime_data, fp32_idx
+    ):
+        with serve.Runtime(fp32_idx, k=5, ef=24, q_buckets=(1,)) as rt:
+            gen_before = rt.generation
+
+            def bad(index):
+                raise ValueError("rejected payload")
+
+            fut = rt.mutate(bad)
+            with pytest.raises(ValueError, match="rejected payload"):
+                fut.result(timeout=120)
+            assert rt.generation == gen_before
+
+    def test_reader_pinned_generation_survives_flips(
+        self, runtime_data, fp32_idx
+    ):
+        """Deterministic snapshot isolation: a generation pinned before a
+        delete keeps returning the deleted id; the post-flip generation
+        never does."""
+        _, _, queries = runtime_data
+        with serve.Runtime(
+            fp32_idx, k=5, ef=24, q_buckets=(1, 8)
+        ) as rt:
+            rt.warmup()
+            pinned = rt.handle.current
+            victim = int(np.asarray(rt.search(queries[0], 30).ids)[0])
+            rt.delete([victim]).result(timeout=120)
+            # the old snapshot still serves the victim through the shared
+            # engine; the current generation bans it
+            old = np.asarray(
+                rt.engine.search(queries[0], view=pinned, record=False).ids
+            )
+            new = np.asarray(rt.search(queries[0], 30).ids)
+            assert victim in old
+            assert victim not in new
+
+
+class TestRCUStress:
+    """Readers race a continuously-flipping mutator.
+
+    Every generation holds exactly ONE live sentinel vector, planted on
+    top of the query point (generation g's flip atomically adds sentinel g
+    and deletes sentinel g−1). A result set may therefore contain exactly
+    one sentinel id:
+
+      * two sentinels  → the reader saw an add without its paired delete
+        (half-applied mutation — the bug RCU exists to prevent);
+      * zero sentinels → the paired delete without its add (the other
+        torn ordering; the sentinel sits ~0 distance from the query, so
+        recall cannot miss it);
+      * sentinel g−1 after sentinel g was observed by the same thread →
+        a generation went backwards.
+    """
+
+    G_FLIPS = 4
+    READERS = 2
+
+    def test_readers_never_observe_torn_generations(self):
+        rng = np.random.default_rng(23)
+        corpus = make_clustered(N_BASE, DIM, n_clusters=12, seed=29)
+        corpus = np.asarray(corpus, np.float32)
+        probe = corpus.mean(axis=0) + 6.0  # offset, but well within reach
+        sentinels = probe[None, :] + rng.normal(
+            scale=1e-3, size=(self.G_FLIPS + 1, DIM)
+        ).astype(np.float32)
+        base = np.concatenate([corpus, sentinels[:1]])
+        idx = AnnIndex.build(base, algo="hnsw", backend="fp32", params=PARAMS)
+        sentinel_ids = set(range(N_BASE, N_BASE + self.G_FLIPS + 1))
+
+        failures: list = []
+        observed: list = []
+        done = threading.Event()
+
+        def read_loop(tid: int, rt: serve.Runtime) -> None:
+            last_seen, i = -1, 0
+            # hammer until every flip has published, so reads genuinely
+            # overlap the clone/apply/warm/flip cycles
+            while not done.is_set():
+                res = rt.search(probe, 60)
+                ids = [int(v) for v in np.asarray(res.ids)]
+                live = [v for v in ids if v in sentinel_ids]
+                if len(live) != 1:
+                    failures.append(
+                        f"reader {tid} read {i}: expected exactly one live "
+                        f"sentinel, got {live} in {ids}"
+                    )
+                elif (g_obs := live[0] - N_BASE) < last_seen:
+                    failures.append(
+                        f"reader {tid} read {i}: generation went backwards "
+                        f"({last_seen} -> {g_obs})"
+                    )
+                else:
+                    last_seen = g_obs
+                    observed.append(g_obs)
+                i += 1
+
+        with serve.Runtime(
+            idx, k=4, ef=24, q_buckets=(1, 8), max_wait_ms=1.0
+        ) as rt:
+            rt.warmup()
+            readers = [
+                threading.Thread(target=read_loop, args=(t, rt))
+                for t in range(self.READERS)
+            ]
+            for t in readers:
+                t.start()
+            try:
+                # the mutator: G atomic sentinel swaps racing the readers.
+                # Sentinel g's id is deterministic (ids are allocated densely
+                # and mutations apply in submit order): N_BASE + g.
+                for g in range(1, self.G_FLIPS + 1):
+                    def swap(index, g=g):
+                        index.add(sentinels[g:g + 1])
+                        index.delete([N_BASE + g - 1])
+
+                    rt.mutate(swap).result(timeout=300)
+            finally:
+                done.set()
+            for t in readers:
+                t.join(timeout=300)
+            assert not any(t.is_alive() for t in readers)
+            stats = rt.stats()
+
+        assert not failures, "\n".join(failures)
+        # the race was real: reads landed on more than one generation …
+        assert len(set(observed)) > 1, (
+            f"stress test raced nothing: all reads saw generation "
+            f"{set(observed)}"
+        )
+        # … every flip published while readers were live …
+        assert stats["generation"] == self.G_FLIPS
+        # … and the books balance across the race
+        assert stats["served"] == len(observed) + len(failures)
+        assert stats["admitted"] == stats["served"] + stats["shed"]
+
+
+class TestAdmissionController:
+    def test_config_validation(self):
+        with pytest.raises(ValueError, match="max_queue"):
+            AdmissionConfig(max_queue=-1)
+        with pytest.raises(ValueError, match="default_deadline_ms"):
+            AdmissionConfig(default_deadline_ms=-5.0)
+
+    def test_deadline_resolution(self):
+        ctl = AdmissionController(AdmissionConfig(default_deadline_ms=40.0))
+        assert ctl.deadline_for(10.0, now=100.0) == pytest.approx(100.010)
+        assert ctl.deadline_for(None, now=100.0) == pytest.approx(100.040)
+        assert AdmissionController().deadline_for(None) is None
+        with pytest.raises(ValueError, match="deadline_ms"):
+            ctl.deadline_for(-1.0)
+
+    def test_shed_and_serve_arithmetic(self):
+        ctl = AdmissionController(AdmissionConfig(max_queue=2))
+        ctl.admit(0)
+        ctl.admit(1)
+        with pytest.raises(serve.QueueFullError):
+            ctl.admit(2)
+        ctl.shed()
+        ctl.record_served(0.002, 0.001, missed=True)
+        stats = ctl.stats()
+        assert stats["admitted"] == 2
+        assert stats["rejected"] == 1
+        assert stats["shed"] == 1
+        assert stats["served"] == 1
+        assert stats["deadline_misses"] == 1
+        assert stats["admitted"] == stats["served"] + stats["shed"]
+        assert stats["shed_rate"] == pytest.approx(0.5)
+        assert stats["p50_ms"] == pytest.approx(3.0)
+        assert stats["queue_p50_ms"] == pytest.approx(2.0)
+        assert stats["service_p50_ms"] == pytest.approx(1.0)
+        assert stats["queue_p99_ms"] >= stats["queue_p50_ms"]
+        ctl.reset_stats()
+        zeroed = ctl.stats()
+        assert zeroed["admitted"] == zeroed["served"] == zeroed["shed"] == 0
+        assert zeroed["p99_ms"] == 0.0
+
+
+class TestDeprecatedMicroBatcher:
+    def test_warns_and_preserves_legacy_surface(self, runtime_data, fp32_idx):
+        _, _, queries = runtime_data
+        engine = serve.SearchEngine(
+            fp32_idx, k=5, ef=24, q_buckets=(1, 8)
+        ).warmup()
+        with pytest.warns(DeprecationWarning, match="Runtime"):
+            mb = serve.MicroBatcher(engine, max_wait_ms=50.0)
+        with mb:
+            futs = [mb.submit(queries[i]) for i in range(6)]
+            results = [f.result(timeout=30) for f in futs]
+        direct = np.asarray(
+            engine.search(queries[:6], record=False).ids
+        )
+        for i, res in enumerate(results):
+            np.testing.assert_array_equal(np.asarray(res.ids), direct[i])
+        stats = mb.stats()
+        assert set(stats) == {
+            "batches", "requests", "mean_batch", "max_batch_seen",
+        }
+        assert stats["requests"] == 6
+        with pytest.raises(RuntimeError, match="closed"):
+            mb.submit(queries[0])
+
+    def test_wrapper_never_sheds_or_rejects(self, runtime_data, fp32_idx):
+        """The legacy contract: no deadlines, no queue limit."""
+        _, _, queries = runtime_data
+        engine = serve.SearchEngine(fp32_idx, k=5, ef=24, q_buckets=(1, 8))
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            with serve.MicroBatcher(engine, max_wait_ms=1.0) as mb:
+                futs = [mb.submit(queries[i]) for i in range(10)]
+                for f in futs:
+                    assert f.result(timeout=30).ids.shape == (5,)
+                inner = mb._rt.stats()
+        assert inner["shed"] == inner["rejected"] == 0
+        assert inner["served"] == 10

@@ -246,7 +246,12 @@ class TestSearchEngine:
         assert (hits >= N_BASE).any(), "added ids were struck as tombstones"
 
 
+@pytest.mark.filterwarnings("ignore::DeprecationWarning")
 class TestMicroBatcher:
+    """Legacy surface — MicroBatcher is now a deprecated wrapper over
+    ``serve.Runtime`` (the warning itself is asserted in
+    tests/test_runtime.py); these contracts must keep holding through it."""
+
     def test_coalesced_results_match_direct(self, serve_data):
         data, _, queries = serve_data
         idx = AnnIndex.build(data, algo="hnsw", backend="fp32", params=PARAMS)
