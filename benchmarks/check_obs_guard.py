@@ -1,0 +1,199 @@
+"""CI guard: observability stays unified, exact, and free when disabled.
+
+The observability layer (DESIGN.md §14) makes three promises that nothing
+in the type system enforces, so this script fails CI the moment any of
+them drifts:
+
+  * **one clock, one stats path** — serve/ code and the build engine must
+    time through ``repro.obs`` (``obs.now``, obs histograms), never by
+    growing a private ``time.perf_counter`` stats path on the side. A raw
+    ``perf_counter`` in ``src/repro/serve/*.py`` or
+    ``src/repro/graph/engine.py`` is exactly the duplicated-bookkeeping
+    drift (three ``_pcts`` copies, three clock spellings) the obs layer
+    was built to delete — the static sweep flags the literal anywhere in
+    those files, comments included, so the ban is unmissable;
+  * **exact phase attribution** — a build's per-phase distance split
+    (``BuildStats.phases``) must partition ``CostAccount.n_dists``
+    *exactly* (integer-valued f32 accumulators, no sampling): the phase
+    table is only as trustworthy as this invariant, checked here for both
+    a bulk and an incremental build;
+  * **zero-cost-when-disabled** — with obs disabled (the default), the
+    instrumented build path must cost the same as before the layer
+    existed: enabled-vs-disabled medians over alternating samples must be
+    within ``OBS_GUARD_TOL`` (default 2%) or inside an absolute noise
+    floor (0.05 s — the 2-core container's scheduler jitter exceeds any
+    real percentage at sub-second build times).
+
+The enabled run's registry snapshot + spans are dumped to
+``OBS_snapshot.json`` so CI uploads one machine-readable observability
+artifact per build.
+
+Exit 0 = all three promises hold.  Usage: PYTHONPATH=src python
+benchmarks/check_obs_guard.py
+"""
+
+from __future__ import annotations
+
+import gc
+import json
+import os
+import pathlib
+import sys
+import time
+
+import numpy as np
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+SRC = REPO / "src" / "repro"
+
+#: files where a literal perf_counter means an off-registry stats path
+BANNED_CLOCK = "perf_" "counter"  # split so this guard doesn't flag itself
+CLOCK_BAN_FILES = sorted((SRC / "serve").glob("*.py")) + [
+    SRC / "graph" / "engine.py"
+]
+
+
+def static_sweep() -> list[str]:
+    failures = []
+    for path in CLOCK_BAN_FILES:
+        for lineno, line in enumerate(path.read_text().splitlines(), 1):
+            if BANNED_CLOCK in line:
+                failures.append(
+                    f"static: {path.relative_to(REPO)}:{lineno} uses "
+                    f"{BANNED_CLOCK} directly — time through obs.now() / "
+                    f"obs histograms instead: {line.strip()!r}"
+                )
+    return failures
+
+
+def _phase_exactness() -> list[str]:
+    from repro.graph.hnsw import HNSWParams
+    from repro.graph.index import AnnIndex
+
+    failures = []
+    rng = np.random.default_rng(0)
+    data = rng.normal(size=(600, 32)).astype(np.float32)
+    params = HNSWParams(r_upper=4, r_base=8, ef=16, batch=32, max_layers=2)
+    kw = dict(d_f=32, m_f=16, l_f=4, h=8, kmeans_iters=5)
+    for strategy in ("incremental", "bulk"):
+        idx = AnnIndex.build(
+            data, algo="hnsw", strategy=strategy, params=params,
+            backend_kwargs=kw,
+        )
+        stats = idx.last_stats
+        if stats.phases is None:
+            failures.append(
+                f"phases: {strategy} build returned phases=None — the "
+                "per-phase split is gone"
+            )
+            continue
+        phases = np.asarray(stats.phases, np.float64)
+        psum, total = float(phases.sum()), float(stats.n_dists)
+        if psum != total:
+            failures.append(
+                f"phases: {strategy} build phase split {psum} != n_dists "
+                f"{total} — the partition must be exact, not approximate"
+            )
+    return failures
+
+
+def _build_once(data, params, kw):
+    import jax
+
+    from repro.graph.index import AnnIndex
+
+    idx = AnnIndex.build(
+        data, algo="hnsw", strategy="incremental", params=params,
+        backend_kwargs=kw,
+    )
+    # Block on the device graph: without this the disabled arm measures
+    # async dispatch while the enabled arm syncs in _record_build, and the
+    # "overhead" reading is pure measurement skew.
+    jax.block_until_ready(idx.graph)
+    return idx
+
+
+def overhead_check() -> list[str]:
+    """Instrumented-vs-disabled build medians on the tier-1 smoke config."""
+    from repro import obs
+    from repro.graph.hnsw import HNSWParams
+
+    tol = float(os.environ.get("OBS_GUARD_TOL", "0.02"))
+    noise_floor_s = 0.05
+
+    rng = np.random.default_rng(1)
+    data = rng.normal(size=(1500, 32)).astype(np.float32)
+    params = HNSWParams(r_upper=8, r_base=16, ef=32, batch=32, max_layers=3)
+    kw = dict(d_f=32, m_f=16, l_f=4, h=8, kmeans_iters=5)
+
+    was_enabled = obs.enabled()
+    on: list[float] = []
+    off: list[float] = []
+    try:
+        obs.disable()
+        _build_once(data, params, kw)  # warm every jit cache first
+        for _ in range(5):  # alternate so drift hits both arms equally
+            for enabled, sink in ((False, off), (True, on)):
+                obs.enable() if enabled else obs.disable()
+                gc.collect()
+                t0 = time.monotonic()
+                _build_once(data, params, kw)
+                sink.append(time.monotonic() - t0)
+    finally:
+        obs.enable() if was_enabled else obs.disable()
+
+    med_on, med_off = float(np.median(on)), float(np.median(off))
+    ratio = med_on / med_off if med_off else float("inf")
+    delta = med_on - med_off
+    print(
+        f"overhead: disabled={med_off:.3f}s enabled={med_on:.3f}s "
+        f"ratio={ratio:.4f} (tol {1 + tol:.2f}x or {noise_floor_s}s floor)"
+    )
+    if ratio > 1.0 + tol and delta > noise_floor_s:
+        return [
+            f"overhead: obs-enabled build median {med_on:.3f}s is "
+            f"{ratio:.3f}x the disabled median {med_off:.3f}s — exceeds "
+            f"both the {1 + tol:.2f}x tolerance and the "
+            f"{noise_floor_s}s noise floor"
+        ]
+    return []
+
+
+def dump_snapshot(path: str = "OBS_snapshot.json") -> None:
+    """One enabled end-to-end pass; dump registry + spans for CI upload."""
+    from repro import obs
+    from repro.obs import report
+
+    was_enabled = obs.enabled()
+    obs.enable()
+    obs.clear_spans()
+    try:
+        _phase_exactness_artifacts = _phase_exactness()  # spans re-recorded
+        del _phase_exactness_artifacts
+        with open(path, "w") as f:
+            json.dump(report.json_dump(), f, indent=2, sort_keys=True)
+    finally:
+        obs.enable() if was_enabled else obs.disable()
+    print(f"wrote {path}")
+
+
+def main() -> int:
+    failures = static_sweep()
+    failures += _phase_exactness()
+    failures += overhead_check()
+    if not failures:
+        dump_snapshot()
+    if failures:
+        print("obs guard FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print(
+        "obs guard OK (clock ban in serve/+engine, exact phase partition, "
+        "disabled-mode overhead within tolerance)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

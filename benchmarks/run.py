@@ -34,8 +34,10 @@ Roofline terms per (arch × shape) come from the dry-run, not this harness:
 """
 
 import argparse
+import datetime
 import json
 import pathlib
+import subprocess
 import sys
 import traceback
 
@@ -180,6 +182,31 @@ JSON_SUITES = {
 }
 
 
+def _run_meta(only: str, repeats: int) -> dict:
+    """Provenance stamp for every BENCH_*.json: without the producing
+    commit and toolchain version, cross-PR perf trajectories can't be
+    diffed trustworthily."""
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=pathlib.Path(__file__).resolve().parents[1],
+            capture_output=True, text=True, timeout=10, check=True,
+        ).stdout.strip()
+    except Exception:  # noqa: BLE001 — no git / not a checkout
+        sha = None
+    import jax
+
+    return {
+        "git_sha": sha,
+        "timestamp_utc": datetime.datetime.now(
+            datetime.timezone.utc
+        ).isoformat(timespec="seconds"),
+        "jax_version": jax.__version__,
+        "suite": only,
+        "repeats": repeats,
+    }
+
+
 def run_json(path: str, only: str, repeats: int) -> None:
     """Machine-readable perf snapshot (build/serve trajectory across PRs).
 
@@ -194,6 +221,10 @@ def run_json(path: str, only: str, repeats: int) -> None:
         )
     print("name,us_per_call,derived")
     payload, warnings = suite(repeats)
+    payload["meta"] = _run_meta(only, repeats)
+    from repro import obs
+
+    payload["obs"] = obs.snapshot()
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
     print(f"wrote {path}", file=sys.stderr)

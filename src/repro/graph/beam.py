@@ -37,6 +37,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro import obs
+
 INF = jnp.float32(jnp.inf)
 
 
@@ -144,6 +146,8 @@ def beam_search(
             f"fused=True but {type(backend).__name__} does not support the "
             f"fused expand() path for adjacency width R={r}"
         )
+    # Trace-time dispatch counter (this Python body runs once per compile).
+    obs.tick("beam_dispatch_total", route="fused" if use_fused else "gather")
 
     valid_e = entry_ids >= 0
     safe_e = jnp.where(valid_e, entry_ids, 0)

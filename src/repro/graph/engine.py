@@ -45,8 +45,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.graph.beam import INF, BeamResult, beam_search
 from repro.graph.select import Selection, prune_list, select_neighbors
+
+#: Build phases for per-phase distance attribution (DESIGN.md §14). The
+#: CostAccount ``phases`` vector partitions ``n_dists`` over exactly these
+#: buckets — bootstrap (seed-batch scoring), upper/base-layer beam
+#: acquisition, bulk refinement rounds, and reachability repair — so the
+#: paper's "where does indexing time go" table falls out of one build.
+PHASE_NAMES = ("bootstrap", "beam_upper", "beam_base", "bulk", "repair")
+N_PHASES = len(PHASE_NAMES)
+PH_BOOTSTRAP, PH_BEAM_UPPER, PH_BEAM_BASE, PH_BULK, PH_REPAIR = range(N_PHASES)
 
 
 @dataclass(frozen=True)
@@ -105,28 +115,60 @@ class CostAccount(NamedTuple):
 
     n_dists: distance evaluations (the paper's dominant cost term).
     n_hops:  expanded vertices (≈ adjacency-row fetches).
+    phases:  (N_PHASES,) f32 per-phase split of ``n_dists`` in
+             :data:`PHASE_NAMES` order, or None for accounts built before
+             the profiler existed. Both sides are exact integer-valued
+             f32 accumulations, so ``phases.sum() == n_dists`` holds
+             exactly for any build below 2**24 evaluations per bucket.
     """
 
     n_dists: jax.Array
     n_hops: jax.Array
+    phases: jax.Array | None = None
 
     @classmethod
     def zero(cls) -> "CostAccount":
-        return cls(n_dists=jnp.float32(0), n_hops=jnp.float32(0))
+        return cls(
+            n_dists=jnp.float32(0), n_hops=jnp.float32(0),
+            phases=jnp.zeros((N_PHASES,), jnp.float32),
+        )
 
-    def add_beam(self, res: BeamResult) -> "CostAccount":
+    def add_beam(self, res: BeamResult, *, phase: int = PH_BEAM_BASE) -> "CostAccount":
         """Fold a (possibly vmapped) beam result into the account."""
+        nd = jnp.sum(res.n_dists)
         return CostAccount(
-            n_dists=self.n_dists + jnp.sum(res.n_dists),
+            n_dists=self.n_dists + nd,
             n_hops=self.n_hops + jnp.sum(res.n_hops),
+            phases=(
+                None if self.phases is None
+                else self.phases.at[phase].add(nd.astype(jnp.float32))
+            ),
+        )
+
+    def add_dists(self, n, *, phase: int, n_hops=0) -> "CostAccount":
+        """Fold raw evaluation counts in (non-beam scoring: bootstrap,
+        bulk rounds, repair) with their phase attribution."""
+        nd = jnp.float32(n)
+        return CostAccount(
+            n_dists=self.n_dists + nd,
+            n_hops=self.n_hops + jnp.float32(n_hops),
+            phases=(
+                None if self.phases is None else self.phases.at[phase].add(nd)
+            ),
         )
 
 
 class BuildStats(NamedTuple):
-    """Public build-cost summary (the CostAccount, frozen at return)."""
+    """Public build-cost summary (the CostAccount, frozen at return).
+
+    ``phases`` carries the per-phase ``n_dists`` split when the builder
+    tracked one (None otherwise — e.g. NSG, whose adapter reports no
+    stats); :data:`PHASE_NAMES` gives the bucket order.
+    """
 
     n_dists: jax.Array
     n_hops: jax.Array
+    phases: jax.Array | None = None
 
 
 def sample_levels(
@@ -342,7 +384,7 @@ class BuildEngine:
         for l in range(l_top, 0, -1):
             adj_l, adj_ld = adj_up[l - 1], adj_up_d[l - 1]
             res = self.acquire(backend, qctx, adj_l, eps)
-            acct = acct.add_beam(res)
+            acct = acct.add_beam(res, phase=PH_BEAM_UPPER)
             do = (lv >= l) & mask
             cand_ids, cand_d = _drop_self(res.ids, res.dists, new_ids)
             sel = self.select(backend, cand_ids, cand_d, r=params.r_upper)
@@ -361,7 +403,7 @@ class BuildEngine:
 
         # ---- base layer --------------------------------------------------
         res = self.acquire(backend, qctx, adj0, eps)
-        acct = acct.add_beam(res)
+        acct = acct.add_beam(res, phase=PH_BEAM_BASE)
         cand_ids, cand_d = _drop_self(res.ids, res.dists, new_ids)
         sel = self.select(backend, cand_ids, cand_d, r=params.r_base)
         sel_ids = jnp.where(mask[:, None], sel.ids, -1)
@@ -376,16 +418,30 @@ class BuildEngine:
 
     # ---- composed: exact sequential seed batch --------------------------
 
-    def bootstrap(self, data, adj0, adj0_d, adj_up, adj_up_d, backend, levels):
-        """Exact sequential insertion of the first batch (connected seed)."""
+    def bootstrap(
+        self, data, adj0, adj0_d, adj_up, adj_up_d, backend, levels,
+        *, acct: CostAccount | None = None,
+    ):
+        """Exact sequential insertion of the first batch (connected seed).
+
+        Returns the graph carry plus a :class:`CostAccount` whose
+        ``query_dists`` evaluations (p per insert, p inserts — the seed
+        batch's p² scoring) are attributed to the ``bootstrap`` phase;
+        pre-profiler callers that ignored bootstrap cost can pass and
+        discard it, but the build loops thread it so build totals now
+        cover every evaluation the engine issues.
+        """
         params = self.params
         p = min(params.batch, data.shape[0])
         cand_pool = jnp.arange(p, dtype=jnp.int32)
+        if acct is None:
+            acct = CostAccount.zero()
 
         def body(i, carry):
-            adj0, adj0_d, adj_up, adj_up_d, backend = carry
+            adj0, adj0_d, adj_up, adj_up_d, backend, acct = carry
             qctx = backend.prepare_query(data[i])
             d_all = backend.query_dists(qctx, cand_pool)  # (p,)
+            acct = acct.add_dists(p, phase=PH_BOOTSTRAP)
             for l in range(params.max_layers - 1, -1, -1):
                 r_l = params.r_base if l == 0 else params.r_upper
                 elig = (cand_pool < i) & (levels[:p] >= l) & (levels[i] >= l)
@@ -414,10 +470,10 @@ class BuildEngine:
                     )
                     adj_up = adj_up.at[l - 1].set(a)
                     adj_up_d = adj_up_d.at[l - 1].set(ad)
-            return adj0, adj0_d, adj_up, adj_up_d, backend
+            return adj0, adj0_d, adj_up, adj_up_d, backend, acct
 
         return jax.lax.fori_loop(
-            0, p, body, (adj0, adj0_d, adj_up, adj_up_d, backend)
+            0, p, body, (adj0, adj0_d, adj_up, adj_up_d, backend, acct)
         )
 
     # ---- composed: the whole layered build (HNSW and flat graphs) -------
@@ -440,7 +496,7 @@ class BuildEngine:
         adj_up = jnp.full((l_up, n, params.r_upper), -1, jnp.int32)
         adj_up_d = jnp.full((l_up, n, params.r_upper), INF)
 
-        adj0, adj0_d, adj_up, adj_up_d, backend = self.bootstrap(
+        adj0, adj0_d, adj_up, adj_up_d, backend, acct = self.bootstrap(
             data, adj0, adj0_d, adj_up, adj_up_d, backend, levels
         )
 
@@ -459,7 +515,7 @@ class BuildEngine:
 
         adj0, adj0_d, adj_up, adj_up_d, backend, acct = jax.lax.fori_loop(
             1, nb, body,
-            (adj0, adj0_d, adj_up, adj_up_d, backend, CostAccount.zero()),
+            (adj0, adj0_d, adj_up, adj_up_d, backend, acct),
         )
         return adj0, adj0_d, adj_up, adj_up_d, backend, acct
 
@@ -748,6 +804,14 @@ def bulk_refine(
         max_rounds=params.bulk_rounds,
     )
     rounds = int(rounds)
+    if obs.enabled():
+        # init merge + per-round passes + exit merge + random augmentation,
+        # each chunked into m_pad // chunk round_dists launches.
+        obs.tick(
+            "bulk_round_batches_total",
+            n=(rounds + 3) * (m_pad // chunk), layer=str(layer),
+        )
+        obs.tick("bulk_rounds_total", n=rounds, layer=str(layer))
     return (
         pool_ids[:m], pool_d[:m],
         float(n_scored), float(m * r_exp * rounds), rounds,

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.graph.beam import beam_search, greedy_descent
 from repro.graph.rerank import SearchSpec, rerank_topk, resolve_search_args
 from repro.graph.engine import (  # noqa: F401 — re-exported public API
@@ -79,7 +80,8 @@ def build_hnsw_jit(data, backend, levels, entries, *, params: HNSWParams):
         levels=levels, entry=entry, backend=backend,
     )
     return index, BuildStats(
-        n_dists=acct.n_dists.astype(jnp.float32), n_hops=acct.n_hops
+        n_dists=acct.n_dists.astype(jnp.float32), n_hops=acct.n_hops,
+        phases=acct.phases,
     )
 
 
@@ -110,14 +112,17 @@ def _build_hnsw_bulk(
 
     if n >= 2:
         members = np.arange(n, dtype=np.int32)
-        pool_ids, pool_d, nd, nh, _ = bulk_refine(
-            data, backend, members, r=params.r_base, params=params,
-            seed=seed, layer=0,
-        )
-        adj0, adj0_d, backend = bulk_commit(
-            engine, adj0, adj0_d, backend, jnp.asarray(members),
-            pool_ids, pool_d, r=params.r_base,
-        )
+        with obs.span("build/bulk_refine", layer=0) as sp:
+            pool_ids, pool_d, nd, nh, _ = bulk_refine(
+                data, backend, members, r=params.r_base, params=params,
+                seed=seed, layer=0,
+            )
+            sp.add_cost(nd, nh)
+        with obs.span("build/bulk_commit", layer=0):
+            adj0, adj0_d, backend = bulk_commit(
+                engine, adj0, adj0_d, backend, jnp.asarray(members),
+                pool_ids, pool_d, r=params.r_base,
+            )
         n_d += nd
         n_h += nh
 
@@ -125,14 +130,17 @@ def _build_hnsw_bulk(
         members = np.nonzero(levels_np >= l)[0].astype(np.int32)
         if members.size < 2:
             continue  # nothing to link at this layer
-        pool_ids, pool_d, nd, nh, _ = bulk_refine(
-            data, backend, members, r=params.r_upper, params=params,
-            seed=seed, layer=l,
-        )
-        a, ad, backend = bulk_commit(
-            engine, adj_up[l - 1], adj_up_d[l - 1], backend,
-            jnp.asarray(members), pool_ids, pool_d, r=params.r_upper,
-        )
+        with obs.span("build/bulk_refine", layer=l) as sp:
+            pool_ids, pool_d, nd, nh, _ = bulk_refine(
+                data, backend, members, r=params.r_upper, params=params,
+                seed=seed, layer=l,
+            )
+            sp.add_cost(nd, nh)
+        with obs.span("build/bulk_commit", layer=l):
+            a, ad, backend = bulk_commit(
+                engine, adj_up[l - 1], adj_up_d[l - 1], backend,
+                jnp.asarray(members), pool_ids, pool_d, r=params.r_upper,
+            )
         adj_up = adj_up.at[l - 1].set(a)
         adj_up_d = adj_up_d.at[l - 1].set(ad)
         n_d += nd
@@ -140,10 +148,13 @@ def _build_hnsw_bulk(
 
     entry = int(np.argmax(levels_np)) if n else 0
     lv = jnp.asarray(levels_np)
-    adj0, adj0_d, adj_up, adj_up_d, backend, rd, rh = repair_reachability(
-        data, adj0, adj0_d, adj_up, adj_up_d, backend, lv, entry,
-        params=params,
-    )
+    with obs.span("build/repair") as sp:
+        adj0, adj0_d, adj_up, adj_up_d, backend, rd, rh = repair_reachability(
+            data, adj0, adj0_d, adj_up, adj_up_d, backend, lv, entry,
+            params=params,
+        )
+        sp.add_cost(rd, rh)
+    bulk_nd = n_d
     n_d += rd
     n_h += rh
 
@@ -152,7 +163,8 @@ def _build_hnsw_bulk(
         levels=lv, entry=jnp.int32(entry), backend=backend,
     )
     return index, BuildStats(
-        n_dists=jnp.float32(n_d), n_hops=jnp.float32(n_h)
+        n_dists=jnp.float32(n_d), n_hops=jnp.float32(n_h),
+        phases=jnp.asarray([0.0, 0.0, 0.0, bulk_nd, rd], jnp.float32),
     )
 
 

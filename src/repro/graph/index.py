@@ -46,8 +46,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.graph import backends as bk
 from repro.graph.engine import (
+    PHASE_NAMES,
     BuildEngine,
     BuildParams,
     BuildStats,
@@ -211,10 +213,27 @@ def _purge_rows(adj: np.ndarray, adj_d: np.ndarray, dead: np.ndarray):
 def _as_stats(raw) -> BuildStats | None:
     if raw is None:
         return None
+    phases = getattr(raw, "phases", None)
     return BuildStats(
         n_dists=jnp.asarray(raw.n_dists, jnp.float32),
         n_hops=jnp.asarray(raw.n_hops, jnp.float32),
+        phases=None if phases is None else jnp.asarray(phases, jnp.float32),
     )
+
+
+def _record_build(sp, stats: BuildStats | None) -> None:
+    """Fold a finished build's cost into its span and the per-phase
+    registry counters (obs-enabled paths only; ``sp`` is the null span
+    otherwise, and the counters are skipped)."""
+    if stats is None or not obs.enabled():
+        return
+    sp.add_cost(stats.n_dists, stats.n_hops)
+    if stats.phases is not None:
+        phases = np.asarray(stats.phases, np.float64)
+        sp.set(phases={n: float(v) for n, v in zip(PHASE_NAMES, phases)})
+        for name, v in zip(PHASE_NAMES, phases):
+            if v:
+                obs.tick("build_dists_total", n=float(v), phase=name)
 
 
 # ---------------------------------------------------------------------------
@@ -310,12 +329,18 @@ class AnnIndex:
                 )
             be = backend
             kind = _KIND_OF_TYPE.get(type(backend), "custom")
-        graph, raw_stats = spec.builder(
-            data, be, params, seed, strategy=strategy, **algo_kwargs
-        )
+        with obs.span(
+            "build", algo=algo, strategy=strategy, backend=kind,
+            n=int(data.shape[0]),
+        ) as sp:
+            graph, raw_stats = spec.builder(
+                data, be, params, seed, strategy=strategy, **algo_kwargs
+            )
+            stats = _as_stats(raw_stats)
+            _record_build(sp, stats)
         return cls(
             spec=spec, params=params, graph=graph, data=data,
-            backend_kind=kind, seed=seed, stats=_as_stats(raw_stats),
+            backend_kind=kind, seed=seed, stats=stats,
             strategy=strategy,
         )
 
@@ -631,11 +656,17 @@ class AnnIndex:
         backend = g.backend.extend(new)
         data_all = jnp.concatenate([self._data, new])
 
-        adj0, adj0_d, adj_up, adj_up_d, backend, acct = grow_index(
-            BuildEngine(params), data_all, adj0, adj0_d, adj_up, adj_up_d,
-            backend, jnp.asarray(levels_all), jnp.asarray(ids),
-            jnp.asarray(ent), jnp.asarray(mask),
-        )
+        with obs.span("build/add", algo=self.algo, m=m) as sp:
+            adj0, adj0_d, adj_up, adj_up_d, backend, acct = grow_index(
+                BuildEngine(params), data_all, adj0, adj0_d, adj_up, adj_up_d,
+                backend, jnp.asarray(levels_all), jnp.asarray(ids),
+                jnp.asarray(ent), jnp.asarray(mask),
+            )
+            stats = BuildStats(
+                n_dists=acct.n_dists.astype(jnp.float32), n_hops=acct.n_hops,
+                phases=acct.phases,
+            )
+            _record_build(sp, stats)
 
         if self._spec.layered:
             self._graph = g._replace(
@@ -650,9 +681,6 @@ class AnnIndex:
         self._tombs = np.concatenate([self._tombs, np.zeros(m, bool)])
         self._retired = np.concatenate([self._retired, np.zeros(m, bool)])
         self._banned_dev = None  # mask length changed
-        stats = BuildStats(
-            n_dists=acct.n_dists.astype(jnp.float32), n_hops=acct.n_hops
-        )
         self.last_stats = stats
         return stats
 
@@ -751,14 +779,21 @@ class AnnIndex:
         if aff_ids.size:
             ids, mask = _batch_schedule(aff_ids, params.batch)
             ent = np.full((ids.shape[0],), entry, np.int32)
-            adj0_j, adj0_d_j, adj_up_j, adj_up_d_j, backend, acct = grow_index(
-                BuildEngine(params), self._data, adj0_j, adj0_d_j, adj_up_j,
-                adj_up_d_j, backend, jnp.asarray(levels), jnp.asarray(ids),
-                jnp.asarray(ent), jnp.asarray(mask),
-            )
-            acct_stats = BuildStats(
-                n_dists=acct.n_dists.astype(jnp.float32), n_hops=acct.n_hops
-            )
+            with obs.span(
+                "build/compact", algo=self.algo, rewired=int(aff_ids.size)
+            ) as sp:
+                adj0_j, adj0_d_j, adj_up_j, adj_up_d_j, backend, acct = (
+                    grow_index(
+                        BuildEngine(params), self._data, adj0_j, adj0_d_j,
+                        adj_up_j, adj_up_d_j, backend, jnp.asarray(levels),
+                        jnp.asarray(ids), jnp.asarray(ent), jnp.asarray(mask),
+                    )
+                )
+                acct_stats = BuildStats(
+                    n_dists=acct.n_dists.astype(jnp.float32),
+                    n_hops=acct.n_hops, phases=acct.phases,
+                )
+                _record_build(sp, acct_stats)
 
         if self._spec.layered:
             self._graph = g._replace(

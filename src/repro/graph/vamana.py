@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.graph.beam import INF, beam_search
 from repro.graph.engine import (
     BuildEngine,
@@ -61,12 +62,12 @@ def _build_flat_jit(data, backend, entry, *, params: BuildParams, two_pass: bool
     adj_up = jnp.full((1, n, flat.r_upper), -1, jnp.int32)
     adj_up_d = jnp.full((1, n, flat.r_upper), INF)
 
-    adj0, adj0_d, adj_up, adj_up_d, backend = BuildEngine(flat).bootstrap(
+    adj0, adj0_d, adj_up, adj_up_d, backend, acct0 = BuildEngine(flat).bootstrap(
         data, adj0, adj0_d, adj_up, adj_up_d, backend, levels
     )
     nb = -(-n // p)
 
-    def pass_body(alpha_pass, adj0, adj0_d, backend, start_batch):
+    def pass_body(alpha_pass, adj0, adj0_d, backend, start_batch, acct0):
         engine = BuildEngine(dataclasses.replace(flat, alpha=alpha_pass))
 
         def body(b, carry):
@@ -81,16 +82,18 @@ def _build_flat_jit(data, backend, entry, *, params: BuildParams, two_pass: bool
             return a0, a0d, backend, acct
 
         adj0, adj0_d, backend, acct = jax.lax.fori_loop(
-            start_batch, nb, body, (adj0, adj0_d, backend, CostAccount.zero())
+            start_batch, nb, body, (adj0, adj0_d, backend, acct0)
         )
         return adj0, adj0_d, backend, acct
 
-    adj0, adj0_d, backend, s1 = pass_body(1.0, adj0, adj0_d, backend, 1)
+    adj0, adj0_d, backend, s1 = pass_body(1.0, adj0, adj0_d, backend, 1, acct0)
     if two_pass:
         # Refinement: re-insert every vertex with the relaxed α against the
         # built graph (candidates come from a fresh beam search, which
         # dominates the visited set V of the original algorithm).
-        adj0, adj0_d, backend, s2 = pass_body(params.alpha, adj0, adj0_d, backend, 0)
+        adj0, adj0_d, backend, s2 = pass_body(
+            params.alpha, adj0, adj0_d, backend, 0, CostAccount.zero()
+        )
     index = FlatIndex(adj=adj0, adj_d=adj0_d, entry=entry, backend=backend)
     return index, s1
 
@@ -116,22 +119,28 @@ def _build_vamana_bulk(data, backend, entry, *, params: BuildParams, seed: int):
 
     if n >= 2:
         members = np.arange(n, dtype=np.int32)
-        pool_ids, pool_d, n_d, n_h, _ = bulk_refine(
-            data, backend, members, r=flat.r_base, params=flat,
-            seed=seed, layer=0,
-        )
-        adj0, adj0_d, backend = bulk_commit(
-            engine, adj0, adj0_d, backend, jnp.asarray(members),
-            pool_ids, pool_d, r=flat.r_base,
-        )
+        with obs.span("build/bulk_refine", layer=0) as sp:
+            pool_ids, pool_d, n_d, n_h, _ = bulk_refine(
+                data, backend, members, r=flat.r_base, params=flat,
+                seed=seed, layer=0,
+            )
+            sp.add_cost(n_d, n_h)
+        with obs.span("build/bulk_commit", layer=0):
+            adj0, adj0_d, backend = bulk_commit(
+                engine, adj0, adj0_d, backend, jnp.asarray(members),
+                pool_ids, pool_d, r=flat.r_base,
+            )
 
-    adj0, adj0_d, adj_up, adj_up_d, backend, rd, rh = repair_reachability(
-        data, adj0, adj0_d, adj_up, adj_up_d, backend, levels, int(entry),
-        params=flat,
-    )
+    with obs.span("build/repair") as sp:
+        adj0, adj0_d, adj_up, adj_up_d, backend, rd, rh = repair_reachability(
+            data, adj0, adj0_d, adj_up, adj_up_d, backend, levels, int(entry),
+            params=flat,
+        )
+        sp.add_cost(rd, rh)
     index = FlatIndex(adj=adj0, adj_d=adj0_d, entry=entry, backend=backend)
     return index, CostAccount(
-        n_dists=jnp.float32(n_d + rd), n_hops=jnp.float32(n_h + rh)
+        n_dists=jnp.float32(n_d + rd), n_hops=jnp.float32(n_h + rh),
+        phases=jnp.asarray([0.0, 0.0, 0.0, n_d, rd], jnp.float32),
     )
 
 

@@ -21,6 +21,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.kernels import ref
 from repro.kernels.flash_expand import flash_expand_pallas
 from repro.kernels.flash_round import flash_round_pallas
@@ -47,12 +48,22 @@ def resolve_impl(impl: str = "auto") -> str:
     return impl
 
 
+def _trace_tick(kernel: str, impl: str) -> None:
+    """Compile-event counter: called from the Python body of each jitted
+    wrapper, which runs exactly once per (shape, dtype, impl) trace — the
+    same trace-time side-effect idiom the serving engine uses for its
+    compile counter. Gated no-op unless obs is enabled."""
+    obs.tick("kernel_traces_total", kernel=kernel, impl=impl)
+
+
+
 @functools.partial(jax.jit, static_argnames=("impl", "block_n"))
 def flash_scan(
     codes: jax.Array, adt: jax.Array, *, impl: str = "auto", block_n: int = 1024
 ) -> jax.Array:
     """Batched ADT lookup-accumulate: codes (N, M), adt (M, K) -> (N,)."""
     impl = resolve_impl(impl)
+    _trace_tick("flash_scan", impl)
     if impl == "ref":
         return ref.flash_scan_ref(codes, adt)
     return flash_scan_pallas(
@@ -66,6 +77,7 @@ def flash_scan_blocked(
 ) -> jax.Array:
     """Blocked-layout ADT scan: blocks (G, M, B), adt (M, K) -> (G, B)."""
     impl = resolve_impl(impl)
+    _trace_tick("flash_scan_blocked", impl)
     if impl == "ref":
         return ref.flash_scan_blocked_ref(blocks, adt)
     return flash_scan_blocked_pallas(
@@ -90,6 +102,7 @@ def flash_scan_batch(
     m2, _k = adt.shape
     if m != m2:
         raise ValueError(f"rows M={m} != adt M={m2}")
+    _trace_tick("flash_scan_batch", resolve_impl(impl))
     blocks = jnp.transpose(rows, (0, 2, 1))  # (W, M, R)
     return flash_scan_blocked(blocks, adt, impl=impl, block_g=block_g)
 
@@ -107,6 +120,7 @@ def flash_round(
     capability hook routes here.
     """
     impl = resolve_impl(impl)
+    _trace_tick("flash_round", impl)
     if impl == "ref":
         return ref.flash_round_ref(codes, adts)
     return flash_round_pallas(
@@ -132,6 +146,7 @@ def flash_expand(
     contraction. The ``backend.expand()`` capability hook routes here.
     """
     impl = resolve_impl(impl)
+    _trace_tick("flash_expand", impl)
     if impl == "ref":
         return ref.flash_expand_ref(nodes, adjacency, mirror, adt)
     return flash_expand_pallas(
@@ -150,6 +165,7 @@ def l2_batch(
 ) -> jax.Array:
     """Pairwise squared L2: x (N, D), y (C, D) -> (N, C) f32."""
     impl = resolve_impl(impl)
+    _trace_tick("l2_batch", impl)
     if impl == "ref":
         return ref.l2_batch_ref(x, y)
     return l2_batch_pallas(
@@ -168,6 +184,7 @@ def sq_l2(
 ) -> jax.Array:
     """SQ quantized-domain distance: q (D,), db (N, D), s2 (D,) -> (N,) f32."""
     impl = resolve_impl(impl)
+    _trace_tick("sq_l2", impl)
     if impl == "ref":
         return ref.sq_l2_ref(q, db, s2)
     return sq_l2_pallas(q, db, s2, block_n=block_n, interpret=(impl == "interpret"))

@@ -21,20 +21,21 @@ told from:
     delivered, not discarded).
 
 Every decision increments a counter and the served path records queue /
-service / end-to-end latency into bounded windows, all exported through
-:meth:`AdmissionController.stats` — the arithmetic contract
-(``admitted == served + shed + pending``; rejected requests are never
-admitted) is asserted in tests/test_runtime.py.
+service / end-to-end latency into bounded windows — all backed by the
+``repro.obs`` registry (DESIGN.md §14): the decision counters are
+``serve_admission_total{inst=…,decision=…}`` series and the windows are
+obs histograms, so one registry snapshot shows them next to build and
+kernel metrics. :meth:`AdmissionController.stats` stays the API-compatible
+view — the arithmetic contract (``admitted == served + shed + pending``;
+rejected requests are never admitted) is asserted in tests/test_runtime.py.
 """
 
 from __future__ import annotations
 
-import collections
 import dataclasses
 import threading
-import time
 
-import numpy as np
+from repro import obs
 
 
 class QueueFullError(RuntimeError):
@@ -70,23 +71,14 @@ class AdmissionConfig:
             )
 
 
-def _pcts(window) -> tuple[float, float]:
-    lat = np.asarray(window, np.float64)
-    if not lat.size:
-        return 0.0, 0.0
-    return (
-        float(np.percentile(lat, 50) * 1e3),
-        float(np.percentile(lat, 99) * 1e3),
-    )
-
-
 class AdmissionController:
     """Counters + policy for one :class:`~repro.serve.runtime.Runtime`.
 
     Thread-safe: submits (client threads), sheds (scheduler thread), and
     serve records (scheduler thread) all mutate under one lock. Latency
-    windows are bounded deques (most recent 4096 requests) so a long-lived
-    server never grows per-request state.
+    windows are bounded obs histograms (most recent ``WINDOW`` requests) so
+    a long-lived server never grows per-request state; metric references
+    are resolved once here, so the hot path never formats a label.
     """
 
     WINDOW = 4096
@@ -94,28 +86,37 @@ class AdmissionController:
     def __init__(self, config: AdmissionConfig | None = None):
         self.config = config or AdmissionConfig()
         self._lock = threading.Lock()
-        self._admitted = 0
-        self._rejected = 0
-        self._shed = 0
-        self._served = 0
-        self._missed = 0
-        self._queue_lat: collections.deque = collections.deque(maxlen=self.WINDOW)
-        self._service_lat: collections.deque = collections.deque(maxlen=self.WINDOW)
-        self._e2e_lat: collections.deque = collections.deque(maxlen=self.WINDOW)
+        inst = str(obs.REGISTRY.next_instance())
+        self._counters = {
+            name: obs.counter(
+                "serve_admission_total", inst=inst, decision=name
+            )
+            for name in ("admitted", "rejected", "shed", "served", "missed")
+        }
+        self._queue_lat = obs.histogram(
+            "serve_queue_latency_seconds", window=self.WINDOW, inst=inst
+        )
+        self._service_lat = obs.histogram(
+            "serve_service_latency_seconds", window=self.WINDOW, inst=inst
+        )
+        self._e2e_lat = obs.histogram(
+            "serve_e2e_latency_seconds", window=self.WINDOW, inst=inst
+        )
 
     # ---- policy ----------------------------------------------------------
 
     def deadline_for(
         self, deadline_ms: float | None, now: float | None = None
     ) -> float | None:
-        """Absolute ``perf_counter`` deadline for a submit, or None."""
+        """Absolute monotonic-clock (``obs.now``) deadline for a submit,
+        or None."""
         if deadline_ms is None:
             deadline_ms = self.config.default_deadline_ms
         if deadline_ms is None:
             return None
         if deadline_ms < 0:
             raise ValueError(f"deadline_ms must be >= 0, got {deadline_ms}")
-        return (time.perf_counter() if now is None else now) + deadline_ms / 1e3
+        return (obs.now() if now is None else now) + deadline_ms / 1e3
 
     def admit(self, queue_depth: int) -> None:
         """Gate one submit against ``queue_depth`` already-pending requests.
@@ -125,27 +126,28 @@ class AdmissionController:
         mq = self.config.max_queue
         with self._lock:
             if mq is not None and queue_depth >= mq:
-                self._rejected += 1
+                self._counters["rejected"].inc()
                 raise QueueFullError(
                     f"queue full: {queue_depth} pending >= max_queue={mq}"
                 )
-            self._admitted += 1
+            self._counters["admitted"].inc()
 
     def shed(self, n: int = 1) -> None:
         """Count ``n`` requests shed at dequeue (deadline already past)."""
         with self._lock:
-            self._shed += n
+            self._counters["shed"].inc(n)
 
     def record_served(
         self, queue_s: float, service_s: float, *, missed: bool
     ) -> None:
         """Fold one served request into the latency/SLO books."""
         with self._lock:
-            self._served += 1
-            self._missed += bool(missed)
-            self._queue_lat.append(queue_s)
-            self._service_lat.append(service_s)
-            self._e2e_lat.append(queue_s + service_s)
+            self._counters["served"].inc()
+            if missed:
+                self._counters["missed"].inc()
+            self._queue_lat.observe(queue_s)
+            self._service_lat.observe(service_s)
+            self._e2e_lat.observe(queue_s + service_s)
 
     # ---- telemetry -------------------------------------------------------
 
@@ -155,16 +157,18 @@ class AdmissionController:
         ``admitted - served - shed`` is the number still pending (0 after a
         drain); ``rejected`` requests were never admitted."""
         with self._lock:
-            q50, q99 = _pcts(self._queue_lat)
-            s50, s99 = _pcts(self._service_lat)
-            e50, e99 = _pcts(self._e2e_lat)
+            admitted = int(self._counters["admitted"].value)
+            shed = int(self._counters["shed"].value)
+            q50, q99 = self._queue_lat.pcts_ms()
+            s50, s99 = self._service_lat.pcts_ms()
+            e50, e99 = self._e2e_lat.pcts_ms()
             return {
-                "admitted": self._admitted,
-                "rejected": self._rejected,
-                "shed": self._shed,
-                "served": self._served,
-                "deadline_misses": self._missed,
-                "shed_rate": self._shed / self._admitted if self._admitted else 0.0,
+                "admitted": admitted,
+                "rejected": int(self._counters["rejected"].value),
+                "shed": shed,
+                "served": int(self._counters["served"].value),
+                "deadline_misses": int(self._counters["missed"].value),
+                "shed_rate": shed / admitted if admitted else 0.0,
                 "queue_p50_ms": q50,
                 "queue_p99_ms": q99,
                 "service_p50_ms": s50,
@@ -175,9 +179,12 @@ class AdmissionController:
 
     def reset_stats(self) -> "AdmissionController":
         with self._lock:
-            self._admitted = self._rejected = self._shed = 0
-            self._served = self._missed = 0
-            self._queue_lat.clear()
-            self._service_lat.clear()
-            self._e2e_lat.clear()
+            for c in self._counters.values():
+                c.reset()
+            self._queue_lat.reset()
+            self._service_lat.reset()
+            self._e2e_lat.reset()
         return self
+
+    #: steady-state measurement alias (the obs-wide reset spelling).
+    reset = reset_stats

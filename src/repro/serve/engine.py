@@ -14,7 +14,11 @@ recompiles as a plain scan.
 
 Telemetry is first-class: per-call wall latency (p50/p99), QPS, distance
 evaluations per query, and the compile-vs-cache-hit counters the zero-
-recompile contract is tested against (tests/test_serve.py).
+recompile contract is tested against (tests/test_serve.py). All of it is
+backed by the ``repro.obs`` registry (DESIGN.md §14) — ``stats()`` is a
+view over ``serve_engine_*`` metric series — and the latency window is a
+bounded obs histogram whose size is the ``latency_window`` constructor
+argument.
 
 The engine reads the index's graph pytree per call, so in-place maintenance
 (``add``/``delete``/``compact``) is picked up immediately; call
@@ -36,13 +40,11 @@ path (the mutator thread), so the serving loop itself never compiles.
 
 from __future__ import annotations
 
-import collections
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.graph.hnsw import SearchResult, search_hnsw
 from repro.graph.rerank import SearchSpec, rerank_mode
 from repro.graph.vamana import search_flat_result
@@ -76,6 +78,7 @@ class SearchEngine:
         rerank_mult: int | None = None,
         spec: SearchSpec | None = None,
         q_buckets: tuple = DEFAULT_BUCKETS,
+        latency_window: int = 4096,
     ):
         buckets = tuple(sorted({int(b) for b in q_buckets}))
         if not buckets or buckets[0] < 1:
@@ -91,19 +94,26 @@ class SearchEngine:
         self._fns: dict = {}  # (bucket, spec) -> jitted callable
         self._compiled: set = set()  # (bucket, spec, n) that have executed
         self._banned = None
-        # telemetry
-        self._n_compiles = 0
-        self._n_hits = 0           # recorded dispatches on a warm bucket
-        self._n_calls = 0          # search() invocations
+        # telemetry — registry-backed series (references resolved once; the
+        # hot path never formats a label) plus plain accumulators for the
+        # values only this engine's stats() reads
+        inst = str(obs.REGISTRY.next_instance())
+        self._m_compiles = obs.counter("serve_engine_compiles_total", inst=inst)
+        self._m_hits = obs.counter("serve_engine_cache_hits_total", inst=inst)
+        self._m_calls = obs.counter("serve_engine_calls_total", inst=inst)
+        self._m_queries = obs.counter("serve_engine_queries_total", inst=inst)
         self._n_blocks = 0         # padded-block dispatches
-        self._n_queries = 0        # real queries served
         self._n_padded = 0         # padded queries dispatched (>= real)
         self._dists = 0.0
         self._scan_dists = 0.0     # compact-code stage (split accounting)
         self._rerank_dists = 0.0   # second stage
         self._time_total = 0.0     # all-time busy seconds (for qps)
         # bounded window: a long-lived server must not grow per-call state
-        self._lat: collections.deque = collections.deque(maxlen=4096)
+        self.latency_window = int(latency_window)
+        self._lat = obs.histogram(
+            "serve_engine_latency_seconds", window=self.latency_window,
+            inst=inst,
+        )
         self._bucket_hits = {b: 0 for b in buckets}
         self.refresh()
 
@@ -168,7 +178,7 @@ class SearchEngine:
                 # Trace-time side effect: ticks once per XLA compile of this
                 # (bucket, spec) pair, never on a warm call — the compile
                 # counter the zero-recompile contract is asserted against.
-                self._n_compiles += 1
+                self._m_compiles.inc()
                 search = search_hnsw if layered else search_flat_result
                 return search(
                     graph, queries, spec=spec, reranker=reranker, banned=banned
@@ -198,7 +208,7 @@ class SearchEngine:
         )
         self._compiled.add(key)
         if record and hit:
-            self._n_hits += 1
+            self._m_hits.inc()
         return res
 
     def _bucket_for(self, q: int) -> int:
@@ -284,7 +294,7 @@ class SearchEngine:
             # index grew since the last refresh(): a stale mask would be
             # clamp-gathered against new ids and silently misclassify them
             self.refresh()
-        t0 = time.perf_counter()
+        t0 = obs.now()
         out_ids, out_dists, nd, n_scan, n_rerank = [], [], 0.0, 0.0, 0.0
         off = 0
         while off < q_total:
@@ -309,11 +319,11 @@ class SearchEngine:
         dists = out_dists[0] if len(out_dists) == 1 else jnp.concatenate(out_dists)
         jax.block_until_ready(ids)
         if record:
-            elapsed = time.perf_counter() - t0
-            self._lat.append(elapsed)
+            elapsed = obs.now() - t0
+            self._lat.observe(elapsed)
             self._time_total += elapsed
-            self._n_calls += 1
-            self._n_queries += q_total
+            self._m_calls.inc()
+            self._m_queries.inc(q_total)
             self._dists += nd
             self._scan_dists += n_scan
             self._rerank_dists += n_rerank
@@ -328,7 +338,7 @@ class SearchEngine:
 
     @property
     def n_compiles(self) -> int:
-        return self._n_compiles
+        return int(self._m_compiles.value)
 
     def stats(self) -> dict:
         """Serving telemetry since construction (warmup excluded).
@@ -337,19 +347,21 @@ class SearchEngine:
         averaged over padded queries (each padded row runs the same program,
         so the per-row cost is uniform); cache_hits are dispatches that found
         their bucket already compiled at the current index shape. Latency
-        percentiles cover the most recent 4096 calls (bounded window)."""
-        lat = np.asarray(self._lat, np.float64)
+        percentiles cover the most recent ``latency_window`` calls (bounded
+        window)."""
+        p50, p99 = self._lat.pcts_ms()
+        queries = int(self._m_queries.value)
         total = self._time_total
         return {
-            "calls": self._n_calls,
+            "calls": int(self._m_calls.value),
             "blocks": self._n_blocks,
-            "queries": self._n_queries,
+            "queries": queries,
             "padded_queries": self._n_padded,
-            "compiles": self._n_compiles,
-            "cache_hits": self._n_hits,
-            "qps": self._n_queries / total if total > 0 else 0.0,
-            "p50_ms": float(np.percentile(lat, 50) * 1e3) if lat.size else 0.0,
-            "p99_ms": float(np.percentile(lat, 99) * 1e3) if lat.size else 0.0,
+            "compiles": int(self._m_compiles.value),
+            "cache_hits": int(self._m_hits.value),
+            "qps": queries / total if total > 0 else 0.0,
+            "p50_ms": p50,
+            "p99_ms": p99,
             "n_dists_per_query": (
                 self._dists / self._n_padded if self._n_padded else 0.0
             ),
@@ -365,16 +377,21 @@ class SearchEngine:
     def reset_stats(self) -> "SearchEngine":
         """Zero the latency/throughput counters (compile counter kept — it
         tracks the engine's whole compilation history)."""
-        self._n_calls = self._n_blocks = self._n_hits = 0
-        self._n_queries = self._n_padded = 0
+        self._m_calls.reset()
+        self._m_hits.reset()
+        self._m_queries.reset()
+        self._n_blocks = self._n_padded = 0
         self._dists = self._scan_dists = self._rerank_dists = 0.0
         self._time_total = 0.0
-        self._lat = collections.deque(maxlen=4096)
+        self._lat.reset()
         self._bucket_hits = {b: 0 for b in self.q_buckets}
         return self
+
+    #: steady-state measurement alias (the obs-wide reset spelling).
+    reset = reset_stats
 
     def __repr__(self) -> str:
         return (
             f"SearchEngine(index={self.index!r}, spec={self.spec}, "
-            f"buckets={self.q_buckets}, compiles={self._n_compiles})"
+            f"buckets={self.q_buckets}, compiles={self.n_compiles})"
         )

@@ -39,6 +39,8 @@ import threading
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+
 
 class Generation:
     """One published, immutable index version.
@@ -130,14 +132,20 @@ class IndexHandle:
         mutations flips once). If ``fn`` raises, nothing is published.
         """
         with self._mutex:
-            base = self._generation
-            clone = base.index.clone()
-            result = fn(clone)
-            new = Generation(base.gen + 1, clone)
-            new.banned  # build the device mask before readers can need it
-            for hook in self._prepare_hooks:
-                hook(new)
-            self._generation = new  # the flip: one atomic reference store
+            with obs.span("serve/flip", base_gen=self._generation.gen) as flip:
+                base = self._generation
+                with obs.span("serve/flip/clone"):
+                    clone = base.index.clone()
+                with obs.span("serve/flip/apply"):
+                    result = fn(clone)
+                new = Generation(base.gen + 1, clone)
+                new.banned  # build the device mask before readers can need it
+                with obs.span("serve/flip/prepare"):
+                    for hook in self._prepare_hooks:
+                        hook(new)
+                flip.set(gen=new.gen)
+                self._generation = new  # flip: one atomic reference store
+            obs.tick("serve_flips_total")
         return new, result
 
     def add(self, vectors) -> Generation:

@@ -43,11 +43,11 @@ import heapq
 import itertools
 import queue as queue_mod
 import threading
-import time
 from concurrent.futures import Future
 
 import numpy as np
 
+from repro import obs
 from repro.graph.hnsw import SearchResult
 from repro.graph.rerank import SearchSpec, rerank_mode
 from repro.serve.admission import (
@@ -71,7 +71,7 @@ class _Request:
         self.spec = spec
         self.gen = gen            # Generation pinned at submit
         self.arrival = arrival
-        self.deadline = deadline  # absolute perf_counter time, or None
+        self.deadline = deadline  # absolute obs.now() time, or None
         self.future = future
         self.seq = seq
 
@@ -153,11 +153,13 @@ class Runtime:
         self._closed = False
         self._specs_seen = {engine.spec}
         # batching telemetry (scheduler thread only, reads are racy-but-fine)
+        inst = str(obs.REGISTRY.next_instance())
         self._n_batches = 0
         self._n_packed = 0
         self._max_batch_seen = 0
         self._batch_sizes: list = []
-        self._cold_dispatches = 0
+        self._m_cold = obs.counter("serve_cold_dispatch_total", inst=inst)
+        self._g_depth = obs.gauge("serve_queue_depth", inst=inst)
 
         self._mut_q: queue_mod.SimpleQueue = queue_mod.SimpleQueue()
         self.handle.on_prepare(self._prepare_generation)
@@ -192,7 +194,7 @@ class Runtime:
                 "batches go straight to SearchEngine.search"
             )
         spec = self.engine.spec if spec is None else spec
-        now = time.perf_counter()
+        now = obs.now()
         deadline = self.admission.deadline_for(deadline_ms, now)
         fut: Future = Future()
         with self._cv:
@@ -202,6 +204,7 @@ class Runtime:
             req = _Request(q, spec, self.handle.current, now, deadline, fut,
                            next(self._seq))
             heapq.heappush(self._heap, (req.key, req.seq, req))
+            self._g_depth.set(len(self._heap))
             self._specs_seen.add(spec)
             self._cv.notify_all()
         return fut
@@ -292,7 +295,7 @@ class Runtime:
         live request seeds the pack's ``(spec, generation)`` key; compatible
         requests join up to ``max_batch``; the rest go back on the heap.
         """
-        now = time.perf_counter()
+        now = obs.now()
         batch: list = []
         shed: list = []
         keep: list = []
@@ -311,6 +314,7 @@ class Runtime:
                 keep.append(item)
         for item in keep:
             heapq.heappush(self._heap, item)
+        self._g_depth.set(len(self._heap))
         return batch, shed
 
     def _schedule_loop(self) -> None:
@@ -324,13 +328,13 @@ class Runtime:
                     # batch-forming window: the head request waits at most
                     # max_wait for company — capped by the earliest pending
                     # deadline so forming never blows an SLO by itself
-                    form = time.perf_counter() + self.max_wait
+                    form = obs.now() + self.max_wait
                     while len(self._heap) < self.max_batch and not self._closed:
                         until = form
                         dl = self._earliest_deadline()
                         if dl is not None:
                             until = min(until, dl)
-                        left = until - time.perf_counter()
+                        left = until - obs.now()
                         if left <= 0:
                             break
                         self._cv.wait(left)
@@ -340,7 +344,7 @@ class Runtime:
                 for req in shed:
                     req.future.set_exception(DeadlineExceededError(
                         "request shed before dispatch: deadline expired "
-                        f"{(time.perf_counter() - req.deadline) * 1e3:.1f}ms ago"
+                        f"{(obs.now() - req.deadline) * 1e3:.1f}ms ago"
                     ))
             if batch:
                 self._serve(batch)
@@ -351,8 +355,8 @@ class Runtime:
             if not self.engine.is_warm(len(batch), spec, n=gen.index.n):
                 # steady state never lands here: warm_view pre-compiled
                 # every published generation's buckets before its flip
-                self._cold_dispatches += 1
-            t0 = time.perf_counter()
+                self._m_cold.inc()
+            t0 = obs.now()
             block = np.stack([r.query for r in batch])
             res = self.engine.search(block, spec=spec, view=gen)
             ids = np.asarray(res.ids)
@@ -363,7 +367,7 @@ class Runtime:
             per_q = np.float32(float(res.n_dists) / slots)
             per_scan = np.float32(float(res.n_scan) / slots)
             per_rerank = np.float32(float(res.n_rerank) / slots)
-            t1 = time.perf_counter()
+            t1 = obs.now()
             self._n_batches += 1
             self._n_packed += len(batch)
             self._max_batch_seen = max(self._max_batch_seen, len(batch))
@@ -458,7 +462,7 @@ class Runtime:
             "requests": self._n_packed,
             "mean_batch": float(sizes.mean()) if sizes.size else 0.0,
             "max_batch_seen": self._max_batch_seen,
-            "cold_dispatches": self._cold_dispatches,
+            "cold_dispatches": int(self._m_cold.value),
             **self.admission.stats(),
             "engine": self.engine.stats(),
         }
@@ -470,9 +474,12 @@ class Runtime:
         self.admission.reset_stats()
         self._n_batches = self._n_packed = self._max_batch_seen = 0
         self._batch_sizes = []
-        self._cold_dispatches = 0
+        self._m_cold.reset()
         self.engine.reset_stats()
         return self
+
+    #: steady-state measurement alias (the obs-wide reset spelling).
+    reset = reset_stats
 
     def __repr__(self) -> str:
         return (
