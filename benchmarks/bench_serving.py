@@ -15,7 +15,10 @@ Measures the three serve-subsystem claims on a flash_blocked HNSW index:
     land as copy-on-write generation flips while the read stream keeps
     flowing; bars on mixed speedup (≥3× sequential), p99 inflation (≤2×
     read-only), and shed rate, with ``cold_dispatches == 0`` as the
-    zero-steady-state-recompile witness.
+    zero-steady-state-recompile witness;
+  * durable mixed workload (ISSUE 9): the same schedule with a batched-fsync
+    WAL under the index handle — every mutation durable before its ack —
+    must hold ≥ 0.9× the WAL-less steady-state QPS.
 
 ``serving_bench()`` is the machine-readable entry (``run.py --json
 BENCH_serving.json --only serving``); ``run()`` emits the CSV rows.
@@ -45,6 +48,12 @@ SPEEDUP_BAR = 3.0
 MIXED_SPEEDUP_BAR = 3.0
 MIXED_P99_RATIO_BAR = 2.0
 SHED_RATE_BAR = 0.01
+
+#: Acceptance bar (ISSUE 9, durability): the same mixed schedule with every
+#: mutation WAL-logged and group-commit fsynced before its ack must hold at
+#: least this fraction of the WAL-less steady-state QPS — durability rides
+#: the flip (one fsync per generation), not the request path.
+WAL_QPS_RATIO_BAR = 0.9
 
 
 def serving_bench(
@@ -251,7 +260,12 @@ def mixed_workload(
         shape): mutation cost collapses to clone + cached executables,
         which is the recurring-shape steady state a long-lived server
         lives in. Bars: QPS ≥ 3× sequential, p99 ≤ 2× read-only, ~zero
-        shed, zero ``cold_dispatches`` and zero mutator traces.
+        shed, zero ``cold_dispatches`` and zero mutator traces;
+      * **durable** — the steady schedule again with a ``fsync="batch"``
+        WAL under the handle (ISSUE 9): every mutation is logged and
+        group-commit fsynced before its flip acks. Bar: QPS ≥ 0.9× the
+        WAL-less steady round — durability costs one fsync per flip, off
+        the read path.
 
     Sustained QPS is the search stream's wall clock (mutations overlap
     it; their completion tail is ``flip_wait_s``), p99 comes from the
@@ -314,14 +328,30 @@ def mixed_workload(
         )
 
     rounds = {}
+    wal_stats = None
     for name, mutate in (
         ("cold", True), ("read_only", False), ("steady", True),
+        ("durable", True),
     ):
+        wal = wal_dir = None
+        if name == "durable":
+            # same schedule as "steady", but every mutation is WAL-logged
+            # and group-commit fsynced before its flip acks (ISSUE 9): the
+            # QPS delta vs "steady" is the price of durability
+            wal_dir = tempfile.mkdtemp(prefix="bench_wal_")
+            wal = serve.WalWriter(wal_dir, fsync="batch")
+            target = serve.IndexHandle(idx, wal=wal)
+        else:
+            target = idx
         with serve.Runtime(
-            idx, engine=engine, max_wait_ms=5.0,
+            target, engine=engine, max_wait_ms=5.0,
             default_deadline_ms=30_000.0,
         ) as rt:
             rounds[name] = run_round(rt, mutate=mutate)
+        if wal is not None:
+            wal_stats = wal.stats()
+            wal.close()
+            shutil.rmtree(wal_dir, ignore_errors=True)
         if name == "cold":
             # sequential single-query baseline, measured ADJACENT to the
             # judged rounds (the early-run batching-section figure sees a
@@ -341,11 +371,19 @@ def mixed_workload(
         time.sleep(1.0)  # let the CFS quota recover between rounds
 
     read, cold, steady = rounds["read_only"], rounds["cold"], rounds["steady"]
+    durable = rounds["durable"]
     p99_ratio = (
         steady["p99_ms"] / read["p99_ms"] if read["p99_ms"] > 0 else 0.0
     )
     speedup = (
         steady["qps"] / seq_adjacent_qps if seq_adjacent_qps > 0 else 0.0
+    )
+    wal_qps_ratio = durable["qps"] / steady["qps"] if steady["qps"] > 0 else 0.0
+    emit(
+        "serving/mixed_durable", 1e6 / durable["qps"],
+        f"durable={durable['qps']:.0f}qps ({wal_qps_ratio:.3f}x steady, "
+        f"bar {WAL_QPS_RATIO_BAR}x) fsyncs={wal_stats['fsyncs']} "
+        f"appends={wal_stats['appends']} wal_kb={wal_stats['bytes'] / 1e3:.0f}",
     )
     emit(
         "serving/mixed", 1e6 / steady["qps"],
@@ -377,6 +415,12 @@ def mixed_workload(
         speedup_vs_sequential=speedup,
         speedup_bar=MIXED_SPEEDUP_BAR,
         shed_rate_bar=SHED_RATE_BAR,
+        durable=durable,
+        wal=dict(
+            qps_ratio_vs_steady=wal_qps_ratio,
+            qps_ratio_bar=WAL_QPS_RATIO_BAR,
+            **(wal_stats or {}),
+        ),
     )
 
 

@@ -1,0 +1,276 @@
+"""CI guard: no crash point loses an acked mutation — the chaos matrix.
+
+DESIGN.md §15's durability contract ("an acked mutation survives any
+crash") is not provable by unit tests that crash nowhere: it has to be
+earned one crash site at a time. This script runs the same deterministic
+mutation stream in a worker subprocess once per registered crash-kind
+fault point (``repro.testing.faults``), with that point armed to die via
+``os._exit`` — no atexit, no buffer flush, the honest simulation of
+SIGKILL mid-protocol. The worker journals every *acked* op (one flushed
+line per completed mutation) as it goes, so after the kill the parent
+knows exactly what durability promised.
+
+For each trial the parent then recovers the root in-process and asserts:
+
+  * the worker died AT the armed point (exit == ``faults.CRASH_EXIT_CODE``
+    — a point that never fires would silently shrink the matrix);
+  * recovery reconstructs **acked ops + at most one** logged-but-unacked
+    trailing op (the documented at-least-once window between WAL commit
+    and ack), never fewer — zero acked-mutation loss;
+  * the recovered index has **search parity** with an uncrashed replay of
+    that same op prefix: identical ids AND distances on a fixed query set,
+    plus identical tombstone sets — not just "it loads".
+
+The per-point verdicts land in ``RECOVERY_report.json`` (uploaded as a CI
+artifact). Exit 0 = every point green.
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/check_recovery_guard.py
+    PYTHONPATH=src python benchmarks/check_recovery_guard.py \
+        --points wal/after_append handle/before_flip   # subset (tests)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import shutil
+import subprocess
+import sys
+import tempfile
+
+import numpy as np
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO / "src"))
+
+from repro.serve import recovery  # noqa: E402
+from repro.serve.wal import apply_record  # noqa: E402
+from repro.testing import faults  # noqa: E402
+
+N_BASE, DIM, N_Q = 200, 16, 8
+SEED = 7
+CHECKPOINT_EVERY = 4
+ACKED_LOG = "acked.log"
+
+
+def _build_params():
+    from repro.graph.hnsw import HNSWParams
+
+    return HNSWParams(r_upper=4, r_base=8, ef=16, batch=32, max_layers=2)
+
+
+def _base_data():
+    rng = np.random.default_rng(SEED)
+    data = rng.normal(size=(N_BASE, DIM)).astype(np.float32)
+    queries = rng.normal(size=(N_Q, DIM)).astype(np.float32)
+    return data, queries
+
+
+def mutation_stream():
+    """The deterministic op list every trial replays: adds, deletes, and a
+    compact, sized so ≥2 checkpoints trigger at CHECKPOINT_EVERY=4 (the
+    checkpoint/* points need a mid-stream checkpoint to fire on)."""
+    rng = np.random.default_rng(SEED + 1)
+    ops = []
+    for i in range(12):
+        if i % 4 == 3:
+            ops.append(("delete", {"ids": np.asarray([i, i + 20], np.int64)}))
+        elif i == 6:
+            ops.append(("compact", {}))
+        else:
+            ops.append(
+                ("add", {"vectors": rng.normal(size=(3, DIM)).astype(np.float32)})
+            )
+    return ops
+
+
+def make_base_root(path: str) -> None:
+    """Build the seed index once and init a durable root at ``path``."""
+    from repro.graph.index import AnnIndex
+
+    data, _ = _base_data()
+    idx = AnnIndex.build(
+        data, algo="hnsw", backend="fp32", params=_build_params()
+    )
+    recovery.init(path, idx)
+
+
+def run_worker(root: str) -> int:
+    """Child: attach to ``root``, push the mutation stream through a
+    durable IndexHandle (synchronous checkpointing every
+    CHECKPOINT_EVERY records), journaling each *acked* op. The armed fault
+    point (via REPRO_FAULTS in our environment) kills us somewhere
+    mid-protocol; finishing the whole stream means the point never fired
+    (exit 0 — the parent treats that as a matrix failure)."""
+    handle, ckpt, _ = recovery.attach(
+        root, fsync="batch", checkpoint_every=CHECKPOINT_EVERY,
+        background=False,
+    )
+    acked_path = os.path.join(root, ACKED_LOG)
+    with open(acked_path, "a") as acked:
+        for i, (op, arrays) in enumerate(mutation_stream()):
+            handle.mutate(
+                (lambda index, op=op, arrays=arrays:
+                 apply_record(index, op, arrays)),
+                records=[(op, arrays)],
+            )
+            # the ack journal: flushed (page cache survives os._exit) so
+            # the parent can reconstruct exactly what was promised
+            acked.write(f"{i}\n")
+            acked.flush()
+    handle.wal.close()
+    return 0
+
+
+def replay_reference(n_ops: int):
+    """Uncrashed replay: base snapshot + the first ``n_ops`` stream ops
+    applied through the same facade calls — the parity oracle."""
+    from repro import serve
+
+    with tempfile.TemporaryDirectory() as tmp:
+        base = os.path.join(tmp, "base")
+        make_base_root(base)
+        idx = serve.load_index(os.path.join(base, recovery.SNAPSHOT_DIR))
+    for op, arrays in mutation_stream()[:n_ops]:
+        apply_record(idx, op, arrays)
+    return idx
+
+
+def _search_sig(index, queries):
+    res = index.search(queries, k=5)
+    return np.asarray(res.ids), np.asarray(res.dists)
+
+
+def check_trial(root: str, queries, references: dict) -> dict:
+    """Parent-side verdict for one killed worker: recover and compare
+    against the acked-prefix reference (or acked+1 — the at-least-once
+    window)."""
+    acked_path = os.path.join(root, ACKED_LOG)
+    n_acked = 0
+    if os.path.exists(acked_path):
+        with open(acked_path) as f:
+            n_acked = sum(1 for line in f if line.strip())
+    result = recovery.recover(root)
+    verdict = {
+        "n_acked": n_acked,
+        "replayed": result.replayed,
+        "dropped_frames": result.dropped_frames,
+        "matched": None,
+        "ok": False,
+    }
+    for n_ops in (n_acked, n_acked + 1):
+        if n_ops > len(mutation_stream()):
+            continue
+        if n_ops not in references:
+            references[n_ops] = replay_reference(n_ops)
+        ref = references[n_ops]
+        if result.index.n != ref.n:
+            continue
+        ids, dists = _search_sig(result.index, queries)
+        ref_ids, ref_dists = _search_sig(ref, queries)
+        if (
+            np.array_equal(ids, ref_ids)
+            and np.allclose(dists, ref_dists)
+            and np.array_equal(result.index.deleted_ids, ref.deleted_ids)
+        ):
+            verdict["matched"] = n_ops
+            verdict["ok"] = True
+            break
+    return verdict
+
+
+def run_matrix(points=None, report_path: str = "RECOVERY_report.json") -> int:
+    # importing the full serving surface declares every fault point
+    import repro.serve  # noqa: F401
+
+    all_points = faults.points(kind="crash")
+    points = list(points) if points else list(all_points)
+    unknown = [p for p in points if p not in all_points]
+    if unknown:
+        print(f"unknown fault points: {unknown}", file=sys.stderr)
+        return 2
+
+    _, queries = _base_data()
+    references: dict = {}
+    report = {"checkpoint_every": CHECKPOINT_EVERY,
+              "n_ops": len(mutation_stream()), "points": {}}
+    failures = []
+    with tempfile.TemporaryDirectory() as tmp:
+        base = os.path.join(tmp, "base")
+        make_base_root(base)
+        for point in points:
+            root = os.path.join(tmp, point.replace("/", "__"))
+            shutil.copytree(base, root)
+            env = dict(
+                os.environ,
+                PYTHONPATH=str(REPO / "src"),
+                JAX_PLATFORMS="cpu",
+                REPRO_FAULTS=f"crash:{point}",
+            )
+            proc = subprocess.run(
+                [sys.executable, __file__, "--worker", root],
+                env=env, capture_output=True, text=True, timeout=600,
+            )
+            entry = {"exit_code": proc.returncode}
+            if proc.returncode != faults.CRASH_EXIT_CODE:
+                entry["ok"] = False
+                entry["error"] = (
+                    "worker did not die at the armed point "
+                    f"(exit {proc.returncode}); stderr tail: "
+                    f"{proc.stderr[-500:]!r}"
+                )
+                failures.append(f"{point}: {entry['error']}")
+            else:
+                try:
+                    entry.update(check_trial(root, queries, references))
+                except Exception as exc:  # noqa: BLE001 — a verdict, not a crash
+                    entry["ok"] = False
+                    entry["error"] = f"recovery failed: {exc!r}"
+                if not entry.get("ok"):
+                    failures.append(
+                        f"{point}: acked={entry.get('n_acked')} "
+                        f"matched={entry.get('matched')} "
+                        f"{entry.get('error', 'no acked-prefix parity')}"
+                    )
+            report["points"][point] = entry
+            status = "OK " if entry.get("ok") else "FAIL"
+            print(
+                f"  {status} {point:32s} exit={entry['exit_code']} "
+                f"acked={entry.get('n_acked', '-')} "
+                f"matched={entry.get('matched', '-')}"
+            )
+    report["ok"] = not failures
+    with open(report_path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    print(f"wrote {report_path}")
+    if failures:
+        print("recovery guard FAILED:", file=sys.stderr)
+        for msg in failures:
+            print(f"  - {msg}", file=sys.stderr)
+        return 1
+    print(
+        f"recovery guard OK ({len(points)} crash points, zero acked-mutation "
+        "loss, search parity with uncrashed replay)"
+    )
+    return 0
+
+
+def main() -> int:
+    parser = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    parser.add_argument("--worker", metavar="ROOT", default=None,
+                        help="internal: run the killable mutation stream")
+    parser.add_argument("--points", nargs="*", default=None,
+                        help="subset of fault points (default: all crash-kind)")
+    parser.add_argument("--report", default="RECOVERY_report.json")
+    args = parser.parse_args()
+    if args.worker:
+        return run_worker(args.worker)
+    return run_matrix(points=args.points, report_path=args.report)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -390,6 +390,18 @@ class AnnIndex:
     def __len__(self) -> int:
         return self.n
 
+    def health(self) -> dict:
+        """Degradation surface shared with :class:`SegmentedAnnIndex` (the
+        serving stack's ``Runtime.health`` consumes either): a single-facade
+        index has no quarantine-able parts, so it is healthy whenever it is
+        loaded at all."""
+        return {
+            "healthy": True,
+            "degraded": False,
+            "n": self.n,
+            "n_active": self.n_active,
+        }
+
     def __repr__(self) -> str:
         return (
             f"AnnIndex(algo={self.algo!r}, backend={self.backend_kind!r}, "

@@ -233,11 +233,16 @@ class SegmentedAnnIndex:
     """
 
     def __init__(self, segments, centroids, global_of, locate):
-        self.segments = segments          # list[AnnIndex]
+        self.segments = segments          # list[AnnIndex | None] (None = lost)
         self._centroids = centroids       # (S, D) routing table (frozen)
         self._global_of = global_of       # list[np int64]: local -> global
         self._locate = locate             # np (N, 2): global -> (seg, local)
         self._raw_cache = None            # (N, D) rerank corpus, built lazily
+        #: segment indices whose payload failed verification at restore —
+        #: quarantined: their vectors are unreachable, everything else serves
+        self._quarantined = frozenset(
+            s for s, seg in enumerate(segments) if seg is None
+        )
 
     @classmethod
     def build(
@@ -281,7 +286,31 @@ class SegmentedAnnIndex:
 
     @property
     def n_active(self) -> int:
-        return sum(s.n_active for s in self.segments)
+        return sum(s.n_active for s in self.segments if s is not None)
+
+    @property
+    def quarantined(self) -> frozenset:
+        """Indices of segments lost to corruption at restore (empty when
+        healthy). Their ids stay allocated (global numbering is stable) but
+        cannot be returned by search until a good snapshot is restored."""
+        return self._quarantined
+
+    def health(self) -> dict:
+        """Degraded-serving surface (DESIGN.md §15): which segments are
+        quarantined and how many ids that strands. Mirrors
+        :meth:`repro.graph.index.AnnIndex.health` so ``Runtime.health``
+        treats both uniformly."""
+        lost = sum(len(self._global_of[s]) for s in self._quarantined)
+        return {
+            "healthy": not self._quarantined,
+            "degraded": bool(self._quarantined),
+            "n": self.n,
+            "n_active": self.n_active,
+            "n_segments": len(self.segments),
+            "quarantined": sorted(self._quarantined),
+            "lost_ids": int(lost),
+            "lost_fraction": float(lost) / self.n if self.n else 0.0,
+        }
 
     @property
     def centroids(self) -> jax.Array:
@@ -301,10 +330,14 @@ class SegmentedAnnIndex:
         one segment (replicated deployments) resolves to its ``_locate``
         entry — one vector per id, like every other consumer."""
         if self._raw_cache is None or int(self._raw_cache.shape[0]) != self.n:
-            d = int(self.segments[0].data.shape[1])
-            out = np.empty((self.n, d), np.float32)
+            d = int(self._centroids.shape[1])
+            # zeros for quarantined segments' rows: their vectors are lost,
+            # but search never surfaces their ids, so the placeholder rows
+            # are only ever touched by shape-dependent code
+            out = np.zeros((self.n, d), np.float32)
             for s, seg in enumerate(self.segments):
-                out[self._global_of[s]] = np.asarray(seg.data)
+                if seg is not None:
+                    out[self._global_of[s]] = np.asarray(seg.data)
             self._raw_cache = jnp.asarray(out)
         return self._raw_cache
 
@@ -330,6 +363,13 @@ class SegmentedAnnIndex:
         """(meta, coordinator arrays, per-segment ``AnnIndex.export_state``
         tuples) — the cross-segment state is just the routing table and the
         global↔local id maps; each segment snapshots itself."""
+        if self._quarantined:
+            raise RuntimeError(
+                f"cannot export a degraded collection: segments "
+                f"{sorted(self._quarantined)} are quarantined (their data "
+                "was lost to corruption) — snapshotting now would make the "
+                "loss permanent"
+            )
         meta = {"n_segments": len(self.segments)}
         arrays = {
             "centroids": np.asarray(self._centroids),
@@ -341,8 +381,14 @@ class SegmentedAnnIndex:
 
     @classmethod
     def restore(cls, meta: dict, arrays: dict, segments: list) -> "SegmentedAnnIndex":
-        """Inverse of :meth:`export_state`."""
-        segs = [AnnIndex.restore(m, a) for m, a in segments]
+        """Inverse of :meth:`export_state`. A ``None`` entry in ``segments``
+        (how ``serve.load_index(..., quarantine=True)`` reports a
+        CRC-failing segment) restores as quarantined: the collection serves
+        the healthy remainder and :meth:`health` flags the damage."""
+        segs = [
+            None if st is None else AnnIndex.restore(st[0], st[1])
+            for st in segments
+        ]
         global_of = [
             np.asarray(arrays[f"global_of.{s}"], np.int64)
             for s in range(int(meta["n_segments"]))
@@ -383,6 +429,8 @@ class SegmentedAnnIndex:
         all_ids, all_d = [], []
         n_scan = jnp.int32(0)
         for s, seg in enumerate(self.segments):
+            if seg is None:
+                continue  # quarantined: serve the healthy remainder
             res = seg.search(queries, spec=scan)
             gids = jnp.asarray(self._global_of[s], jnp.int32)
             all_ids.append(jnp.where(
@@ -410,6 +458,12 @@ class SegmentedAnnIndex:
         d = jnp.sum(
             (new[:, None, :] - self._centroids[None, :, :]) ** 2, axis=-1
         )
+        if self._quarantined:
+            # degraded routing: never grow a lost segment — the nearest
+            # *healthy* centroid takes the vector instead
+            mask = np.zeros(len(self.segments), bool)
+            mask[sorted(self._quarantined)] = True
+            d = jnp.where(jnp.asarray(mask)[None, :], jnp.inf, d)
         route = np.asarray(jnp.argmin(d, axis=1))
         m = int(new.shape[0])
         gids = self.n + np.arange(m, dtype=np.int64)
@@ -442,6 +496,8 @@ class SegmentedAnnIndex:
         n_new = 0
         loc = self._locate[gids]
         for s, seg in enumerate(self.segments):
+            if seg is None:
+                continue  # id already unreachable; nothing to tombstone
             local = loc[loc[:, 0] == s, 1]
             if local.size:
                 n_new += seg.delete(local)
@@ -450,7 +506,8 @@ class SegmentedAnnIndex:
     def compact(self) -> None:
         """Compact every segment (purge + rewire, see AnnIndex.compact)."""
         for seg in self.segments:
-            seg.compact()
+            if seg is not None:
+                seg.compact()
 
 
 def search_segments_local(

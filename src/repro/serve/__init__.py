@@ -18,7 +18,14 @@ service whose unit of work is a request stream, not an array.
                deadline shedding, and the SLO bookkeeping behind
                ``Runtime.stats()``
     handle     IndexHandle/Generation: RCU-style snapshot-swap container —
-               readers pin an immutable generation, mutators clone-apply-flip
+               readers pin an immutable generation, mutators
+               clone-apply-log-flip (with a WAL attached, a mutation is
+               durable before it is acked)
+    wal        WalWriter + scan: CRC32-framed append-only mutation log with
+               group-commit fsync batching, rotation, and torn-tail drop
+    recovery   init/attach/recover + Checkpointer: boot-time snapshot +
+               WAL-tail replay, background ops-triggered checkpointing,
+               and the `python -m repro.serve.recovery` verify/recover CLI
     scheduler  MicroBatcher (deprecated): the original coalescing front-end,
                now a thin wrapper over Runtime
     router     SegmentRouter: nearest-centroid fan-out over segments; the
@@ -53,19 +60,30 @@ from repro.serve.admission import (  # noqa: F401
 )
 from repro.serve.engine import DEFAULT_BUCKETS, SearchEngine  # noqa: F401
 from repro.serve.handle import Generation, IndexHandle  # noqa: F401
+from repro.serve.recovery import (  # noqa: F401
+    Checkpointer,
+    RecoveryResult,
+    attach,
+    recover,
+    verify_root,
+)
+from repro.serve.recovery import init as init_durable  # noqa: F401
 from repro.serve.router import SegmentRouter  # noqa: F401
 from repro.serve.runtime import Runtime  # noqa: F401
 from repro.serve.scheduler import MicroBatcher  # noqa: F401
 from repro.serve.snapshot import (  # noqa: F401
     FORMAT_VERSION,
     load_index,
+    load_sidecar,
     save_index,
     snapshot_bytes,
 )
+from repro.serve.wal import WalRecord, WalWriter, scan as scan_wal  # noqa: F401
 
 __all__ = [
     "AdmissionConfig",
     "AdmissionController",
+    "Checkpointer",
     "DEFAULT_BUCKETS",
     "DeadlineExceededError",
     "FORMAT_VERSION",
@@ -73,11 +91,20 @@ __all__ = [
     "IndexHandle",
     "MicroBatcher",
     "QueueFullError",
+    "RecoveryResult",
     "Runtime",
     "SearchEngine",
     "SearchSpec",
     "SegmentRouter",
+    "WalRecord",
+    "WalWriter",
+    "attach",
+    "init_durable",
     "load_index",
+    "load_sidecar",
+    "recover",
     "save_index",
+    "scan_wal",
     "snapshot_bytes",
+    "verify_root",
 ]

@@ -40,6 +40,35 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
+from repro.serve.wal import apply_record
+from repro.testing import faults
+
+#: mutation logged + durable, reference store not yet executed: recovery
+#: replays it, the caller was never acked — the at-least-once window.
+P_BEFORE_FLIP = faults.declare("handle/before_flip")
+#: reference store done, ack not yet delivered to the caller.
+P_AFTER_FLIP = faults.declare("handle/after_flip")
+
+
+def add_record(vectors) -> tuple[str, dict]:
+    """Normalize an ``add`` into its WAL record ``(op, arrays)`` form. The
+    normalized array is both what gets logged and what gets applied
+    (:func:`repro.serve.wal.apply_record`), so log and index can never
+    disagree about the inserted payload."""
+    arr = np.asarray(vectors, np.float32)
+    if arr.ndim == 1:
+        arr = arr[None]
+    return "add", {"vectors": arr}
+
+
+def delete_record(ids) -> tuple[str, dict]:
+    """Normalize a ``delete`` into its WAL record form."""
+    return "delete", {"ids": np.atleast_1d(np.asarray(ids, np.int64))}
+
+
+def compact_record() -> tuple[str, dict]:
+    """A ``compact`` WAL record (no payload — the op is deterministic)."""
+    return "compact", {}
 
 
 class Generation:
@@ -90,7 +119,7 @@ class IndexHandle:
     them.
     """
 
-    def __init__(self, index):
+    def __init__(self, index, *, wal=None):
         if not hasattr(index, "export_state"):
             raise TypeError(
                 "IndexHandle wraps a repro.index.AnnIndex-like object with "
@@ -99,6 +128,9 @@ class IndexHandle:
         self._generation = Generation(0, index)
         self._mutex = threading.Lock()  # serializes mutators, not readers
         self._prepare_hooks: list = []
+        self._commit_hooks: list = []
+        self.wal = wal  # WalWriter or None; owned by the handle once attached
+        self._last_lsn = wal.last_lsn if wal is not None else 0
 
     # ---- reader side -----------------------------------------------------
 
@@ -112,6 +144,11 @@ class IndexHandle:
         """The latest published generation number."""
         return self._generation.gen
 
+    @property
+    def last_lsn(self) -> int:
+        """WAL LSN of the last published mutation (0 when no WAL)."""
+        return self._last_lsn
+
     # ---- mutator side ----------------------------------------------------
 
     def on_prepare(self, hook) -> "IndexHandle":
@@ -122,16 +159,41 @@ class IndexHandle:
         self._prepare_hooks.append(hook)
         return self
 
-    def mutate(self, fn):
-        """Clone-apply-flip: run ``fn(clone)`` against a private copy of the
-        current index, then atomically publish the result.
+    def on_commit(self, hook) -> "IndexHandle":
+        """Register ``hook(generation, lsn, n_records)`` to run after every
+        successful flip, still under the mutation lock — the checkpointer's
+        ops-since-checkpoint trigger. A raising hook propagates to the
+        mutator but cannot un-publish the flip."""
+        self._commit_hooks.append(hook)
+        return self
+
+    def mutate(self, fn, *, records=None):
+        """Clone-apply-log-flip: run ``fn(clone)`` against a private copy of
+        the current index, then atomically publish the result.
 
         Returns ``(generation, result)`` — the newly published
         :class:`Generation` and whatever ``fn`` returned. ``fn`` may call
         any facade maintenance method (or several: a batched group of
         mutations flips once). If ``fn`` raises, nothing is published.
-        """
+
+        With a WAL attached, ``records`` — the ``(op, arrays)`` list
+        describing exactly what ``fn`` applies (see :func:`add_record` et
+        al.) — is appended and group-committed (ONE fsync for the whole
+        group) *after* the clone mutates and warms but *before* the
+        reference store, so by the time any caller sees the new generation
+        (the ack), its mutations are on disk. The one crash window left is
+        logged-but-unflipped: recovery replays a mutation nobody was acked
+        for — at-least-once, never lost-ack (DESIGN.md §15). A durable
+        handle refuses record-less mutations: an arbitrary closure can't be
+        replayed."""
         with self._mutex:
+            if self.wal is not None and records is None:
+                raise ValueError(
+                    "this IndexHandle has a WAL attached: mutate() needs "
+                    "records=[(op, arrays), ...] so the mutation can be "
+                    "replayed at recovery (use add/delete/compact, or build "
+                    "records with serve.handle.add_record et al.)"
+                )
             with obs.span("serve/flip", base_gen=self._generation.gen) as flip:
                 base = self._generation
                 with obs.span("serve/flip/clone"):
@@ -143,24 +205,42 @@ class IndexHandle:
                 with obs.span("serve/flip/prepare"):
                     for hook in self._prepare_hooks:
                         hook(new)
+                lsn = self._last_lsn
+                if self.wal is not None and records:
+                    with obs.span("serve/flip/log", n_records=len(records)):
+                        for op, arrays in records:
+                            lsn = self.wal.append(op, arrays)
+                        self.wal.commit()  # group commit: durable before ack
+                faults.crash_point(P_BEFORE_FLIP)
                 flip.set(gen=new.gen)
                 self._generation = new  # flip: one atomic reference store
+                self._last_lsn = lsn
+                faults.crash_point(P_AFTER_FLIP)
             obs.tick("serve_flips_total")
+            for hook in self._commit_hooks:
+                hook(new, lsn, len(records) if records else 0)
         return new, result
+
+    def _mutate_records(self, records):
+        def fn(index):
+            out = [apply_record(index, op, arrays) for op, arrays in records]
+            return out[0] if len(out) == 1 else out
+
+        return self.mutate(fn, records=records)
 
     def add(self, vectors) -> Generation:
         """Publish a generation with ``vectors`` inserted (facade ``add``)."""
-        return self.mutate(lambda index: index.add(vectors))[0]
+        return self._mutate_records([add_record(vectors)])[0]
 
     def delete(self, ids) -> Generation:
         """Publish a generation with ``ids`` tombstoned (facade ``delete``)."""
-        return self.mutate(lambda index: index.delete(ids))[0]
+        return self._mutate_records([delete_record(ids)])[0]
 
     def compact(self) -> Generation:
         """Publish a generation with tombstones rewired out (facade
         ``compact``) — array shapes are preserved (retired slots keep their
         rows), so this flip costs zero recompiles downstream."""
-        return self.mutate(lambda index: index.compact())[0]
+        return self._mutate_records([compact_record()])[0]
 
     def __repr__(self) -> str:
         g = self._generation

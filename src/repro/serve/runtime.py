@@ -42,7 +42,10 @@ from __future__ import annotations
 import heapq
 import itertools
 import queue as queue_mod
+import sys
 import threading
+import time
+import traceback
 from concurrent.futures import Future
 
 import numpy as np
@@ -56,7 +59,13 @@ from repro.serve.admission import (
     DeadlineExceededError,
 )
 from repro.serve.engine import DEFAULT_BUCKETS, SearchEngine
-from repro.serve.handle import IndexHandle
+from repro.serve.handle import (
+    IndexHandle,
+    add_record,
+    compact_record,
+    delete_record,
+)
+from repro.serve.wal import apply_record
 
 _NO_DEADLINE = float("inf")
 
@@ -119,6 +128,7 @@ class Runtime:
         max_queue: int | None = None,
         default_deadline_ms: float | None = None,
         admission: AdmissionController | None = None,
+        wal=None,
     ):
         if max_wait_ms < 0:
             raise ValueError(f"max_wait_ms must be >= 0, got {max_wait_ms}")
@@ -126,7 +136,16 @@ class Runtime:
             raise ValueError("Runtime needs an index, an IndexHandle, or an engine")
         if index is None:
             index = engine.index
-        self.handle = index if isinstance(index, IndexHandle) else IndexHandle(index)
+        if isinstance(index, IndexHandle):
+            if wal is not None:
+                raise ValueError(
+                    "pass the WAL when constructing the IndexHandle (or use "
+                    "serve.recovery.attach) — a handle's log is part of its "
+                    "identity, not per-runtime"
+                )
+            self.handle = index
+        else:
+            self.handle = IndexHandle(index, wal=wal)
         if engine is None:
             if spec is None:
                 spec = SearchSpec(
@@ -159,19 +178,46 @@ class Runtime:
         self._max_batch_seen = 0
         self._batch_sizes: list = []
         self._m_cold = obs.counter("serve_cold_dispatch_total", inst=inst)
+        self._m_restarts = obs.counter("thread_restarts_total", inst=inst)
         self._g_depth = obs.gauge("serve_queue_depth", inst=inst)
 
         self._mut_q: queue_mod.SimpleQueue = queue_mod.SimpleQueue()
         self.handle.on_prepare(self._prepare_generation)
 
+        # the supervisor wrapper keeps each loop alive across crashes: a
+        # raising iteration is counted, backed off, and re-entered — one
+        # poisoned request must not turn into a dead scheduler that strands
+        # every future behind it
         self._scheduler = threading.Thread(
-            target=self._schedule_loop, name="runtime-scheduler", daemon=True
+            target=self._supervised, args=(self._schedule_loop,),
+            name="runtime-scheduler", daemon=True,
         )
         self._mutator = threading.Thread(
-            target=self._mutate_loop, name="runtime-mutator", daemon=True
+            target=self._supervised, args=(self._mutate_loop,),
+            name="runtime-mutator", daemon=True,
         )
         self._scheduler.start()
         self._mutator.start()
+
+    def _supervised(self, target) -> None:
+        """Restart ``target`` on any escape, with capped exponential
+        backoff; normal return ends the thread. Crash counts land in
+        ``thread_restarts_total`` (surfaced by :meth:`health`)."""
+        backoff = 0.05
+        while True:
+            try:
+                target()
+                return
+            except BaseException:  # noqa: BLE001 — the loop IS the fallback
+                self._m_restarts.inc()
+                print(
+                    f"runtime: {threading.current_thread().name} crashed, "
+                    f"restarting in {backoff:.2f}s",
+                    file=sys.stderr,
+                )
+                traceback.print_exc()
+                time.sleep(backoff)
+                backoff = min(backoff * 2.0, 1.0)
 
     # ---- client side: search ---------------------------------------------
 
@@ -218,13 +264,19 @@ class Runtime:
 
     # ---- client side: mutation -------------------------------------------
 
-    def _submit_mutation(self, fn) -> Future:
+    def _submit_mutation(self, fn, records=None) -> Future:
         fut: Future = Future()
         with self._cv:
             if self._closed:
                 raise RuntimeError("Runtime is closed")
-        self._mut_q.put((fn, fut))
+        self._mut_q.put((fn, fut, records))
         return fut
+
+    def _submit_record(self, record) -> Future:
+        op, arrays = record
+        return self._submit_mutation(
+            lambda index: apply_record(index, op, arrays), [record]
+        )
 
     def add(self, vectors) -> Future:
         """Insert a batch behind the reader path; Future of BuildStats.
@@ -233,25 +285,33 @@ class Runtime:
         generation flips — searches in flight (and submitted meanwhile)
         keep serving the pre-mutation generation until the flip publishes.
         Queued mutations group-commit into one flip (one clone, one warm,
-        one publish) whenever the mutator is behind — the write-side twin
-        of request batching."""
-        return self._submit_mutation(lambda index: index.add(vectors))
+        one publish — and, with a WAL attached, one fsync) whenever the
+        mutator is behind — the write-side twin of request batching."""
+        return self._submit_record(add_record(vectors))
 
     def delete(self, ids) -> Future:
         """Tombstone ids behind the reader path; Future of the newly-deleted
         count. Shape-preserving: the flip re-uses every warm executable."""
-        return self._submit_mutation(lambda index: index.delete(ids))
+        return self._submit_record(delete_record(ids))
 
     def compact(self) -> Future:
         """Rewire tombstones out behind the reader path; Future of
         BuildStats. Shape-preserving (retired slots keep their rows), so
         the flip costs zero recompiles."""
-        return self._submit_mutation(lambda index: index.compact())
+        return self._submit_record(compact_record())
 
     def mutate(self, fn) -> Future:
         """Run an arbitrary ``fn(index)`` as one atomic generation flip —
         e.g. an add+delete pair that must never be observed half-applied.
-        Future of ``fn``'s return value."""
+        Future of ``fn``'s return value. Refused on a durable runtime: an
+        opaque closure cannot be WAL-logged for replay — use
+        ``add``/``delete``/``compact``."""
+        if self.handle.wal is not None:
+            raise ValueError(
+                "this Runtime's IndexHandle has a WAL attached: arbitrary "
+                "mutation closures cannot be replayed at recovery — use "
+                "add/delete/compact"
+            )
         return self._submit_mutation(fn)
 
     # ---- lifecycle -------------------------------------------------------
@@ -264,16 +324,73 @@ class Runtime:
         self.engine.warmup(specs=specs)
         return self
 
-    def close(self) -> None:
+    def close(self, timeout: float | None = 60.0) -> None:
         """Drain and stop: every pending search is served (or shed, if its
         deadline expired), every queued mutation is applied, then both
-        worker threads exit."""
-        with self._cv:
-            self._closed = True
-            self._cv.notify_all()
-        self._scheduler.join()
+        worker threads exit.
+
+        ``timeout`` bounds each join (None = wait forever, the legacy
+        behavior). A wedged loop thread — stuck in a hung dispatch, say —
+        no longer deadlocks shutdown: on timeout every still-pending search
+        and mutation future is failed with :class:`RuntimeError` so no
+        caller blocks forever, and the same error is raised here (the
+        daemon threads die with the process)."""
+        # a wedged scheduler may be parked inside _take_pack HOLDING _cv, so
+        # even the lock acquisition must be bounded; _closed is a plain
+        # attribute store (GIL-atomic) and notify only matters for threads
+        # that are actually waiting — which a wedged one is not
+        acquired = self._cv.acquire(timeout=-1 if timeout is None else timeout)
+        self._closed = True
+        if acquired:
+            try:
+                self._cv.notify_all()
+            finally:
+                self._cv.release()
+        self._scheduler.join(timeout)
         self._mut_q.put(None)
-        self._mutator.join()
+        self._mutator.join(timeout)
+        wedged = [
+            t.name for t in (self._scheduler, self._mutator) if t.is_alive()
+        ]
+        if wedged:
+            err = RuntimeError(
+                f"Runtime.close timed out after {timeout}s: "
+                f"{', '.join(wedged)} wedged"
+            )
+            n_failed = self._fail_pending(err)
+            obs.tick("serve_close_timeouts_total")
+            raise RuntimeError(
+                f"Runtime.close timed out after {timeout}s: "
+                f"{', '.join(wedged)} still alive; failed {n_failed} pending "
+                "future(s) instead of deadlocking"
+            )
+
+    def _fail_pending(self, exc: BaseException) -> int:
+        """Fail every queued search + mutation future (wedged shutdown)."""
+        n = 0
+        acquired = self._cv.acquire(timeout=1.0)  # wedge may hold the lock
+        try:
+            pending = [req for _, _, req in self._heap]
+            self._heap.clear()
+            self._g_depth.set(0)
+        finally:
+            if acquired:
+                self._cv.release()
+        for req in pending:
+            if not req.future.done():
+                req.future.set_exception(exc)
+                n += 1
+        while True:
+            try:
+                item = self._mut_q.get_nowait()
+            except queue_mod.Empty:
+                break
+            if item is None:
+                continue
+            if not item[1].done():
+                item[1].set_exception(exc)
+                n += 1
+        return n
 
     def __enter__(self) -> "Runtime":
         return self
@@ -401,11 +518,16 @@ class Runtime:
         results = [None] * len(group)
 
         def fn(index):
-            for i, (mfn, _) in enumerate(group):
+            for i, (mfn, _, _) in enumerate(group):
                 results[i] = mfn(index)
 
+        records = None
+        if self.handle.wal is not None:
+            # the group's flip logs all its records and group-commits them
+            # with ONE fsync before any member future is acked
+            records = [r for _, _, recs in group for r in (recs or ())]
         try:
-            gen, _ = self.handle.mutate(fn)
+            gen, _ = self.handle.mutate(fn, records=records)
         except BaseException as exc:  # noqa: BLE001
             if len(group) == 1:
                 group[0][1].set_exception(exc)
@@ -419,7 +541,7 @@ class Runtime:
         # table — refresh never drops compiled fns); pinned in-flight
         # requests keep their own generation view
         self.engine.refresh(index=gen.index)
-        for (_, fut), res in zip(group, results):
+        for (_, fut, _), res in zip(group, results):
             fut.set_result(res)
 
     def _mutate_loop(self) -> None:
@@ -449,6 +571,37 @@ class Runtime:
         """The latest published index generation number."""
         return self.handle.generation
 
+    def health(self) -> dict:
+        """Liveness + degradation surface (DESIGN.md §15): are both loop
+        threads alive, how often has the supervisor restarted one, is the
+        served index degraded (quarantined segments), and — for durable
+        handles — where the WAL stands. ``healthy`` is the AND of it all."""
+        gen = self.handle.current
+        idx_health = getattr(gen.index, "health", None)
+        idx = (
+            idx_health() if callable(idx_health)
+            else {"healthy": True, "degraded": False}
+        )
+        alive_sched = self._scheduler.is_alive()
+        alive_mut = self._mutator.is_alive()
+        degraded = bool(idx.get("degraded", False))
+        return {
+            "healthy": (
+                alive_sched and alive_mut and not degraded and not self._closed
+            ),
+            "closed": self._closed,
+            "scheduler_alive": alive_sched,
+            "mutator_alive": alive_mut,
+            "thread_restarts": int(self._m_restarts.value),
+            "degraded": degraded,
+            "generation": gen.gen,
+            "pending": len(self._heap),
+            "index": idx,
+            "wal": (
+                self.handle.wal.stats() if self.handle.wal is not None else None
+            ),
+        }
+
     def stats(self) -> dict:
         """The extended serving telemetry surface (DESIGN.md §13):
         admission counters (admitted/rejected/shed/served/deadline_misses),
@@ -463,6 +616,7 @@ class Runtime:
             "mean_batch": float(sizes.mean()) if sizes.size else 0.0,
             "max_batch_seen": self._max_batch_seen,
             "cold_dispatches": int(self._m_cold.value),
+            "thread_restarts": int(self._m_restarts.value),
             **self.admission.stats(),
             "engine": self.engine.stats(),
         }

@@ -28,13 +28,16 @@ from __future__ import annotations
 import json
 import os
 import shutil
+import zipfile
 import zlib
 from typing import Any
 
 import numpy as np
 
+from repro import obs
 from repro.graph.index import AnnIndex
 from repro.graph.segmented import SegmentedAnnIndex
+from repro.testing import faults
 
 #: Bump on any incompatible layout change; ``load_index`` refuses newer
 #: formats with an informative error instead of misreading them.
@@ -57,6 +60,16 @@ FORMAT_VERSION = 3
 
 _MANIFEST = "manifest.json"
 _ARRAYS = "arrays.npz"
+_SIDECAR = "sidecar.json"
+
+#: payload fully written to <path>.tmp; the publishing rename hasn't run.
+P_AFTER_TMP_WRITE = faults.declare("snapshot/after_tmp_write")
+#: the overwrite swap's no-snapshot instant: old moved aside, new not yet in.
+P_BETWEEN_RENAMES = faults.declare("snapshot/between_renames")
+#: new snapshot live at <path>; the stale <path>.old not yet removed.
+P_AFTER_PUBLISH = faults.declare("snapshot/after_publish")
+#: bitrot injection: one array's stored bytes flip after its CRC is taken.
+P_BITFLIP_ARRAY = faults.declare("snapshot/bitflip_array", kind="inject")
 
 
 def _write_payload(dirpath: str, manifest: dict, arrays: dict) -> None:
@@ -74,6 +87,8 @@ def _write_payload(dirpath: str, manifest: dict, arrays: dict) -> None:
             "dtype": str(arr.dtype),
             "crc": zlib.crc32(np.ascontiguousarray(arr).tobytes()),
         }
+        if faults.check(P_BITFLIP_ARRAY) and arr.size:
+            stored[key] = faults.bit_flip(arr)  # CRC above saw the original
     np.savez(os.path.join(dirpath, _ARRAYS), **stored)
     manifest = dict(manifest, format_version=FORMAT_VERSION, arrays=entries)
     with open(os.path.join(dirpath, _MANIFEST), "w") as f:
@@ -81,18 +96,41 @@ def _write_payload(dirpath: str, manifest: dict, arrays: dict) -> None:
 
 
 def _read_payload(dirpath: str, *, verify: bool) -> tuple[dict, dict]:
-    with open(os.path.join(dirpath, _MANIFEST)) as f:
-        manifest = json.load(f)
+    manifest_path = os.path.join(dirpath, _MANIFEST)
+    if not os.path.isfile(manifest_path):
+        raise FileNotFoundError(
+            f"snapshot at {dirpath} has no {_MANIFEST} — not a snapshot "
+            "directory, or its write was lost"
+        )
+    with open(manifest_path) as f:
+        try:
+            manifest = json.load(f)
+        except json.JSONDecodeError as exc:
+            raise IOError(
+                f"snapshot manifest {manifest_path} is truncated or corrupt "
+                f"({exc})"
+            ) from exc
     version = manifest.get("format_version")
     if version is None or version > FORMAT_VERSION:
         raise ValueError(
             f"snapshot at {dirpath} has format_version={version!r}; this "
             f"build reads <= {FORMAT_VERSION} (upgrade repro.serve to load it)"
         )
+    arrays_path = os.path.join(dirpath, _ARRAYS)
+    if not os.path.isfile(arrays_path):
+        raise FileNotFoundError(
+            f"snapshot at {dirpath} is missing its array file {_ARRAYS}"
+        )
     arrays = {}
-    with np.load(os.path.join(dirpath, _ARRAYS)) as data:
+    with np.load(arrays_path) as data:
         for key, meta in manifest["arrays"].items():
-            arr = data[key]
+            try:
+                arr = data[key]
+            except KeyError as exc:
+                raise IOError(
+                    f"array {meta['name']!r} ({key}) missing from snapshot "
+                    f"{dirpath} — manifest and {_ARRAYS} disagree"
+                ) from exc
             if verify:
                 crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
                 if crc != meta["crc"]:
@@ -104,16 +142,31 @@ def _read_payload(dirpath: str, *, verify: bool) -> tuple[dict, dict]:
     return manifest, arrays
 
 
-def save_index(path: str, index: Any, *, overwrite: bool = True) -> str:
+def save_index(
+    path: str, index: Any, *, overwrite: bool = True,
+    sidecar: dict | None = None,
+) -> str:
     """Atomically snapshot an :class:`AnnIndex` or :class:`SegmentedAnnIndex`.
 
     Writes to ``<path>.tmp`` then publishes with one ``os.replace``; with
     ``overwrite`` (default) an existing snapshot at ``path`` is swapped out
-    only after the new one is fully on disk. Returns ``path``."""
+    only after the new one is fully on disk. ``sidecar`` (a small JSON-able
+    dict — the recovery layer stores the WAL LSN the snapshot covers) is
+    written *inside* the tmp directory before the publishing rename, so a
+    snapshot and its sidecar are one atomic unit: no crash can pair a new
+    snapshot with a stale LSN. Returns ``path``."""
     if not isinstance(index, (AnnIndex, SegmentedAnnIndex)):
         raise TypeError(
             f"save_index expects AnnIndex or SegmentedAnnIndex, got "
             f"{type(index).__name__}"
+        )
+    quarantined = getattr(index, "quarantined", ())
+    if quarantined:
+        raise RuntimeError(
+            f"refusing to snapshot a degraded index: segments "
+            f"{sorted(quarantined)} are quarantined and their data is not "
+            "recoverable from this process — restore from a good snapshot "
+            "instead of overwriting one"
         )
     path = os.path.abspath(path)
     if os.path.lexists(path) and not overwrite:
@@ -136,9 +189,13 @@ def save_index(path: str, index: Any, *, overwrite: bool = True) -> str:
         else:
             meta, arrays = index.export_state()
             _write_payload(tmp, {"kind": "ann_index", "meta": meta}, arrays)
+        if sidecar is not None:
+            with open(os.path.join(tmp, _SIDECAR), "w") as f:
+                json.dump(sidecar, f, indent=1, sort_keys=True)
     except BaseException:
         shutil.rmtree(tmp, ignore_errors=True)
         raise
+    faults.crash_point(P_AFTER_TMP_WRITE)
     if os.path.lexists(path):
         # Two renames are needed to swap directories, so there is an instant
         # with nothing at ``path``; the previous snapshot survives it at
@@ -147,14 +204,29 @@ def save_index(path: str, index: Any, *, overwrite: bool = True) -> str:
         old = path + ".old"
         shutil.rmtree(old, ignore_errors=True)
         os.replace(path, old)
+        faults.crash_point(P_BETWEEN_RENAMES)
         os.replace(tmp, path)
+        faults.crash_point(P_AFTER_PUBLISH)
         shutil.rmtree(old, ignore_errors=True)
     else:
         os.replace(tmp, path)  # atomic on POSIX
     return path
 
 
-def load_index(path: str, *, verify: bool = True):
+def load_sidecar(path: str) -> dict | None:
+    """The sidecar dict saved with a snapshot (None if it has none).
+    Follows the same ``<path>.old`` fallback as :func:`load_index`."""
+    path = os.path.abspath(path)
+    if not os.path.isdir(path) and os.path.isdir(path + ".old"):
+        path = path + ".old"
+    sidecar_path = os.path.join(path, _SIDECAR)
+    if not os.path.isfile(sidecar_path):
+        return None
+    with open(sidecar_path) as f:
+        return json.load(f)
+
+
+def load_index(path: str, *, verify: bool = True, quarantine: bool = False):
     """Load a snapshot written by :func:`save_index`.
 
     Returns the same concrete type that was saved; ``verify`` (default)
@@ -162,27 +234,57 @@ def load_index(path: str, *, verify: bool = True):
     searches bit-identically to the saved instance and accepts further
     ``add``/``delete``/``compact``. If ``path`` is missing but a
     ``<path>.old`` exists (an overwriting save crashed mid-swap), the
-    previous snapshot is loaded from there."""
-    path = os.path.abspath(path)
+    previous snapshot is loaded from there — and, on success, promoted back
+    to ``path`` so the layout heals instead of depending on the fallback
+    forever.
+
+    ``quarantine`` (segmented snapshots only) turns per-segment corruption
+    from fatal into degraded: a segment whose payload fails its CRC (or is
+    missing/truncated) restores as quarantined — the collection serves the
+    healthy remainder and reports the damage via
+    :meth:`SegmentedAnnIndex.health`. Coordinator-payload corruption, or
+    every segment failing, still raises."""
+    requested = path = os.path.abspath(path)
+    fell_back = False
     if not os.path.isdir(path):
         old = path + ".old"
         if os.path.isdir(old):
             path = old  # crashed overwrite: fall back to the last good copy
+            fell_back = True
         else:
             raise FileNotFoundError(f"no snapshot directory at {path}")
     manifest, arrays = _read_payload(path, verify=verify)
     kind = manifest.get("kind")
     if kind == "ann_index":
-        return AnnIndex.restore(manifest["meta"], arrays)
-    if kind == "segmented_ann_index":
+        index = AnnIndex.restore(manifest["meta"], arrays)
+    elif kind == "segmented_ann_index":
         n_seg = int(manifest["meta"]["n_segments"])
         segments = []
+        n_bad = 0
         for s in range(n_seg):
             seg_dir = os.path.join(path, f"seg_{s:03d}")
-            seg_manifest, seg_arrays = _read_payload(seg_dir, verify=verify)
+            try:
+                seg_manifest, seg_arrays = _read_payload(seg_dir, verify=verify)
+            except (OSError, ValueError, KeyError, zipfile.BadZipFile):
+                if not quarantine:
+                    raise
+                n_bad += 1
+                obs.tick("snapshot_quarantined_segments_total")
+                segments.append(None)  # SegmentedAnnIndex.restore quarantines
+                continue
             segments.append((seg_manifest["meta"], seg_arrays))
-        return SegmentedAnnIndex.restore(manifest["meta"], arrays, segments)
-    raise ValueError(f"snapshot at {path} has unknown kind {kind!r}")
+        if n_bad == n_seg and n_seg > 0:
+            raise IOError(
+                f"snapshot at {path}: all {n_seg} segments failed "
+                "verification — nothing left to serve"
+            )
+        index = SegmentedAnnIndex.restore(manifest["meta"], arrays, segments)
+    else:
+        raise ValueError(f"snapshot at {path} has unknown kind {kind!r}")
+    if fell_back:
+        # heal the layout: the surviving copy becomes the snapshot again
+        os.replace(path, requested)
+    return index
 
 
 def snapshot_bytes(path: str) -> int:

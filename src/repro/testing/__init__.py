@@ -1,0 +1,15 @@
+"""``repro.testing`` — fault-injection hooks for crash-safety testing.
+
+Production code declares *named fault points* (:mod:`repro.testing.faults`)
+at the handful of instants where a crash is interesting — between a WAL
+append and its fsync, between the two renames of a snapshot swap, right
+before a generation flip. The points are free when disarmed (one dict
+check) and deterministic when armed, which is what lets
+``benchmarks/check_recovery_guard.py`` run the same mutation stream
+through every registered crash site and assert that recovery never loses
+an acked mutation.
+"""
+
+from repro.testing import faults  # noqa: F401
+
+__all__ = ["faults"]

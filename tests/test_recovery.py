@@ -1,0 +1,474 @@
+"""Tests for the durability stack (DESIGN.md §15): WAL, recovery, chaos knobs.
+
+Contracts:
+  1. WAL framing is self-validating: records round-trip bit-exactly; a torn
+     tail, a flipped bit, or an LSN gap ends the valid prefix instead of
+     replaying garbage; group commit pays ONE fsync per flip; rotation +
+     checkpoint truncation retire covered segments; a reopened writer never
+     appends into an old segment and resumes LSNs after the scanned tail.
+  2. Recovery reconstructs acked state: snapshot + WAL-tail replay searches
+     bit-identically to the live index, replays nothing after a clean
+     checkpoint, and replays the logged-but-unflipped record a crash in the
+     at-least-once window left behind (never loses an acked one).
+  3. The snapshot swap has no unrecoverable instant: a crash at any of its
+     fault points leaves a loadable last-good snapshot, and loading from the
+     ``.old`` fallback heals the directory layout.
+  4. Degradation over death: a segmented snapshot with corrupt segments
+     serves the healthy remainder behind explicit ``health()`` flags; the
+     Runtime supervisor restarts crashed loop threads; ``close(timeout=)``
+     fails pending futures instead of deadlocking on a wedged thread.
+
+The cross-process half of contract 2 — process-killing crashes at every
+registered fault point — lives in ``benchmarks/check_recovery_guard.py``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+import zipfile
+
+import numpy as np
+import pytest
+
+from repro import serve
+from repro.graph.hnsw import HNSWParams
+from repro.graph.segmented import SegmentedAnnIndex
+from repro.index import AnnIndex
+from repro.serve import recovery
+from repro.serve import wal as wal_mod
+from repro.testing import faults
+from tests.conftest import make_clustered
+
+PARAMS = HNSWParams(r_upper=4, r_base=8, ef=16, batch=32, max_layers=2)
+N, N_ADD, N_Q, DIM = 200, 24, 8, 16
+
+
+@pytest.fixture(autouse=True)
+def _disarm_faults():
+    """No armed fault may leak into the next test."""
+    faults.disarm()
+    yield
+    faults.disarm()
+
+
+@pytest.fixture(scope="module")
+def data():
+    x = make_clustered(N + N_ADD + N_Q, DIM, n_clusters=10, seed=11)
+    x = np.asarray(x, np.float32)
+    return x[:N], x[N:N + N_ADD], x[N + N_ADD:]
+
+
+@pytest.fixture(scope="module")
+def base_index(data):
+    base, _, _ = data
+    return AnnIndex.build(base, algo="hnsw", backend="fp32", params=PARAMS)
+
+
+def _assert_same_search(a, b, queries, *, k=5, ef=24):
+    ra, rb = a.search(queries, k=k, ef=ef), b.search(queries, k=k, ef=ef)
+    np.testing.assert_array_equal(np.asarray(ra.ids), np.asarray(rb.ids))
+    np.testing.assert_array_equal(np.asarray(ra.dists), np.asarray(rb.dists))
+    np.testing.assert_array_equal(a.deleted_ids, b.deleted_ids)
+
+
+# ---------------------------------------------------------------------------
+# 1) WAL framing, durability policy, rotation, reopen
+# ---------------------------------------------------------------------------
+
+
+class TestWalFraming:
+    def test_roundtrip_and_group_commit(self, tmp_path):
+        d = str(tmp_path / "wal")
+        vec = np.arange(12, dtype=np.float32).reshape(3, 4)
+        ids = np.asarray([7, 9], np.int64)
+        with wal_mod.WalWriter(d, fsync="batch") as w:
+            assert w.append("add", {"vectors": vec}) == 1
+            assert w.append("delete", {"ids": ids}) == 2
+            assert w.append("compact", {}) == 3
+            w.commit()  # the whole group rides ONE fsync
+            st = w.stats()
+            assert st["appends"] == 3 and st["fsyncs"] == 1
+        scanned = wal_mod.scan(d)
+        assert [r.lsn for r in scanned.records] == [1, 2, 3]
+        assert [r.op for r in scanned.records] == ["add", "delete", "compact"]
+        np.testing.assert_array_equal(scanned.records[0].arrays["vectors"], vec)
+        np.testing.assert_array_equal(scanned.records[1].arrays["ids"], ids)
+        assert scanned.dropped_frames == 0 and not scanned.truncated
+        assert scanned.last_lsn == 3
+
+    @pytest.mark.parametrize("policy,expect_fsyncs", [("always", 3), ("none", 0)])
+    def test_fsync_policy_counts(self, tmp_path, policy, expect_fsyncs):
+        with wal_mod.WalWriter(str(tmp_path / "wal"), fsync=policy) as w:
+            for _ in range(3):
+                w.append("compact", {})
+            w.commit()
+            assert w.stats()["fsyncs"] == expect_fsyncs
+        with pytest.raises(ValueError, match="fsync"):
+            wal_mod.WalWriter(str(tmp_path / "wal2"), fsync="sometimes")
+
+    def test_torn_tail_dropped(self, tmp_path):
+        d = str(tmp_path / "wal")
+        with wal_mod.WalWriter(d, fsync="none") as w:
+            for _ in range(3):
+                w.append("compact", {})
+        seg = os.path.join(d, "wal-00000000.log")
+        frame = wal_mod.encode_record(4, "compact", {})
+        with open(seg, "ab") as f:
+            f.write(faults.torn_write(frame))  # power died mid-frame
+        scanned = wal_mod.scan(d)
+        assert [r.lsn for r in scanned.records] == [1, 2, 3]
+        assert scanned.truncated
+
+    def test_bitflipped_frame_ends_valid_prefix(self, tmp_path):
+        d = str(tmp_path / "wal")
+        faults.arm("wal/bitflip_frame", hits=2)  # corrupt the 2nd payload
+        with wal_mod.WalWriter(d, fsync="none") as w:
+            for _ in range(3):
+                w.append("compact", {})
+        scanned = wal_mod.scan(d)
+        assert [r.lsn for r in scanned.records] == [1]
+        assert scanned.dropped_frames >= 1
+
+    def test_lsn_gap_stops_replay(self, tmp_path):
+        d = str(tmp_path / "wal")
+        with wal_mod.WalWriter(d, fsync="none") as w:
+            w.append("compact", {}), w.append("compact", {})
+            w.rotate()
+            w.append("compact", {}), w.append("compact", {})
+            w.rotate()
+            w.append("compact", {}), w.append("compact", {})
+        os.remove(os.path.join(d, "wal-00000001.log"))  # lose lsns 3-4
+        scanned = wal_mod.scan(d)
+        # replaying 5-6 over a state that never saw 3-4 would reorder
+        # history: the valid prefix ends at the gap
+        assert [r.lsn for r in scanned.records] == [1, 2]
+        assert scanned.dropped_frames >= 1
+
+    def test_rotation_truncation_and_reopen(self, tmp_path):
+        d = str(tmp_path / "wal")
+        w = wal_mod.WalWriter(d, fsync="none", rotate_bytes=1 << 30)
+        for _ in range(4):
+            w.append("compact", {})
+        w.rotate()
+        w.append("compact", {}), w.append("compact", {})
+        assert w.truncate_upto(4) == 1  # the sealed segment is covered
+        assert w.stats()["segments"] == 1
+        w.close()
+        scanned = wal_mod.scan(d)
+        assert [r.lsn for r in scanned.records] == [5, 6]
+        # a reopened writer resumes LSNs after the scanned tail and never
+        # appends into an old (possibly torn) segment
+        w2 = wal_mod.WalWriter(d, fsync="none")
+        assert w2.last_lsn == 6
+        assert w2.append("compact", {}) == 7
+        w2.close()
+        assert len(wal_mod.scan(d).segments) >= 2
+
+
+# ---------------------------------------------------------------------------
+# 2) snapshot swap crash windows (the ISSUE-9 overwrite-crash satellite)
+# ---------------------------------------------------------------------------
+
+
+class TestSnapshotCrashWindows:
+    def test_between_renames_falls_back_and_heals(
+        self, tmp_path, base_index, data
+    ):
+        _, _, queries = data
+        path = serve.save_index(str(tmp_path / "snap"), base_index)
+        want = np.asarray(base_index.search(queries, k=5, ef=24).ids)
+        newer = base_index.clone()
+        newer.delete([0, 1])
+        faults.arm("snapshot/between_renames")
+        with pytest.raises(faults.FaultInjected):
+            serve.save_index(path, newer)
+        # the no-snapshot instant: old moved aside, new never published
+        assert not os.path.isdir(path) and os.path.isdir(path + ".old")
+        back = serve.load_index(path)
+        np.testing.assert_array_equal(
+            np.asarray(back.search(queries, k=5, ef=24).ids), want
+        )
+        # loading healed the layout — the fallback is not a permanent state
+        assert os.path.isdir(path) and not os.path.isdir(path + ".old")
+
+    def test_crash_before_publish_keeps_last_good(self, tmp_path, base_index):
+        path = serve.save_index(str(tmp_path / "snap"), base_index)
+        newer = base_index.clone()
+        newer.delete([2])
+        faults.arm("snapshot/after_tmp_write")
+        with pytest.raises(faults.FaultInjected):
+            serve.save_index(path, newer)
+        assert serve.load_index(path).n_active == base_index.n_active
+        # the leftover .tmp does not wedge the next save
+        assert serve.load_index(
+            serve.save_index(path, newer)
+        ).n_active == newer.n_active
+
+    def test_injected_bitrot_fails_verification(self, tmp_path, base_index):
+        faults.arm("snapshot/bitflip_array")
+        path = serve.save_index(str(tmp_path / "rot"), base_index)
+        with pytest.raises(IOError, match="checksum mismatch"):
+            serve.load_index(path)
+
+
+# ---------------------------------------------------------------------------
+# 3) recovery: init / replay / checkpoint / at-least-once / CLI
+# ---------------------------------------------------------------------------
+
+
+class TestRecovery:
+    def test_init_refuses_existing_root(self, tmp_path, base_index):
+        root = recovery.init(str(tmp_path / "root"), base_index)
+        with pytest.raises(FileExistsError):
+            recovery.init(root, base_index)
+        recovery.init(root, base_index, overwrite=True)
+
+    def test_attach_mutate_recover_parity(self, tmp_path, base_index, data):
+        _, extra, queries = data
+        root = recovery.init(str(tmp_path / "root"), base_index)
+        handle, ckpt, res = recovery.attach(
+            root, background=False, checkpoint_every=100, fsync="none"
+        )
+        assert res.replayed == 0 and not res.degraded
+        handle.add(extra[:6])
+        handle.delete([2, 5])
+        handle.compact()
+        live = handle.current.index
+        handle.wal.close()
+        rec = recovery.recover(root)
+        assert rec.replayed == 3 and rec.checkpoint_lsn == 0
+        assert rec.last_lsn == 3 and rec.dropped_frames == 0
+        _assert_same_search(live, rec.index, queries)
+
+    def test_checkpoint_truncates_wal(self, tmp_path, base_index, data):
+        _, extra, queries = data
+        root = recovery.init(str(tmp_path / "root"), base_index)
+        handle, ckpt, _ = recovery.attach(
+            root, background=False, checkpoint_every=2, fsync="none"
+        )
+        handle.add(extra[:2])
+        handle.add(extra[2:4])  # crosses every_ops: inline checkpoint
+        assert ckpt.checkpoint_lsn == 2
+        assert handle.wal.stats()["segments"] == 1  # covered tail retired
+        handle.delete([1])  # one record past the checkpoint
+        assert ckpt.pending_ops == 1
+        live = handle.current.index
+        handle.wal.close()
+        rec = recovery.recover(root)
+        assert rec.checkpoint_lsn == 2 and rec.replayed == 1
+        _assert_same_search(live, rec.index, queries)
+
+    def test_at_least_once_window_replays_unacked(
+        self, tmp_path, base_index, data
+    ):
+        _, extra, _ = data
+        root = recovery.init(str(tmp_path / "root"), base_index)
+        handle, _, _ = recovery.attach(
+            root, background=False, checkpoint_every=100, fsync="none"
+        )
+        handle.add(extra[:2])
+        faults.arm("handle/before_flip")  # logged + durable, flip never ran
+        with pytest.raises(faults.FaultInjected):
+            handle.add(extra[2:5])
+        assert handle.generation == 1  # the crashed mutation never published
+        handle.wal.close()
+        rec = recovery.recover(root)
+        # the unacked record IS replayed: at-least-once, never lost-ack
+        assert rec.replayed == 2
+        assert rec.index.n == base_index.n + 5
+
+    def test_background_checkpointer_triggers(self, tmp_path, base_index, data):
+        _, extra, _ = data
+        root = recovery.init(str(tmp_path / "root"), base_index)
+        handle, ckpt, _ = recovery.attach(
+            root, background=True, checkpoint_every=2, fsync="none"
+        )
+        handle.add(extra[:2])
+        handle.add(extra[2:4])
+        deadline = time.time() + 30
+        while ckpt.checkpoint_lsn < 2 and time.time() < deadline:
+            time.sleep(0.05)
+        assert ckpt.checkpoint_lsn == 2
+        assert ckpt.stats()["checkpoints"] >= 1
+        ckpt.close()
+        handle.wal.close()
+        assert recovery.recover(root).replayed == 0
+
+    def test_verify_and_recover_cli(self, tmp_path, base_index, data, capsys):
+        _, extra, _ = data
+        root = recovery.init(str(tmp_path / "root"), base_index)
+        handle, _, _ = recovery.attach(
+            root, background=False, checkpoint_every=100, fsync="none"
+        )
+        handle.add(extra[:3])
+        handle.wal.close()
+        assert recovery.main(["verify", root]) == 0
+        report = json.loads(capsys.readouterr().out)
+        assert report["ok"] and report["snapshot"]["loadable"]
+        assert report["wal"]["replayable"] == 1
+        assert recovery.main(["recover", root]) == 0
+        out = json.loads(capsys.readouterr().out)
+        assert out["replayed"] == 1 and out["checkpoint_lsn"] == 1
+        assert recovery.main(["verify", root]) == 0
+        report = json.loads(capsys.readouterr().out)
+        assert report["wal"]["replayable"] == 0  # folded into the checkpoint
+
+    def test_durable_handle_refuses_recordless_mutation(
+        self, tmp_path, base_index
+    ):
+        root = recovery.init(str(tmp_path / "root"), base_index)
+        handle, _, _ = recovery.attach(root, background=False, fsync="none")
+        with pytest.raises(ValueError, match="records"):
+            handle.mutate(lambda index: index.compact())
+        handle.wal.close()
+
+
+# ---------------------------------------------------------------------------
+# 4) quarantine: degraded serving over total refusal
+# ---------------------------------------------------------------------------
+
+
+def _flip_file(path: str) -> None:
+    raw = open(path, "rb").read()
+    with open(path, "wb") as f:
+        f.write(faults.bit_flip(raw))
+
+
+class TestQuarantine:
+    @pytest.fixture(scope="class")
+    def seg_snapshot(self, tmp_path_factory, data):
+        base, _, _ = data
+        segs = np.asarray(base).reshape(4, N // 4, DIM)
+        seg_idx = SegmentedAnnIndex.build(
+            segs, algo="hnsw", backend="fp32", params=PARAMS
+        )
+        path = serve.save_index(
+            str(tmp_path_factory.mktemp("segsnap") / "seg"), seg_idx
+        )
+        return path, seg_idx
+
+    def test_corrupt_segment_quarantined(
+        self, tmp_path, seg_snapshot, data
+    ):
+        golden, seg_idx = seg_snapshot
+        _, extra, queries = data
+        snap = str(tmp_path / "seg")
+        shutil.copytree(golden, snap)
+        _flip_file(os.path.join(snap, "seg_001", "arrays.npz"))
+        # strict mode refuses the whole snapshot…
+        with pytest.raises((OSError, ValueError, KeyError, zipfile.BadZipFile)):
+            serve.load_index(snap)
+        # …quarantine mode serves the healthy remainder, flagged
+        deg = serve.load_index(snap, quarantine=True)
+        h = deg.health()
+        assert h["degraded"] and not h["healthy"]
+        assert list(h["quarantined"]) == [1] and h["lost_ids"] == N // 4
+        lost = set(np.asarray(seg_idx.global_ids(1)).tolist())
+        res = deg.search(queries, k=5, ef=24)
+        assert not (set(np.asarray(res.ids).ravel().tolist()) & lost)
+        # lost ids tombstone as a no-op; adds route to healthy segments
+        deg.delete(sorted(lost)[:2])
+        gids = deg.add(extra[:2])
+        assert len(gids) == 2
+        # a degraded index must never overwrite a good snapshot
+        with pytest.raises(RuntimeError, match="quarantin"):
+            serve.save_index(str(tmp_path / "seg2"), deg)
+
+    def test_all_segments_corrupt_raises(self, tmp_path, seg_snapshot):
+        golden, _ = seg_snapshot
+        snap = str(tmp_path / "seg")
+        shutil.copytree(golden, snap)
+        for s in range(4):
+            _flip_file(os.path.join(snap, f"seg_{s:03d}", "arrays.npz"))
+        with pytest.raises(IOError, match="all 4 segments"):
+            serve.load_index(snap, quarantine=True)
+
+    def test_recover_reports_degraded(self, tmp_path, seg_snapshot):
+        golden, _ = seg_snapshot
+        root = str(tmp_path / "root")
+        os.makedirs(root)
+        shutil.copytree(golden, recovery.snapshot_path(root))
+        os.makedirs(recovery.wal_path(root))
+        _flip_file(
+            os.path.join(recovery.snapshot_path(root), "seg_002", "arrays.npz")
+        )
+        rec = recovery.recover(root)
+        assert rec.degraded and rec.quarantined == (2,)
+        report = recovery.verify_root(root)
+        assert not report["ok"] and report["snapshot"]["degraded"]
+
+
+# ---------------------------------------------------------------------------
+# 5) runtime robustness: durable serving, supervisor, bounded close
+# ---------------------------------------------------------------------------
+
+
+class TestRuntimeRobustness:
+    def test_durable_runtime_end_to_end(self, tmp_path, base_index, data):
+        _, extra, queries = data
+        root = recovery.init(str(tmp_path / "root"), base_index)
+        handle, _, _ = recovery.attach(
+            root, background=False, checkpoint_every=100, fsync="none"
+        )
+        with pytest.raises(ValueError, match="IndexHandle"):
+            serve.Runtime(handle, wal=object())  # the log rides the handle
+        rt = serve.Runtime(handle, k=5, ef=24, max_wait_ms=0.5)
+        try:
+            rt.add(extra[:4]).result(timeout=120)
+            rt.delete([1]).result(timeout=120)
+            with pytest.raises(ValueError, match="replayed"):
+                rt.mutate(lambda index: index.compact())
+            res = rt.search(queries[0], timeout=120)
+            assert np.asarray(res.ids).shape == (5,)
+            h = rt.health()
+            assert h["healthy"] and h["wal"]["appends"] == 2
+            live = rt.handle.current.index
+        finally:
+            rt.close()
+        handle.wal.close()
+        rec = recovery.recover(root)
+        assert rec.replayed == 2
+        _assert_same_search(live, rec.index, queries)
+
+    def test_supervisor_restarts_crashed_scheduler(self, base_index, data):
+        _, _, queries = data
+        rt = serve.Runtime(base_index.clone(), k=5, ef=24, max_wait_ms=0.5)
+        try:
+            orig = rt._take_pack
+            armed = {"hit": True}
+
+            def poisoned():
+                if armed.pop("hit", False):
+                    raise RuntimeError("poisoned dispatch")
+                return orig()
+
+            rt._take_pack = poisoned
+            res = rt.submit(queries[0]).result(timeout=120)
+            assert np.asarray(res.ids).shape == (5,)
+            h = rt.health()
+            assert h["thread_restarts"] >= 1 and h["scheduler_alive"]
+        finally:
+            rt.close()
+
+    def test_close_timeout_fails_pending_futures(self, base_index, data):
+        _, _, queries = data
+        rt = serve.Runtime(base_index.clone(), k=5, ef=24, max_wait_ms=0)
+        release = threading.Event()
+
+        def wedged():
+            release.wait()  # a hung dispatch, holding the runtime's lock
+            return [], []
+
+        rt._take_pack = wedged
+        fut = rt.submit(queries[0])
+        try:
+            with pytest.raises(RuntimeError, match="timed out"):
+                rt.close(timeout=0.5)
+            with pytest.raises(RuntimeError):
+                fut.result(timeout=5)
+        finally:
+            release.set()

@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import json
 import os
+import shutil
 import time
 
 import jax.numpy as jnp
@@ -33,6 +34,7 @@ from repro.graph.hnsw import HNSWParams
 from repro.graph.knn import exact_knn, recall_at_k
 from repro.graph.segmented import SegmentedAnnIndex
 from repro.index import AnnIndex, SearchSpec, algos
+from repro.testing import faults
 from tests.conftest import make_clustered
 
 PARAMS = HNSWParams(r_upper=4, r_base=8, ef=16, batch=32, max_layers=2)
@@ -155,6 +157,108 @@ class TestSnapshotRoundTrip:
         np.testing.assert_array_equal(
             np.asarray(r1.dists), np.asarray(r2.dists)
         )
+
+
+class TestCorruptSnapshotGrid:
+    """Every way a snapshot can rot on disk fails loudly at load and names
+    the damage — across all accepted format versions, so the v1/v2
+    migration paths (``from_state`` layout upgrades) verify as strictly as
+    the current layout."""
+
+    @pytest.fixture(scope="class")
+    def golden(self, serve_data, tmp_path_factory):
+        data, _, queries = serve_data
+        idx = AnnIndex.build(data, algo="hnsw", backend="fp32", params=PARAMS)
+        path = serve.save_index(
+            str(tmp_path_factory.mktemp("golden") / "snap"), idx
+        )
+        want = np.asarray(idx.search(queries, k=5, ef=24).ids)
+        return path, want
+
+    @staticmethod
+    def _copy_as_version(golden_path: str, dst: str, version: int) -> dict:
+        shutil.copytree(golden_path, dst)
+        manifest_path = os.path.join(dst, "manifest.json")
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+        manifest["format_version"] = version
+        with open(manifest_path, "w") as f:
+            json.dump(manifest, f)
+        return manifest
+
+    @pytest.mark.parametrize("version", [1, 2, 3])
+    def test_older_formats_still_load(
+        self, golden, tmp_path, serve_data, version
+    ):
+        _, _, queries = serve_data
+        path, want = golden
+        snap = str(tmp_path / "snap")
+        self._copy_as_version(path, snap, version)
+        loaded = serve.load_index(snap)
+        np.testing.assert_array_equal(
+            np.asarray(loaded.search(queries, k=5, ef=24).ids), want
+        )
+
+    @pytest.mark.parametrize("version", [1, 2, 3])
+    def test_bitflipped_array_names_array_and_path(
+        self, golden, tmp_path, version
+    ):
+        path, _ = golden
+        snap = str(tmp_path / "snap")
+        manifest = self._copy_as_version(path, snap, version)
+        npz = os.path.join(snap, "arrays.npz")
+        with np.load(npz) as d:
+            stored = {k: d[k] for k in d.files}
+        key = max(stored, key=lambda k: stored[k].size)
+        name = manifest["arrays"][key]["name"]
+        stored[key] = faults.bit_flip(stored[key])
+        np.savez(npz, **stored)
+        with pytest.raises(IOError, match="checksum mismatch") as ei:
+            serve.load_index(snap)
+        # the error must say WHAT rotted and WHERE — a 3am page is not the
+        # time to bisect arrays by hand
+        assert repr(name) in str(ei.value) and snap in str(ei.value)
+        assert serve.load_index(snap, verify=False) is not None
+
+    def test_truncated_manifest(self, golden, tmp_path):
+        path, _ = golden
+        snap = str(tmp_path / "snap")
+        self._copy_as_version(path, snap, 3)
+        manifest_path = os.path.join(snap, "manifest.json")
+        with open(manifest_path) as f:
+            raw = f.read()
+        with open(manifest_path, "w") as f:
+            f.write(raw[: len(raw) // 2])  # torn mid-write
+        with pytest.raises(IOError, match="truncated or corrupt"):
+            serve.load_index(snap)
+
+    def test_absent_manifest(self, golden, tmp_path):
+        path, _ = golden
+        snap = str(tmp_path / "snap")
+        self._copy_as_version(path, snap, 3)
+        os.remove(os.path.join(snap, "manifest.json"))
+        with pytest.raises(FileNotFoundError, match="not a snapshot"):
+            serve.load_index(snap)
+
+    def test_missing_array_file(self, golden, tmp_path):
+        path, _ = golden
+        snap = str(tmp_path / "snap")
+        self._copy_as_version(path, snap, 3)
+        os.remove(os.path.join(snap, "arrays.npz"))
+        with pytest.raises(FileNotFoundError, match="missing its array file"):
+            serve.load_index(snap)
+
+    def test_manifest_npz_disagreement(self, golden, tmp_path):
+        path, _ = golden
+        snap = str(tmp_path / "snap")
+        manifest = self._copy_as_version(path, snap, 3)
+        manifest["arrays"]["zz"] = {
+            "name": "ghost", "shape": [1], "dtype": "float32", "crc": 0,
+        }
+        with open(os.path.join(snap, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        with pytest.raises(IOError, match="missing from snapshot"):
+            serve.load_index(snap)
 
 
 class TestSearchEngine:
