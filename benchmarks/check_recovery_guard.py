@@ -243,6 +243,59 @@ def run_matrix(points=None, report_path: str = "RECOVERY_report.json") -> int:
                 f"acked={entry.get('n_acked', '-')} "
                 f"matched={entry.get('matched', '-')}"
             )
+        if points == list(all_points):
+            # double-crash trial (full matrix only): crash 1 tears the very
+            # first append — zero acked, zero replayable, just a poisoned
+            # segment on disk; boot 2 recovers, acks real work into fresh
+            # segments, and dies mid-stream; the SECOND recovery must still
+            # see every acked record behind the stale torn tail (regression:
+            # the scan once stopped at the first torn segment and dropped
+            # every acked record appended after the restart)
+            name = "double-crash:torn_append+after_flip"
+            root = os.path.join(tmp, "double__torn_then_flip")
+            shutil.copytree(base, root)
+            entry = {"phases": []}
+            for spec in ("crash:wal/torn_append", "crash:handle/after_flip:5"):
+                env = dict(
+                    os.environ,
+                    PYTHONPATH=str(REPO / "src"),
+                    JAX_PLATFORMS="cpu",
+                    REPRO_FAULTS=spec,
+                )
+                proc = subprocess.run(
+                    [sys.executable, __file__, "--worker", root],
+                    env=env, capture_output=True, text=True, timeout=600,
+                )
+                entry["phases"].append(
+                    {"fault": spec, "exit_code": proc.returncode}
+                )
+                if proc.returncode != faults.CRASH_EXIT_CODE:
+                    entry["ok"] = False
+                    entry["error"] = (
+                        f"worker did not die at {spec} "
+                        f"(exit {proc.returncode}); stderr tail: "
+                        f"{proc.stderr[-500:]!r}"
+                    )
+                    break
+            else:
+                try:
+                    entry.update(check_trial(root, queries, references))
+                except Exception as exc:  # noqa: BLE001 — a verdict
+                    entry["ok"] = False
+                    entry["error"] = f"recovery failed: {exc!r}"
+            if not entry.get("ok"):
+                failures.append(
+                    f"{name}: acked={entry.get('n_acked')} "
+                    f"matched={entry.get('matched')} "
+                    f"{entry.get('error', 'no acked-prefix parity')}"
+                )
+            report["points"][name] = entry
+            status = "OK " if entry.get("ok") else "FAIL"
+            print(
+                f"  {status} {name:32s} "
+                f"acked={entry.get('n_acked', '-')} "
+                f"matched={entry.get('matched', '-')}"
+            )
     report["ok"] = not failures
     with open(report_path, "w") as f:
         json.dump(report, f, indent=2, sort_keys=True)

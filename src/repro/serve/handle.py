@@ -131,6 +131,7 @@ class IndexHandle:
         self._commit_hooks: list = []
         self.wal = wal  # WalWriter or None; owned by the handle once attached
         self._last_lsn = wal.last_lsn if wal is not None else 0
+        self._poisoned = False  # set when a failed append can't be rewound
 
     # ---- reader side -----------------------------------------------------
 
@@ -183,10 +184,21 @@ class IndexHandle:
         reference store, so by the time any caller sees the new generation
         (the ack), its mutations are on disk. The one crash window left is
         logged-but-unflipped: recovery replays a mutation nobody was acked
-        for — at-least-once, never lost-ack (DESIGN.md §15). A durable
-        handle refuses record-less mutations: an arbitrary closure can't be
-        replayed."""
+        for — at-least-once, never lost-ack (DESIGN.md §15). If the append
+        or commit itself fails, the half-logged group is rewound out of the
+        log (nothing in it was acked) before the error propagates; a rewind
+        that *also* fails poisons the handle — logged and live state may
+        now disagree, so further mutations are refused until re-attach. A
+        durable handle refuses record-less mutations: an arbitrary closure
+        can't be replayed."""
         with self._mutex:
+            if self._poisoned:
+                raise RuntimeError(
+                    "IndexHandle is poisoned: a WAL append failed and the "
+                    "log tail could not be rewound, so logged and live "
+                    "state may disagree — re-attach (serve.recovery.attach) "
+                    "before mutating again"
+                )
             if self.wal is not None and records is None:
                 raise ValueError(
                     "this IndexHandle has a WAL attached: mutate() needs "
@@ -208,9 +220,21 @@ class IndexHandle:
                 lsn = self._last_lsn
                 if self.wal is not None and records:
                     with obs.span("serve/flip/log", n_records=len(records)):
-                        for op, arrays in records:
-                            lsn = self.wal.append(op, arrays)
-                        self.wal.commit()  # group commit: durable before ack
+                        wal_mark = self.wal.mark()
+                        try:
+                            for op, arrays in records:
+                                lsn = self.wal.append(op, arrays)
+                            self.wal.commit()  # group commit: durable, then ack
+                        except BaseException:
+                            # a half-logged group must not outlive its abort:
+                            # later acked records would stack above the
+                            # orphaned LSNs and the next recovery would
+                            # replay a mutation whose caller saw it fail
+                            try:
+                                self.wal.rewind(wal_mark)
+                            except BaseException:
+                                self._poisoned = True  # log tail unknown
+                            raise
                 faults.crash_point(P_BEFORE_FLIP)
                 flip.set(gen=new.gen)
                 self._generation = new  # flip: one atomic reference store

@@ -301,6 +301,13 @@ def attach(
         # writer resumed LSNs after the scanned tail, so handle.last_lsn
         # already covers the replay)
         ckpt.checkpoint_now()
+    elif result.dropped_frames or result.truncated:
+        # nothing to replay, but a crash left torn/corrupt frames behind
+        # (e.g. the first append after a checkpoint tore mid-frame):
+        # retire every checkpoint-covered segment now so the poisoned
+        # tail can't slow — or, before scan() learned to follow dense
+        # LSNs across segments, silently break — the next boot's scan
+        writer.truncate_upto(ckpt.checkpoint_lsn)
     return handle, ckpt, result
 
 

@@ -540,9 +540,15 @@ class Runtime:
         # rebind the engine default to the new generation (same executable
         # table — refresh never drops compiled fns); pinned in-flight
         # requests keep their own generation view
-        self.engine.refresh(index=gen.index)
-        for (_, fut, _), res in zip(group, results):
-            fut.set_result(res)
+        try:
+            self.engine.refresh(index=gen.index)
+        finally:
+            # the flip already published (and, durably, hit the WAL): ack
+            # the group even if refresh blows up, or the supervisor restart
+            # would strand these callers until close() fails them
+            for (_, fut, _), res in zip(group, results):
+                if not fut.done():
+                    fut.set_result(res)
 
     def _mutate_loop(self) -> None:
         exit_after = False

@@ -16,10 +16,14 @@ Frame format (little-endian)::
 The payload is an ``.npz`` byte blob: the record's arrays plus a
 ``__meta__`` uint8 array holding JSON ``{"lsn": int, "op": str}``. CRC
 covers the payload only — a frame whose magic, length, or CRC doesn't
-check out marks the end of the valid prefix (torn tail), and everything
-from it on is dropped at scan time. LSNs (log sequence numbers) are
-assigned densely at append; a checkpoint records the LSN it covers and
-:meth:`WalWriter.truncate_upto` retires whole segments at or below it.
+check out ends *its segment's* valid prefix (frame boundaries past a
+tear cannot be trusted), but not the log's: a crashed writer restarts
+into a fresh segment whose LSNs continue densely from the valid prefix,
+and those records may be acked, so the scan follows them. Only an LSN
+*gap* ends the replayable prefix for good. LSNs (log sequence numbers)
+are assigned densely at append; a checkpoint records the LSN it covers
+and :meth:`WalWriter.truncate_upto` retires whole segments at or below
+it.
 
 Durability policy (``fsync=``):
 
@@ -91,6 +95,7 @@ class WalScan(NamedTuple):
     dropped_frames: int    # frames rejected by magic/length/CRC
     truncated: bool        # True if any segment ended mid-frame
     segments: list         # scanned segment filenames, in order
+    segment_last_lsns: list  # per segment: last valid LSN at or below it
 
 
 def encode_record(lsn: int, op: str, arrays: dict) -> bytes:
@@ -158,41 +163,50 @@ def _scan_segment(path: str) -> tuple[list, int, bool]:
 def scan(wal_dir: str) -> WalScan:
     """Read every segment in LSN order, validating frames and LSN density.
 
-    The valid prefix ends at the first bad frame *or* the first LSN gap
-    (a gap means an earlier segment lost its tail — records after it
-    cannot be replayed without reordering history)."""
+    A torn/corrupt frame ends trust in *its own* segment — frame
+    boundaries past it are meaningless — but not in the log: the normal
+    shape after a crash-and-restart is a poisoned old tail followed by a
+    fresh segment from the restarted writer whose LSNs continue densely
+    from the valid prefix, and those records may be acked, so they must
+    replay. The valid prefix therefore ends only at an LSN *gap* (a gap
+    means acked history was lost — records after it cannot be replayed
+    without reordering history)."""
     wal_dir = os.path.abspath(wal_dir)
     names = sorted(
         n for n in (os.listdir(wal_dir) if os.path.isdir(wal_dir) else [])
         if _SEG_RE.match(n)
     )
     records: list = []
+    seg_last: list = []
     dropped = 0
     truncated = False
     last = None
+    cursor = 0  # truncation attribution: last valid LSN at/below a segment
+    gap = False
     for name in names:
         segs, seg_dropped, seg_torn = _scan_segment(os.path.join(wal_dir, name))
+        if segs:
+            cursor = segs[-1].lsn
+        seg_last.append(cursor)
+        if gap:
+            dropped += len(segs)  # count (not replay) what trails the gap
+            continue
         dropped += seg_dropped
         truncated = truncated or seg_torn
-        stop = False
-        for rec in segs:
+        for j, rec in enumerate(segs):
             if last is not None and rec.lsn != last + 1:
-                dropped += 1
-                stop = True  # LSN gap: history is broken from here on
+                dropped += len(segs) - j
+                gap = True  # LSN gap: history is broken from here on
                 break
             records.append(rec)
             last = rec.lsn
-        if stop or seg_dropped or seg_torn:
-            # count (not replay) whatever trails the break
-            dropped += sum(len(_scan_segment(os.path.join(wal_dir, n))[0])
-                           for n in names[names.index(name) + 1:])
-            break
     return WalScan(
         records=records,
         last_lsn=records[-1].lsn if records else 0,
         dropped_frames=dropped,
         truncated=truncated,
         segments=names,
+        segment_last_lsns=seg_last,
     )
 
 
@@ -225,21 +239,18 @@ class WalWriter:
         os.makedirs(self.dir, exist_ok=True)
         prior = scan(self.dir)
         self._lsn = prior.last_lsn
-        #: closed segments' (seq, last_lsn) — what truncation retires
+        #: closed segments' (seq, last_lsn) — what truncation retires;
+        #: attribution comes straight from the scan (one pass over the log)
         self._closed: list[tuple[int, int]] = []
         seq = 0
-        for name in prior.segments:
+        for name, seg_last in zip(prior.segments, prior.segment_last_lsns):
             seq = max(seq, int(_SEG_RE.match(name).group(1)) + 1)
-        lsn_cursor = 0
-        for name in prior.segments:  # attribute scanned lsns to segments
-            segs, _, _ = _scan_segment(os.path.join(self.dir, name))
-            if segs:
-                lsn_cursor = segs[-1].lsn
-            self._closed.append((int(_SEG_RE.match(name).group(1)), lsn_cursor))
+            self._closed.append((int(_SEG_RE.match(name).group(1)), seg_last))
         self._seq = seq
         self._f = open(os.path.join(self.dir, _seg_name(seq)), "wb")
         self._seg_bytes = 0
         self._dirty = False
+        self._fsync_dir()  # the fresh segment's dirent must survive power loss
         inst = str(obs.REGISTRY.next_instance())
         self._m_appends = obs.counter("wal_appends_total", inst=inst)
         self._m_fsyncs = obs.counter("wal_fsyncs_total", inst=inst)
@@ -300,6 +311,70 @@ class WalWriter:
         self._m_fsyncs.inc()
         faults.crash_point(P_AFTER_FSYNC)
 
+    def _fsync_dir(self) -> None:
+        """Make the log directory's entries durable: fsyncing a segment's
+        data says nothing about its *dirent* — after power loss a freshly
+        created segment (and every acked frame in it) could vanish from the
+        directory unless the directory itself was synced."""
+        if self.fsync == "none":
+            return
+        fd = os.open(self.dir, os.O_RDONLY)
+        try:
+            os.fsync(fd)
+        finally:
+            os.close(fd)
+
+    def mark(self) -> tuple[int, int, int]:
+        """Position token ``(segment seq, byte offset, lsn)`` for
+        :meth:`rewind` — take one before appending a group whose flip may
+        still abort."""
+        with self._mutex:
+            return (self._seq, self._seg_bytes, self._lsn)
+
+    def rewind(self, mark: tuple[int, int, int]) -> None:
+        """Roll the log back to ``mark``, erasing every frame appended
+        after it — the undo for a mutation group whose append or commit
+        failed before its flip published. None of the erased frames was
+        ever acked (the ack IS the flip), so the truncation cannot lose
+        acked state; *without* it the orphaned LSNs would sit under later
+        acked records and replay a mutation whose caller saw it fail."""
+        seq, offset, lsn = mark
+        with self._mutex:
+            if self._f.closed:
+                raise ValueError("WalWriter is closed")
+            if seq > self._seq or (seq == self._seq
+                                   and offset > self._seg_bytes):
+                raise ValueError(f"cannot rewind forward to {mark!r}")
+            if seq != self._seq:
+                # the group rotated mid-append: drop the newer segments
+                # and re-open the marked one as the active tail
+                self._f.close()
+                for s in range(seq + 1, self._seq + 1):
+                    try:
+                        os.remove(os.path.join(self.dir, _seg_name(s)))
+                    except FileNotFoundError:
+                        pass
+                self._closed = [(s, l) for s, l in self._closed if s < seq]
+                self._seq = seq
+                try:
+                    self._f = open(os.path.join(self.dir, _seg_name(seq)), "r+b")
+                except FileNotFoundError:
+                    # a checkpoint covering exactly the mark's LSN truncated
+                    # the marked segment away mid-group: everything at or
+                    # below the mark is snapshot-covered, so the rewound
+                    # tail is simply empty
+                    self._f = open(os.path.join(self.dir, _seg_name(seq)), "wb")
+                    offset = 0
+            self._f.seek(offset)
+            self._f.truncate()
+            self._seg_bytes = offset
+            self._lsn = lsn
+            self._dirty = False
+            if self.fsync != "none":
+                os.fsync(self._f.fileno())
+            self._fsync_dir()
+            self._g_segments.set(len(self._closed) + 1)
+
     def rotate(self) -> int:
         """Close the current segment and open the next; returns the new
         segment sequence number."""
@@ -310,6 +385,7 @@ class WalWriter:
             self._seq += 1
             self._f = open(os.path.join(self.dir, _seg_name(self._seq)), "wb")
             self._seg_bytes = 0
+            self._fsync_dir()  # new dirent durable before any append is acked
             self._g_segments.set(len(self._closed) + 1)
             return self._seq
 
@@ -330,6 +406,8 @@ class WalWriter:
                 else:
                     keep.append((seq, seg_last))
             self._closed = keep
+            if removed:
+                self._fsync_dir()  # deletions durable: no zombie segments
             self._g_segments.set(len(self._closed) + 1)
             return removed
 

@@ -148,6 +148,65 @@ class TestWalFraming:
         assert [r.lsn for r in scanned.records] == [1, 2]
         assert scanned.dropped_frames >= 1
 
+    def test_scan_follows_dense_lsns_past_torn_segment(self, tmp_path):
+        # double-crash shape at the scan layer: crash 1 left a segment
+        # whose ONLY frame is torn (zero replayable records); the restarted
+        # writer acked lsns 1-2 into a fresh segment. Those records
+        # continue densely from the (empty) valid prefix and MUST replay —
+        # stopping at the stale torn segment would silently drop them.
+        d = str(tmp_path / "wal")
+        os.makedirs(d)
+        with open(os.path.join(d, "wal-00000000.log"), "wb") as f:
+            f.write(faults.torn_write(wal_mod.encode_record(1, "compact", {})))
+        w = wal_mod.WalWriter(d, fsync="none")
+        assert w.last_lsn == 0
+        assert w.append("compact", {}) == 1
+        assert w.append("compact", {}) == 2
+        w.close()
+        scanned = wal_mod.scan(d)
+        assert [r.lsn for r in scanned.records] == [1, 2]
+        assert scanned.last_lsn == 2
+        assert scanned.truncated  # the poisoned segment is still reported
+
+    def test_scan_continues_after_mid_log_torn_tail(self, tmp_path):
+        d = str(tmp_path / "wal")
+        with wal_mod.WalWriter(d, fsync="none") as w:
+            w.append("compact", {}), w.append("compact", {})
+        with open(os.path.join(d, "wal-00000000.log"), "ab") as f:
+            f.write(faults.torn_write(wal_mod.encode_record(3, "compact", {})))
+        with wal_mod.WalWriter(d, fsync="none") as w2:
+            assert w2.append("compact", {}) == 3
+        scanned = wal_mod.scan(d)
+        # the torn frame ends segment 0's trust, not the log's: segment
+        # 1's lsn 3 continues densely from [1, 2] and replays
+        assert [r.lsn for r in scanned.records] == [1, 2, 3]
+        assert scanned.truncated
+
+    def test_mark_rewind_erases_uncommitted_tail(self, tmp_path):
+        d = str(tmp_path / "wal")
+        with wal_mod.WalWriter(d, fsync="none") as w:
+            w.append("compact", {})
+            m = w.mark()
+            w.append("compact", {}), w.append("compact", {})
+            w.rewind(m)
+            assert w.last_lsn == 1
+            assert w.append("compact", {}) == 2  # erased LSNs are reusable
+        assert [r.lsn for r in wal_mod.scan(d).records] == [1, 2]
+
+    def test_rewind_across_rotation(self, tmp_path):
+        d = str(tmp_path / "wal")
+        w = wal_mod.WalWriter(d, fsync="none", rotate_bytes=1)  # per-append
+        w.append("compact", {})
+        m = w.mark()
+        w.append("compact", {}), w.append("compact", {})  # two rotations
+        w.rewind(m)
+        assert w.last_lsn == 1
+        with pytest.raises(ValueError, match="rewind forward"):
+            w.rewind((99, 0, 50))
+        assert w.append("compact", {}) == 2
+        w.close()
+        assert [r.lsn for r in wal_mod.scan(d).records] == [1, 2]
+
     def test_rotation_truncation_and_reopen(self, tmp_path):
         d = str(tmp_path / "wal")
         w = wal_mod.WalWriter(d, fsync="none", rotate_bytes=1 << 30)
@@ -317,6 +376,85 @@ class TestRecovery:
         report = json.loads(capsys.readouterr().out)
         assert report["wal"]["replayable"] == 0  # folded into the checkpoint
 
+    def test_double_crash_torn_tail_then_acked_mutations(
+        self, tmp_path, base_index, data
+    ):
+        # crash 1 leaves a WAL segment whose only frame is torn (zero
+        # replayable records); boot 2 acks mutations into fresh segments;
+        # crash 2. Regression: the scan once stopped at the stale torn
+        # segment and recovery silently dropped every acked record behind
+        # it — the exact double-crash acked-loss shape.
+        _, extra, queries = data
+        root = recovery.init(str(tmp_path / "root"), base_index)
+        frame = wal_mod.encode_record(1, "add", {"vectors": extra[:1]})
+        with open(
+            os.path.join(recovery.wal_path(root), "wal-00000000.log"), "wb"
+        ) as f:
+            f.write(faults.torn_write(frame))  # crash 1: torn, never acked
+        handle, _, res = recovery.attach(
+            root, background=False, checkpoint_every=100, fsync="none"
+        )
+        assert res.replayed == 0
+        assert res.truncated or res.dropped_frames  # the tear was seen
+        handle.add(extra[:3])
+        handle.delete([4])
+        live = handle.current.index
+        handle.wal.close()  # crash 2: no clean checkpoint
+        rec = recovery.recover(root)
+        assert rec.replayed == 2 and rec.last_lsn == 2
+        _assert_same_search(live, rec.index, queries)
+
+    def test_failed_group_append_rewinds_orphans(
+        self, tmp_path, base_index, data
+    ):
+        from repro.serve.handle import add_record, delete_record
+
+        _, extra, queries = data
+        root = recovery.init(str(tmp_path / "root"), base_index)
+        handle, _, _ = recovery.attach(
+            root, background=False, checkpoint_every=100, fsync="none"
+        )
+        handle.add(extra[:2])  # lsn 1, acked
+        recs = [add_record(extra[2:4]), delete_record([0])]
+        faults.arm("wal/before_append", hits=2)  # group's 2nd append fails
+        with pytest.raises(faults.FaultInjected):
+            handle.mutate(
+                lambda index: [wal_mod.apply_record(index, op, a)
+                               for op, a in recs],
+                records=recs,
+            )
+        # nothing published, and the orphaned first record was erased from
+        # the log: the next mutation re-uses lsn 2
+        assert handle.generation == 1 and handle.last_lsn == 1
+        handle.delete([9])
+        assert handle.last_lsn == 2
+        live = handle.current.index
+        handle.wal.close()
+        rec = recovery.recover(root)
+        assert rec.replayed == 2  # add + delete — no orphan resurrection
+        assert rec.index.n == base_index.n + 2
+        _assert_same_search(live, rec.index, queries)
+
+    def test_handle_poisoned_when_rewind_fails(
+        self, tmp_path, base_index, data, monkeypatch
+    ):
+        _, extra, _ = data
+        root = recovery.init(str(tmp_path / "root"), base_index)
+        handle, _, _ = recovery.attach(root, background=False, fsync="none")
+
+        def broken_rewind(mark):
+            raise OSError("disk went away")
+
+        monkeypatch.setattr(handle.wal, "rewind", broken_rewind)
+        faults.arm("wal/before_append")
+        with pytest.raises(faults.FaultInjected):
+            handle.add(extra[:1])
+        # the log tail is now unknown: the handle refuses further
+        # mutations instead of acking over a possibly-diverged log
+        with pytest.raises(RuntimeError, match="poisoned"):
+            handle.add(extra[:1])
+        handle.wal.close()
+
     def test_durable_handle_refuses_recordless_mutation(
         self, tmp_path, base_index
     ):
@@ -433,6 +571,38 @@ class TestRuntimeRobustness:
         rec = recovery.recover(root)
         assert rec.replayed == 2
         _assert_same_search(live, rec.index, queries)
+
+    def test_refresh_failure_still_acks_published_mutation(
+        self, base_index, data
+    ):
+        _, extra, queries = data
+        rt = serve.Runtime(base_index.clone(), k=5, ef=24, max_wait_ms=0.5)
+        try:
+            orig = rt.engine.refresh
+            armed = {"hit": True}
+
+            def poisoned(**kwargs):
+                if armed.pop("hit", False):
+                    raise RuntimeError("poisoned refresh")
+                return orig(**kwargs)
+
+            rt.engine.refresh = poisoned
+            gen_before = rt.generation
+            # the flip published before refresh blew up: the future must
+            # resolve (not hang until close), then the supervisor restarts
+            # the mutator loop
+            rt.add(extra[:2]).result(timeout=120)
+            assert rt.generation == gen_before + 1
+            deadline = time.time() + 30
+            while (rt.health()["thread_restarts"] < 1
+                   and time.time() < deadline):
+                time.sleep(0.05)
+            assert rt.health()["thread_restarts"] >= 1
+            rt.delete([1]).result(timeout=120)  # restarted mutator serves
+            res = rt.search(queries[0], timeout=120)
+            assert np.asarray(res.ids).shape == (5,)
+        finally:
+            rt.close()
 
     def test_supervisor_restarts_crashed_scheduler(self, base_index, data):
         _, _, queries = data
