@@ -1,22 +1,380 @@
-"""Paper Figures 10 & 11 — scalability over data volume and segment count.
+"""Paper Figures 10 & 11 + the streaming million-vector sharded tier.
 
-Volume: build time for HNSW vs HNSW-Flash at n ∈ {1k, 2k, 4k, 8k}.
-Segments: total build time when the same 8k vectors are split into
-1/2/4 segments built through the vmapped segment program (the shard_map
-deployment is embarrassingly parallel, so per-segment time ≈ total / S on
-real hardware; on one CPU the sum is what we can measure — both reported).
+CSV mode (``run()``): the original small-n volume/segment sweeps.
+
+JSON mode (``scalability_bench()``, ``run.py --json BENCH_scalability.json
+--only scalability``): n >= 1M (d >= 96) through the sharded pipeline
+(DESIGN.md §16) — streaming assignment (the coordinator never holds the
+dataset), parallel per-segment bulk builds, fan-out serving QPS, recall@10
+against a streamed exact ground truth, and the 4-worker build-throughput
+speedup.
+
+Scale honesty (DESIGN.md §7): this container exposes ONE CPU core, so a
+4-worker wall cannot be *measured* as wall-clock parallelism here. The
+full tier therefore builds inline (uncontended per-segment walls — the
+1-worker measurement), and the k-worker wall is the greedy-LPT critical
+path over those measured walls (:func:`repro.graph.sharded
+.model_parallel_wall`), reported next to the measured wall and labeled
+``modeled``. The parity tier *does* run the real 4-worker spawn pool:
+bit-exactness, recall parity, and per-worker peak RSS are
+placement-invariant claims, so they are measured, not modeled (its wall
+is recorded too, but on one core it approximates the serial sum).
+
+Tier knobs (env, so CI can run a reduced tier with the same code path):
+``BENCH_SCALE_N`` (default 1_000_000), ``BENCH_SCALE_SEGMENTS`` (64),
+``BENCH_SCALE_D`` (96), ``BENCH_SCALE_WORKERS`` (4),
+``BENCH_SCALE_QUERIES`` (256).
 """
 
 from __future__ import annotations
+
+import os
+import resource
+import tempfile
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import DEFAULT_PARAMS, FLASH_KW, bench_data, emit, timeit
+from benchmarks.common import (
+    DEFAULT_PARAMS,
+    FLASH_KW,
+    bench_data,
+    emit,
+    time_samples,
+    timeit,
+)
+from repro import serve
 from repro.graph import prefix_entries, sample_levels
 from repro.graph import segmented as seg
+from repro.graph.sharded import ShardConfig, ShardedBuilder, model_parallel_wall
 from repro.index import AnnIndex
+from repro.kernels import ops
+
+#: acceptance bars for the sharded tier (run.py turns misses into warnings)
+SPEEDUP_BAR = 2.5          # modeled 4-worker vs 1-worker build throughput
+US_PER_DIST_RATIO_BAR = 1.15  # sharded us/dist vs single-segment baseline
+RECALL_DELTA_BAR = 0.01    # |sharded - sequential segmented| recall@10
+
+_N = int(os.environ.get("BENCH_SCALE_N", "1000000"))
+_SEGMENTS = int(os.environ.get("BENCH_SCALE_SEGMENTS", "64"))
+_D = int(os.environ.get("BENCH_SCALE_D", "96"))
+_WORKERS = int(os.environ.get("BENCH_SCALE_WORKERS", "4"))
+_QUERIES = int(os.environ.get("BENCH_SCALE_QUERIES", "256"))
+
+
+# ---------------------------------------------------------------------------
+# Streaming synthetic source: every chunk regenerable from its index, so the
+# benchmark itself obeys the O(chunk) memory story it is measuring.
+# ---------------------------------------------------------------------------
+
+
+def _centers(d: int, n_centers: int = 256, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return (rng.normal(size=(n_centers, d)) * 2.0).astype(np.float32)
+
+
+#: mixture noise relative to center scale 2.0 — clusters overlap like real
+#: embedding sets. Much tighter (e.g. 0.25) makes each routed segment a set
+#: of disjoint point-blobs, which drives the bulk build's reachability
+#: repair into its structural O(n_s²) path on every segment — a data
+#: pathology, not the regime the tier is meant to measure.
+_NOISE = 1.0
+
+
+def _n_centers(n: int) -> int:
+    """Mixture modes scale with n (≈64 vectors per mode, floor 256): a
+    million-vector set drawn from only 256 far-apart modes would make every
+    routed segment a handful of huge disjoint blobs — graphs traverse those
+    through repair grafts only, which measures a data pathology rather than
+    the sharded pipeline."""
+    return max(256, n // 64)
+
+
+def make_stream(n: int, d: int, *, chunk: int = 65536, seed: int = 0):
+    """Zero-arg callable yielding (m, d) chunks of a clustered mixture."""
+    centers = _centers(d, n_centers=_n_centers(n), seed=seed)
+
+    def chunks():
+        for i in range(0, n, chunk):
+            m = min(chunk, n - i)
+            rng = np.random.default_rng((seed, 1, i))
+            idx = rng.integers(0, centers.shape[0], m)
+            yield (centers[idx]
+                   + rng.normal(size=(m, d)).astype(np.float32) * _NOISE)
+
+    return chunks
+
+
+def make_queries(nq: int, d: int, *, n: int, seed: int = 0) -> np.ndarray:
+    """Queries from the same mixture as ``make_stream(n, d, seed=seed)``."""
+    centers = _centers(d, n_centers=_n_centers(n), seed=seed)
+    rng = np.random.default_rng((seed, 2))
+    idx = rng.integers(0, centers.shape[0], nq)
+    return centers[idx] + rng.normal(size=(nq, d)).astype(np.float32) * _NOISE
+
+
+def exact_topk_stream(chunks_fn, queries: np.ndarray, k: int = 10):
+    """Exact global top-k over the stream, one chunk resident at a time."""
+    q = jnp.asarray(queries, jnp.float32)
+    nq = queries.shape[0]
+    best_d = np.full((nq, k), np.inf, np.float32)
+    best_i = np.full((nq, k), -1, np.int64)
+    off = 0
+    for chunk in chunks_fn():
+        m = chunk.shape[0]
+        d2 = np.asarray(ops.l2_batch(q, jnp.asarray(chunk)))
+        kk = min(k, m)
+        part = np.argpartition(d2, kk - 1, axis=1)[:, :kk]
+        cd = np.concatenate([best_d, np.take_along_axis(d2, part, axis=1)], axis=1)
+        ci = np.concatenate([best_i, off + part.astype(np.int64)], axis=1)
+        sel = np.argsort(cd, axis=1, kind="stable")[:, :k]
+        best_d = np.take_along_axis(cd, sel, axis=1)
+        best_i = np.take_along_axis(ci, sel, axis=1)
+        off += m
+    return best_i, best_d
+
+
+def _recall(ids: np.ndarray, gt: np.ndarray) -> float:
+    hits = sum(
+        len(set(map(int, a)) & set(map(int, b))) for a, b in zip(ids, gt)
+    )
+    return hits / float(gt.size)
+
+
+def _rss_mb() -> float:
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
+# ---------------------------------------------------------------------------
+# The sharded scalability tier
+# ---------------------------------------------------------------------------
+
+
+def scalability_bench(*, repeats: int = 3) -> dict:
+    d, s, workers = _D, _SEGMENTS, _WORKERS
+    n = (_N // s) * s  # balanced tier: uniform segment shapes
+    n_s = n // s
+    k = 10
+    chunks = make_stream(n, d)
+    queries = make_queries(_QUERIES, d, n=n)
+    backend_kw = dict(FLASH_KW)
+    params = DEFAULT_PARAMS
+    cfg = ShardConfig(
+        n_segments=s, chunk_size=65536, algo="hnsw", backend="flash_blocked",
+        params=params, strategy="bulk", backend_kwargs=backend_kw,
+        sample_size=16384, seed=0,
+    )
+    workdir = tempfile.mkdtemp(prefix="bench-shard-")
+
+    # -- full tier: streaming assignment + inline build (the 1-worker wall)
+    rss_before = _rss_mb()
+    builder = ShardedBuilder(cfg, workdir=workdir)
+    res = builder.build(chunks)
+    rss_after = _rss_mb()
+    walls = [float(m["wall_s"]) for m in res.segments]
+    n_dists = sum(float(m["n_dists"]) for m in res.segments)
+    modeled = {
+        str(w): model_parallel_wall(walls, w) for w in (1, 2, 4, 8, 16)
+    }
+    speedup_4w = modeled["1"] / modeled[str(workers)]
+    us_per_dist = sum(walls) * 1e6 / n_dists
+    build_wall = res.wall_build_s
+    emit(
+        f"scalability/sharded/n{n}",
+        build_wall * 1e6,
+        f"assign={res.wall_assign_s:.1f}s build={build_wall:.1f}s "
+        f"vec_per_s={n / (res.wall_assign_s + build_wall):.0f} "
+        f"speedup_model_{workers}w={speedup_4w:.2f}x",
+    )
+
+    # -- single-segment baseline: the median-wall segment rebuilt standalone
+    #    (same data, same seed → the identical program and dist count), so
+    #    the ratio isolates the sharded harness's per-dist overhead. Matched
+    #    segment, not segment 0: per-segment repair work is data-dependent,
+    #    and comparing the tier's average against the one segment that
+    #    happened to need no repair conflates program mix with overhead.
+    dists_per_seg = [float(m["n_dists"]) for m in res.segments]
+    mid = int(np.argsort(walls)[len(walls) // 2])
+    seg_mid = res.plan.load_segment(mid)[0]
+    t0 = time.perf_counter()
+    base_idx = AnnIndex.build(
+        seg_mid, algo="hnsw", backend="flash_blocked", params=params,
+        backend_kwargs=backend_kw, strategy="bulk", seed=mid,
+    )
+    base_wall = time.perf_counter() - t0
+    base_dists = float(base_idx.last_stats.n_dists)
+    base_us_per_dist = base_wall * 1e6 / base_dists
+    seg_us_per_dist = walls[mid] * 1e6 / dists_per_seg[mid]
+    ratio_in_tier = seg_us_per_dist / base_us_per_dist
+    del base_idx
+    # the gated ratio is warm-for-warm: the exact worker code path (spill
+    # load + build + metrics) re-run now that both sides share a hot jit
+    # cache, against the standalone build above. The in-tier number rides
+    # along: on small tiers it folds first-shape compiles into one
+    # segment's wall, which amortizes away at the full 64-segment tier.
+    from repro.graph.sharded import build_segment_task
+
+    warm = build_segment_task(builder._task(res.plan, mid, None, False))
+    warm_us_per_dist = warm["wall_s"] * 1e6 / float(warm["n_dists"])
+    ratio = warm_us_per_dist / base_us_per_dist
+
+    # -- serving: fan-out QPS + recall@10 against the exact stream GT
+    n_probe = min(8, s)
+    router = serve.SegmentRouter(
+        res.index, n_probe=n_probe, k=k, ef=64,
+        q_buckets=(queries.shape[0],),
+    ).warmup()
+    qps_samples = time_samples(
+        lambda: router.search(queries).ids, repeats=repeats, warmup=1
+    )
+    qps = queries.shape[0] / float(np.median(qps_samples))
+    ids = np.asarray(router.search(queries).ids)
+    gt_ids, _ = exact_topk_stream(chunks, queries, k=k)
+    recall = _recall(ids, gt_ids)
+    emit(
+        f"scalability/sharded/serve_n{n}",
+        float(np.median(qps_samples)) * 1e6 / queries.shape[0],
+        f"qps={qps:.0f} recall@{k}={recall:.4f} n_probe={n_probe}",
+    )
+
+    payload = {
+        "tier": {
+            "n": n, "d": d, "segments": s, "segment_size": n_s,
+            "chunk_size": cfg.chunk_size, "backend": cfg.backend,
+            "strategy": cfg.strategy, "mode": res.mode,
+        },
+        "build": {
+            "wall_assign_s": res.wall_assign_s,
+            "wall_build_s": build_wall,
+            "vectors_per_s": n / (res.wall_assign_s + build_wall),
+            "n_dists": n_dists,
+            "us_per_dist": us_per_dist,
+            "segment_walls_s": walls,
+            "coordinator_rss_mb_before": rss_before,
+            "coordinator_rss_mb_after": rss_after,
+            "modeled_wall_s_by_workers": modeled,
+            "speedup_modeled": {
+                "workers": workers,
+                "speedup_vs_1": speedup_4w,
+                "note": (
+                    "greedy-LPT critical path over measured per-segment "
+                    "walls; this host has one core, so k-worker walls are "
+                    "modeled, not measured (see module docstring)"
+                ),
+            },
+        },
+        "baseline_single_segment": {
+            "segment": mid,
+            "n": int(seg_mid.shape[0]),
+            "wall_s": base_wall,
+            "n_dists": base_dists,
+            "us_per_dist": base_us_per_dist,
+            "sharded_wall_s_in_tier": walls[mid],
+            "sharded_n_dists_same_segment": dists_per_seg[mid],
+            "sharded_us_per_dist_in_tier": seg_us_per_dist,
+            "ratio_in_tier": ratio_in_tier,
+            "sharded_wall_s_warm": warm["wall_s"],
+            "sharded_us_per_dist_warm": warm_us_per_dist,
+            "ratio_sharded_vs_baseline": ratio,
+        },
+        "serve": {
+            "n_probe": n_probe,
+            "k": k,
+            "n_queries": queries.shape[0],
+            "qps": qps,
+            "latency_ms_samples": [t * 1e3 for t in qps_samples],
+            "recall_at_10": recall,
+        },
+    }
+
+    # -- parity tier: the real spawn pool vs a sequential segmented build
+    #    over the same assignment (placement-invariant claims, measured)
+    payload["parity"] = _parity_tier(
+        d, n_s, workers, queries, k, params, backend_kw
+    )
+
+    p = payload["parity"]
+    payload["acceptance"] = {
+        "speedup_modeled_vs_1w": speedup_4w,
+        "speedup_bar": SPEEDUP_BAR,
+        "us_per_dist_ratio_vs_single_segment": ratio,
+        "us_per_dist_ratio_bar": US_PER_DIST_RATIO_BAR,
+        "recall_delta_vs_sequential": p["recall_delta"],
+        "recall_delta_bar": RECALL_DELTA_BAR,
+        "recall_at_10": recall,
+        "pool_bit_exact": p["bit_exact"],
+    }
+    return payload
+
+
+def _parity_tier(
+    d: int, n_s: int, workers: int, queries, k, params, backend_kw
+) -> dict:
+    """4-worker spawn-pool build vs sequential ``SegmentedAnnIndex.build``
+    over the same assignment: recall delta and bit-exactness (measured —
+    these claims do not depend on core count), plus per-worker peak RSS."""
+    p_segments = min(8, _SEGMENTS)
+    p_n = p_segments * n_s
+    chunks = make_stream(p_n, d, seed=3)
+    # in-distribution queries for THIS stream (seed 3), not the full tier's
+    queries = make_queries(queries.shape[0], d, n=p_n, seed=3)
+    cfg = ShardConfig(
+        n_segments=p_segments, chunk_size=65536, algo="hnsw",
+        backend="flash_blocked", params=params, strategy="bulk",
+        backend_kwargs=backend_kw, sample_size=16384, seed=0,
+    )
+    workdir = tempfile.mkdtemp(prefix="bench-shard-parity-")
+    builder = ShardedBuilder(cfg, workers=workers, workdir=workdir)
+    t0 = time.perf_counter()
+    res = builder.build(chunks)
+    pool_wall = time.perf_counter() - t0
+    seq = seg.SegmentedAnnIndex.build(
+        (res.plan.load_segment(i)[0] for i in range(p_segments)),
+        algo="hnsw", backend="flash_blocked", params=params,
+        backend_kwargs=backend_kw, strategy="bulk", seed=0,
+    )
+    gt_ids, _ = exact_topk_stream(chunks, queries, k=k)
+    pool_ids = np.asarray(res.index.search(queries, k=k).ids)
+    # sequential global ids are contiguous per segment (not stream order);
+    # map both sides to physical (segment, local) identity via the GT-free
+    # recall numbers instead of raw id equality
+    seq_ids = np.asarray(seq.search(queries, k=k).ids)
+    r_pool = _recall(pool_ids, gt_ids)
+    # sequential ids live in a different global numbering; its recall
+    # needs GT in that numbering — same vectors, so map through locate
+    seq_loc = np.asarray(seq._locate)
+    pool_loc = np.asarray(res.index._locate)
+    map_pool = {tuple(pool_loc[g]): g for g in range(p_n)}
+    seq_as_pool = np.array(
+        [[map_pool[tuple(seq_loc[i])] for i in row] for row in seq_ids]
+    )
+    r_seq = _recall(seq_as_pool, gt_ids)
+    bit_exact = bool(np.array_equal(seq_as_pool, pool_ids))
+    rss = [m["max_rss_mb"] for m in res.segments]
+    return {
+        "n": p_n,
+        "segments": p_segments,
+        "workers": workers,
+        "mode": res.mode,
+        "pool_wall_s": pool_wall,
+        "pool_wall_note": (
+            "one-core host: the pool wall approximates the serial sum, "
+            "not the parallel critical path"
+        ),
+        "recall_pool": r_pool,
+        "recall_sequential": r_seq,
+        "recall_delta": abs(r_pool - r_seq),
+        "bit_exact": bit_exact,
+        "worker_peak_rss_mb": rss,
+        "worker_peak_rss_mb_max": max(rss) if rss else None,
+    }
+
+
+# ---------------------------------------------------------------------------
+# CSV mode: the original paper-figure sweeps (small n)
+# ---------------------------------------------------------------------------
 
 
 def run() -> dict:

@@ -22,7 +22,12 @@ them drifts:
     existed: enabled-vs-disabled medians over alternating samples must be
     within ``OBS_GUARD_TOL`` (default 2%) or inside an absolute noise
     floor (0.05 s — the 2-core container's scheduler jitter exceeds any
-    real percentage at sub-second build times).
+    real percentage at sub-second build times);
+  * **one profile per sharded build** — a ``ShardedBuilder`` build emits
+    exactly one ``shard/build`` root span whose ``shard/segment`` children
+    carry the per-worker phase split and whose folded cost equals the
+    workers' reported distance evaluations (the worker→coordinator metrics
+    wire format must not drop observability on the floor, DESIGN.md §16).
 
 The enabled run's registry snapshot + spans are dumped to
 ``OBS_snapshot.json`` so CI uploads one machine-readable observability
@@ -93,6 +98,59 @@ def _phase_exactness() -> list[str]:
             failures.append(
                 f"phases: {strategy} build phase split {psum} != n_dists "
                 f"{total} — the partition must be exact, not approximate"
+            )
+    return failures
+
+
+def _sharded_profile() -> list[str]:
+    """One small inline sharded build must produce one complete profile."""
+    import tempfile
+
+    from repro import obs
+    from repro.graph.hnsw import HNSWParams
+    from repro.graph.sharded import ShardConfig, ShardedBuilder
+
+    failures = []
+    rng = np.random.default_rng(2)
+    data = rng.normal(size=(600, 32)).astype(np.float32)
+    params = HNSWParams(r_upper=4, r_base=8, ef=16, batch=32, max_layers=2)
+    cfg = ShardConfig(
+        n_segments=2, chunk_size=256, algo="hnsw", backend="fp32",
+        params=params, sample_size=256, kmeans_iters=5,
+    )
+    was_enabled = obs.enabled()
+    obs.enable()
+    obs.clear_spans()
+    try:
+        res = ShardedBuilder(
+            cfg, workdir=tempfile.mkdtemp(prefix="obs-guard-shard-")
+        ).build(data)
+    finally:
+        obs.enable() if was_enabled else obs.disable()
+    roots = obs.spans("shard/build")
+    if len(roots) != 1:
+        return [
+            f"sharded: expected exactly one shard/build root span, got "
+            f"{len(roots)}"
+        ]
+    root = roots[0]
+    segs = [c for c in root.children if c.name == "shard/segment"]
+    if len(segs) != cfg.n_segments:
+        failures.append(
+            f"sharded: {len(segs)} shard/segment child spans for a "
+            f"{cfg.n_segments}-segment build"
+        )
+    total = sum(float(m["n_dists"]) for m in res.segments)
+    if total <= 0 or root.n_dists != total:
+        failures.append(
+            f"sharded: shard/build folded cost {root.n_dists} != workers' "
+            f"reported n_dists {total}"
+        )
+    for sp in segs:
+        if not sp.attrs.get("phases"):
+            failures.append(
+                f"sharded: segment {sp.attrs.get('segment')} span lost its "
+                "phase split crossing the worker boundary"
             )
     return failures
 
@@ -180,6 +238,7 @@ def dump_snapshot(path: str = "OBS_snapshot.json") -> None:
 def main() -> int:
     failures = static_sweep()
     failures += _phase_exactness()
+    failures += _sharded_profile()
     failures += overhead_check()
     if not failures:
         dump_snapshot()
@@ -190,7 +249,8 @@ def main() -> int:
         return 1
     print(
         "obs guard OK (clock ban in serve/+engine, exact phase partition, "
-        "disabled-mode overhead within tolerance)"
+        "sharded-build profile complete, disabled-mode overhead within "
+        "tolerance)"
     )
     return 0
 

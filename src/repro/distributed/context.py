@@ -1,11 +1,26 @@
-"""Ambient mesh context — lets deep model code (the MoE expert-parallel
-dispatch) find the mesh without threading it through every call signature."""
+"""Ambient mesh context — lets deep code (the MoE expert-parallel dispatch,
+``graph.sharded.ShardedBuilder._resolve_mode``) find the mesh without
+threading it through every call signature.
+
+``ShardedBuilder`` consults :func:`get_current_mesh` when no mesh was passed
+explicitly: a >1-device ambient mesh selects the shard_map build path, a
+1-wide (or absent) mesh degrades to the process-pool / inline path."""
 
 from __future__ import annotations
 
 import contextlib
 
 _CURRENT_MESH = None
+
+
+def device_count(mesh) -> int:
+    """Total devices in ``mesh`` (product over every axis); 0 for ``None``."""
+    if mesh is None:
+        return 0
+    n = 1
+    for extent in mesh.shape.values():
+        n *= int(extent)
+    return n
 
 
 def set_current_mesh(mesh) -> None:

@@ -60,3 +60,17 @@ from repro.graph.index import (  # noqa: E402, F401
     algos,
     register_algo,
 )
+
+# The sharded build layer composes the facade, so it imports after it.
+from repro.graph.sharded import (  # noqa: E402, F401
+    ShardConfig,
+    ShardedBuilder,
+    ShardedBuildResult,
+    ShardPlan,
+    bootstrap_centroids,
+    fanout_map,
+    iter_chunks,
+    model_parallel_wall,
+    reservoir_sample,
+    stream_assign,
+)

@@ -38,6 +38,7 @@ stays in sync through ``with_updated_edges``).
 from __future__ import annotations
 
 import functools
+import os
 from dataclasses import dataclass
 from typing import NamedTuple
 
@@ -169,6 +170,16 @@ class BuildStats(NamedTuple):
     n_dists: jax.Array
     n_hops: jax.Array
     phases: jax.Array | None = None
+
+    def phase_dict(self) -> dict | None:
+        """Host-side ``{phase_name: n_dists}`` view of :attr:`phases`
+        (None when the builder tracked no split). Cross-process build
+        observability (graph/sharded.py workers) ships this dict — not
+        the device array — from worker back to the coordinator."""
+        if self.phases is None:
+            return None
+        vals = np.asarray(self.phases, np.float64)
+        return {name: float(v) for name, v in zip(PHASE_NAMES, vals)}
 
 
 def sample_levels(
@@ -994,11 +1005,23 @@ def repair_reachability(
     if not seen.all():
         unreach = np.nonzero(~seen)[0].astype(np.int32)
         all_ids = jnp.arange(n, dtype=jnp.int32)
-        # ONE batched distance call (unreachable × everyone) — per-u calls
-        # would recompile per shape as the reachable set grows.
-        d_all = np.asarray(backend.pair_dists(
-            jnp.asarray(unreach[:, None]), all_ids[None, :],
-        ))
+        # Batched distance rows (unreachable × everyone), tiled at a fixed
+        # row-block shape: per-u calls would recompile per shape as the
+        # reachable set grows, and one monolithic (U, n) call materializes
+        # an (U, n, ·) workspace in the backend — at mostly-island scale
+        # (U ≈ n) that is O(n²·d) bytes. Fixed blocks compile once and cap
+        # the workspace; padding rows are discarded (values unchanged).
+        u_sz = int(unreach.size)
+        budget = int(os.environ.get("REPRO_REPAIR_TILE", 1 << 19))
+        blk = max(1, min(u_sz, budget // max(1, n)))
+        pad = (-u_sz) % blk
+        u_pad = np.concatenate([unreach, np.zeros(pad, np.int32)])
+        d_all = np.concatenate([
+            np.asarray(backend.pair_dists(
+                jnp.asarray(u_pad[i:i + blk, None]), all_ids[None, :],
+            ))
+            for i in range(0, u_sz + pad, blk)
+        ])[:u_sz]
         n_d += float(d_all.size)
         row_of = {int(u): i for i, u in enumerate(unreach)}
 

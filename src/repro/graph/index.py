@@ -228,10 +228,10 @@ def _record_build(sp, stats: BuildStats | None) -> None:
     if stats is None or not obs.enabled():
         return
     sp.add_cost(stats.n_dists, stats.n_hops)
-    if stats.phases is not None:
-        phases = np.asarray(stats.phases, np.float64)
-        sp.set(phases={n: float(v) for n, v in zip(PHASE_NAMES, phases)})
-        for name, v in zip(PHASE_NAMES, phases):
+    phases = stats.phase_dict()
+    if phases is not None:
+        sp.set(phases=phases)
+        for name, v in phases.items():
             if v:
                 obs.tick("build_dists_total", n=float(v), phase=name)
 
@@ -342,6 +342,42 @@ class AnnIndex:
             spec=spec, params=params, graph=graph, data=data,
             backend_kind=kind, seed=seed, stats=stats,
             strategy=strategy,
+        )
+
+    @classmethod
+    def from_graph(
+        cls,
+        graph,
+        data,
+        *,
+        algo: str = "hnsw",
+        params: BuildParams | None = None,
+        backend_kind: str = "flash",
+        seed: int = 0,
+        stats: BuildStats | None = None,
+        strategy: str = "incremental",
+    ) -> "AnnIndex":
+        """Wrap an already-built algorithm pytree in the facade.
+
+        The adoption path for graphs constructed outside :meth:`build` —
+        e.g. one segment sliced out of a ``shard_map``/vmapped stacked
+        build (graph/segmented.py): the mesh program emits raw
+        ``HNSWIndex`` pytrees, and this turns each into a full facade
+        (searchable, growable, snapshot-able) without re-fitting or
+        re-building anything. ``data`` is the segment's raw vectors in
+        local id order (the rerank corpus); the graph's backend comes
+        with the pytree."""
+        spec = _REGISTRY.get(algo)
+        if spec is None:
+            raise ValueError(
+                f"unknown algo {algo!r}; registered: {', '.join(algos())}"
+            )
+        data = jnp.asarray(data, jnp.float32)
+        return cls(
+            spec=spec,
+            params=spec.default_params if params is None else params,
+            graph=graph, data=data, backend_kind=backend_kind, seed=seed,
+            stats=stats, strategy=strategy,
         )
 
     # ---- introspection --------------------------------------------------

@@ -40,6 +40,7 @@ except AttributeError:  # jax 0.4.x
 
 from repro import core
 from repro.graph import backends as bk
+from repro.kernels import ops
 from repro.graph.beam import INF, beam_search
 from repro.graph.hnsw import (
     HNSWIndex,
@@ -263,22 +264,92 @@ class SegmentedAnnIndex:
         and pass prebuilt backends). ``strategy`` is forwarded to every
         per-segment :meth:`AnnIndex.build` — segments are the natural unit
         for the bulk fast path (DESIGN.md §12): each one is a from-scratch
-        build over its own shard."""
-        segs = [jnp.asarray(s, jnp.float32) for s in data_segs]
-        segments, global_of, locate = [], [], []
+        build over its own shard.
+
+        Segments are materialized ONE AT A TIME: ``data_segs`` may be a
+        generator of per-segment arrays, and the loop converts, builds,
+        and releases each slice before touching the next — peak memory is
+        the largest single segment plus the coordinator's O(S·D) centroid
+        table, never a second copy of the whole dataset (the old path
+        converted every slice up front and ``jnp.stack``-ed centroids over
+        the retained list; tests/test_sharded.py asserts the streaming
+        bound). For chunked sources that do not arrive pre-sliced, use
+        :meth:`build_streaming`."""
+        segments, global_of, means = [], [], []
         next_gid = 0
-        for s, seg_data in enumerate(segs):
+        for s, seg_data in enumerate(data_segs):
+            seg = jnp.asarray(seg_data, jnp.float32)
+            del seg_data  # drop the source slice before building
             segments.append(AnnIndex.build(
-                seg_data, algo=algo, backend=backend, params=params,
+                seg, algo=algo, backend=backend, params=params,
                 seed=seed + s, backend_kwargs=backend_kwargs,
                 strategy=strategy, **algo_kwargs,
             ))
-            n_s = int(seg_data.shape[0])
+            means.append(np.asarray(seg.mean(axis=0), np.float32))
+            n_s = int(seg.shape[0])
             global_of.append(np.arange(next_gid, next_gid + n_s, dtype=np.int64))
-            locate.extend((s, j) for j in range(n_s))
             next_gid += n_s
-        centroids = jnp.stack([s.mean(axis=0) for s in segs])
-        return cls(segments, centroids, global_of, np.asarray(locate, np.int64))
+        return cls.from_parts(segments, np.stack(means), global_of)
+
+    @classmethod
+    def from_parts(cls, segments, centroids, global_of) -> "SegmentedAnnIndex":
+        """Assemble a collection from already-built segments.
+
+        The adoption constructor behind every parallel producer: the
+        sharded builder (graph/sharded.py) hands in pool-built or
+        shard_map-built :class:`AnnIndex` objects plus its routing state,
+        and this derives the global→(segment, local) locator from the
+        per-segment id maps. ``global_of`` entries may be any permutation
+        partition of [0, N) — ids keep stream order, not segment order."""
+        global_of = [np.asarray(g, np.int64) for g in global_of]
+        n = sum(int(g.shape[0]) for g in global_of)
+        locate = np.empty((n, 2), np.int64)
+        for s, gids in enumerate(global_of):
+            locate[gids, 0] = s
+            locate[gids, 1] = np.arange(gids.shape[0])
+        return cls(
+            segments, jnp.asarray(centroids, jnp.float32), global_of, locate
+        )
+
+    @classmethod
+    def build_streaming(
+        cls,
+        source,
+        *,
+        n_segments: int,
+        chunk_size: int = 65536,
+        workers: int | None = None,
+        mesh=None,
+        workdir: str | None = None,
+        snapshot_path: str | None = None,
+        algo: str = "hnsw",
+        backend: str = "flash_blocked",
+        params: HNSWParams | None = None,
+        seed: int = 0,
+        backend_kwargs: dict | None = None,
+        strategy: str = "bulk",
+        **algo_kwargs,
+    ) -> "SegmentedAnnIndex":
+        """Build from a chunked stream via the sharded pipeline
+        (DESIGN.md §16): nearest-centroid streaming assignment, then
+        parallel per-segment builds — across ``mesh`` devices, a
+        ``workers``-wide process pool, or inline (single-device fallback).
+        ``source`` is an (n, D) array or a zero-arg callable returning a
+        chunk iterator; the full dataset is never resident in this
+        process. See :class:`repro.graph.sharded.ShardedBuilder` for the
+        full control surface (plans, manifests, metrics)."""
+        from repro.graph.sharded import ShardConfig, ShardedBuilder
+
+        builder = ShardedBuilder(
+            ShardConfig(
+                n_segments=n_segments, chunk_size=chunk_size, algo=algo,
+                backend=backend, params=params, strategy=strategy,
+                backend_kwargs=backend_kwargs, algo_kwargs=algo_kwargs,
+                seed=seed,
+            ),
+            workers=workers, mesh=mesh, workdir=workdir,
+        )
+        return builder.build(source, snapshot_path=snapshot_path).index
 
     @property
     def n(self) -> int:
@@ -404,7 +475,7 @@ class SegmentedAnnIndex:
     def search(
         self, queries, k: int = 10, *, ef: int = 64, width: int = 1,
         rerank: bool | str = True, rerank_mult: int | None = None,
-        spec: SearchSpec | None = None,
+        spec: SearchSpec | None = None, fanout: bool = True,
     ) -> SearchResult:
         """Fan out to every segment, merge global top-k (the coordinator) —
         the distributed face of the two-stage pipeline (DESIGN.md §11).
@@ -417,7 +488,14 @@ class SegmentedAnnIndex:
         quantized sums are only comparison-valid within one coder, so a
         cross-segment merge needs exact distances (DESIGN.md §5);
         ``rerank=False`` keeps the legacy single-coder quantized merge.
+
+        ``fanout`` (default) dispatches the per-segment scans on the shared
+        fan-out thread pool instead of a sequential Python loop — compiled
+        executables release the GIL, so S scans overlap; results are merged
+        positionally and are identical either way (tests/test_sharded.py).
         """
+        from repro.graph.sharded import fanout_map
+
         queries = jnp.asarray(queries, jnp.float32)
         if spec is None:
             spec = SearchSpec(
@@ -426,18 +504,23 @@ class SegmentedAnnIndex:
             )
         reranker = self.reranker(spec.rerank)  # fail fast on bad modes
         scan = spec.scan_spec()
-        all_ids, all_d = [], []
-        n_scan = jnp.int32(0)
-        for s, seg in enumerate(self.segments):
-            if seg is None:
-                continue  # quarantined: serve the healthy remainder
+        live = [
+            (s, seg) for s, seg in enumerate(self.segments) if seg is not None
+        ]  # quarantined segments serve nothing; the remainder fans out
+
+        def scan_one(item):
+            s, seg = item
             res = seg.search(queries, spec=scan)
             gids = jnp.asarray(self._global_of[s], jnp.int32)
-            all_ids.append(jnp.where(
-                res.ids >= 0, gids[jnp.maximum(res.ids, 0)], -1
-            ))
-            all_d.append(jnp.where(res.ids >= 0, res.dists, INF))
-            n_scan = n_scan + jnp.asarray(res.n_scan, jnp.int32)
+            ids = jnp.where(res.ids >= 0, gids[jnp.maximum(res.ids, 0)], -1)
+            return ids, jnp.where(res.ids >= 0, res.dists, INF), res.n_scan
+
+        results = fanout_map(scan_one, live, parallel=fanout)
+        all_ids = [r[0] for r in results]
+        all_d = [r[1] for r in results]
+        n_scan = sum(
+            (jnp.asarray(r[2], jnp.int32) for r in results), jnp.int32(0)
+        )
         cat_ids = jnp.concatenate(all_ids, axis=1)  # (Q, S·n_keep)
         cat_d = jnp.concatenate(all_d, axis=1)
         ids, dists, n_rerank = merge_rerank_topk(
@@ -455,16 +538,17 @@ class SegmentedAnnIndex:
         new = jnp.asarray(new_vectors, jnp.float32)
         if new.ndim == 1:
             new = new[None]
-        d = jnp.sum(
-            (new[:, None, :] - self._centroids[None, :, :]) ** 2, axis=-1
-        )
+        banned = None
         if self._quarantined:
             # degraded routing: never grow a lost segment — the nearest
             # *healthy* centroid takes the vector instead
             mask = np.zeros(len(self.segments), bool)
             mask[sorted(self._quarantined)] = True
-            d = jnp.where(jnp.asarray(mask)[None, :], jnp.inf, d)
-        route = np.asarray(jnp.argmin(d, axis=1))
+            banned = jnp.asarray(mask)
+        # the shared routing primitive: same kernel dispatch the streaming
+        # sharded assignment and the serving router go through
+        route, _ = ops.nearest_centroid(new, self._centroids, banned=banned)
+        route = np.asarray(route)
         m = int(new.shape[0])
         gids = self.n + np.arange(m, dtype=np.int64)
         new_locate = np.empty((m, 2), np.int64)

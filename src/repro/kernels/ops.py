@@ -173,6 +173,41 @@ def l2_batch(
     )
 
 
+@functools.partial(jax.jit, static_argnames=("impl", "block_n", "block_c"))
+def nearest_centroid(
+    x: jax.Array,
+    centroids: jax.Array,
+    *,
+    banned: jax.Array | None = None,
+    impl: str = "auto",
+    block_n: int = 256,
+    block_c: int = 256,
+) -> tuple[jax.Array, jax.Array]:
+    """Nearest-centroid routing: x (N, D), centroids (S, D) ->
+    (route (N,) int32, d2 (N,) f32).
+
+    The shared routing primitive behind segment assignment — the streaming
+    sharded build (graph/sharded.py), ``SegmentedAnnIndex.add`` growth
+    routing, and the serving router all ask the same question, so they all
+    go through the same kernel dispatch (the (N, C) distance matrix is
+    ``l2_batch``, Pallas-tiled on TPU, the jnp oracle on CPU). ``banned``
+    is an optional (S,) bool mask of segments that must not win (quarantined
+    segments in degraded deployments)."""
+    impl = resolve_impl(impl)
+    _trace_tick("nearest_centroid", impl)
+    if impl == "ref":
+        d2 = ref.l2_batch_ref(x, centroids)
+    else:
+        d2 = l2_batch_pallas(
+            x, centroids, block_n=block_n, block_c=block_c,
+            interpret=(impl == "interpret"),
+        )
+    if banned is not None:
+        d2 = jnp.where(banned[None, :], jnp.inf, d2)
+    route = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    return route, jnp.take_along_axis(d2, route[:, None].astype(jnp.int32), axis=1)[:, 0]
+
+
 @functools.partial(jax.jit, static_argnames=("impl", "block_n"))
 def sq_l2(
     q: jax.Array,

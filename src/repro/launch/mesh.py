@@ -29,12 +29,28 @@ def make_host_mesh(model: int = 1):
     return jax.make_mesh((n // model, model), ("data", "model"))
 
 
+def make_segment_mesh(n: int | None = None):
+    """1-D mesh over the host's devices for segment-parallel builds.
+
+    One "data" axis — each device (group) owns whole segments, the shape
+    ``graph.sharded.ShardedBuilder`` shard_maps over. ``n`` defaults to
+    every visible device; on a single-device host this returns a 1-wide
+    mesh, which the builder treats as "no mesh" and falls back to the
+    pool/inline path (the graceful degradation contract)."""
+    devs = jax.devices()
+    if n is None:
+        n = len(devs)
+    if not 1 <= n <= len(devs):
+        raise ValueError(f"asked for {n} devices, have {len(devs)}")
+    return jax.make_mesh((n,), ("data",), devices=devs[:n])
+
+
 def batch_axes(mesh) -> tuple[str, ...]:
     """The axes a global batch shards over (pod folds into data)."""
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 
 
 def n_devices(mesh) -> int:
-    import numpy as np
+    from repro.distributed.context import device_count
 
-    return int(np.prod(list(mesh.shape.values())))
+    return device_count(mesh)

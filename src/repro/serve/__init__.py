@@ -25,12 +25,14 @@ service whose unit of work is a request stream, not an array.
                group-commit fsync batching, rotation, and torn-tail drop
     recovery   init/attach/recover + Checkpointer: boot-time snapshot +
                WAL-tail replay, background ops-triggered checkpointing,
-               and the `python -m repro.serve.recovery` verify/recover CLI
-    scheduler  MicroBatcher (deprecated): the original coalescing front-end,
-               now a thin wrapper over Runtime
-    router     SegmentRouter: nearest-centroid fan-out over segments; the
-               merge is the shared two-stage rerank (dedup by global id +
-               one exact re-score — quantized sums never cross segments)
+               init_from_manifest (adopt a sharded-build manifest as a
+               durable root), and the `python -m repro.serve.recovery`
+               verify/recover CLI
+    router     SegmentRouter: nearest-centroid fan-out over segments,
+               dispatched in parallel on the shared fan-out thread pool;
+               the merge is the shared two-stage rerank (dedup by global
+               id + one exact re-score — quantized sums never cross
+               segments)
 
 Quickstart::
 
@@ -68,15 +70,18 @@ from repro.serve.recovery import (  # noqa: F401
     verify_root,
 )
 from repro.serve.recovery import init as init_durable  # noqa: F401
+from repro.serve.recovery import init_from_manifest  # noqa: F401
 from repro.serve.router import SegmentRouter  # noqa: F401
 from repro.serve.runtime import Runtime  # noqa: F401
-from repro.serve.scheduler import MicroBatcher  # noqa: F401
 from repro.serve.snapshot import (  # noqa: F401
     FORMAT_VERSION,
     load_index,
     load_sidecar,
+    publish_snapshot,
     save_index,
+    segment_dir,
     snapshot_bytes,
+    write_segmented_manifest,
 )
 from repro.serve.wal import WalRecord, WalWriter, scan as scan_wal  # noqa: F401
 
@@ -89,7 +94,6 @@ __all__ = [
     "FORMAT_VERSION",
     "Generation",
     "IndexHandle",
-    "MicroBatcher",
     "QueueFullError",
     "RecoveryResult",
     "Runtime",
@@ -100,11 +104,15 @@ __all__ = [
     "WalWriter",
     "attach",
     "init_durable",
+    "init_from_manifest",
     "load_index",
     "load_sidecar",
+    "publish_snapshot",
     "recover",
     "save_index",
     "scan_wal",
+    "segment_dir",
     "snapshot_bytes",
     "verify_root",
+    "write_segmented_manifest",
 ]

@@ -100,6 +100,25 @@ def init(root: str, index, *, overwrite: bool = False) -> str:
     return root
 
 
+def init_from_manifest(
+    root: str, manifest_path: str, *, overwrite: bool = False,
+    verify: bool = True, quarantine: bool = False,
+):
+    """Adopt a sharded-build manifest directory as a durable index root.
+
+    ``manifest_path`` is the segmented snapshot a
+    :class:`repro.graph.sharded.ShardedBuilder` published — coordinator
+    routing arrays plus per-segment payloads, each of which may have been
+    built and written by a worker on a different host (DESIGN.md §16).
+    Loading it here *is* the attach-on-another-host step: the manifest is
+    verified (CRC per array), re-checkpointed under ``root`` at LSN 0 with
+    an empty WAL, and returned live — from this point the ordinary
+    :func:`attach` / :func:`recover` / :class:`Checkpointer` cycle owns it.
+    Returns ``(root, index)``."""
+    index = load_index(manifest_path, verify=verify, quarantine=quarantine)
+    return init(root, index, overwrite=overwrite), index
+
+
 def recover(
     root: str, *, verify: bool = True, quarantine: bool = True,
 ) -> RecoveryResult:

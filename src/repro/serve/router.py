@@ -28,6 +28,7 @@ import numpy as np
 
 from repro.graph.hnsw import SearchResult
 from repro.graph.rerank import SearchSpec, merge_rerank_topk, rerank_mode
+from repro.graph.sharded import fanout_map
 from repro.serve.engine import DEFAULT_BUCKETS, SearchEngine
 
 
@@ -52,6 +53,7 @@ class SegmentRouter:
         rerank_mult: int | None = None,
         spec: SearchSpec | None = None,
         q_buckets: tuple = DEFAULT_BUCKETS,
+        fanout: bool = True,
     ):
         n_seg = len(seg_index.segments)
         if not 1 <= n_probe <= n_seg:
@@ -79,6 +81,10 @@ class SegmentRouter:
             for seg in seg_index.segments
         ]
         self._centroids = np.asarray(seg_index.centroids, np.float64)
+        #: dispatch the probed segment scans on the shared fan-out thread
+        #: pool (compiled executables release the GIL) instead of a
+        #: sequential loop; results are identical either way
+        self.fanout = bool(fanout)
 
     def warmup(self) -> "SegmentRouter":
         for engine in self.engines:
@@ -143,13 +149,24 @@ class SegmentRouter:
         width = self.n_probe * n_keep
         cand_ids = np.full((n_q, width), -1, np.int32)
         cand_d = np.full((n_q, width), np.inf, np.float32)
+        # one sharded dispatch over the probed segments: each routed
+        # sub-batch runs on its segment's engine via the shared fan-out
+        # thread pool (graph/sharded.py) — the scans overlap because the
+        # compiled executables release the GIL — and the merge below stays
+        # sequential and positional, so results match the loop form exactly
+        hit_rows = []
+        for s in range(len(self.engines)):
+            rows = np.nonzero((probe == s).any(axis=1))[0]
+            if rows.size:
+                hit_rows.append((s, rows))
+
+        def scan_one(item):
+            s, rows = item
+            return self.engines[s].search(queries[rows])
+
+        fan = fanout_map(scan_one, hit_rows, parallel=self.fanout)
         n_scan = 0.0
-        for s, engine in enumerate(self.engines):
-            hit = (probe == s).any(axis=1)
-            rows = np.nonzero(hit)[0]
-            if rows.size == 0:
-                continue
-            res = engine.search(queries[rows])
+        for (s, rows), res in zip(hit_rows, fan):
             n_scan += float(res.n_scan)
             gids = self.seg_index.global_ids(s)
             ids = np.asarray(res.ids)
@@ -194,6 +211,7 @@ class SegmentRouter:
         return {
             "segments": len(self.engines),
             "n_probe": self.n_probe,
+            "fanout": self.fanout,
             "compiles": sum(p["compiles"] for p in per),
             "queries": sum(p["queries"] for p in per),
             "per_segment": per,

@@ -1,7 +1,7 @@
 """Continuous-batching serving runtime (DESIGN.md §13).
 
-:class:`~repro.serve.scheduler.MicroBatcher` coalesces one bucket at a time
-and cannot overlap maintenance with search. This module replaces it with an
+The original coalescing front-end batched one bucket at a time and could
+not overlap maintenance with search. This module replaces it with an
 inference-stack-shaped runtime in the forward-batch style of modern LLM
 servers: ONE scheduler loop owns all engine dispatches, draining a priority
 queue of per-request states and greedily packing compatible requests into
@@ -106,7 +106,7 @@ class Runtime:
 
     Construct over an ``AnnIndex`` (wrapped in a fresh
     :class:`IndexHandle`), an existing handle (shared with other runtimes),
-    or an existing ``engine=`` (the MicroBatcher migration path). One
+    or an existing ``engine=`` (the legacy-scheduler migration path). One
     daemon scheduler thread owns every search dispatch; one daemon mutator
     thread owns every generation flip.
     """

@@ -72,6 +72,16 @@ P_AFTER_PUBLISH = faults.declare("snapshot/after_publish")
 P_BITFLIP_ARRAY = faults.declare("snapshot/bitflip_array", kind="inject")
 
 
+def segment_dir(path: str, s: int) -> str:
+    """Canonical per-segment subdirectory of a segmented snapshot.
+
+    The single source of truth for the ``seg_NNN`` naming shared by
+    :func:`save_index`, :func:`load_index`, and the sharded build's
+    distributed writers (graph/sharded.py workers snapshot straight into
+    ``segment_dir(root, s)``, possibly from another host)."""
+    return os.path.join(path, f"seg_{s:03d}")
+
+
 def _write_payload(dirpath: str, manifest: dict, arrays: dict) -> None:
     entries = {}
     stored = {}
@@ -181,7 +191,7 @@ def save_index(
             manifest = {"kind": "segmented_ann_index", "meta": meta}
             _write_payload(tmp, manifest, arrays)
             for s, (seg_meta, seg_arrays) in enumerate(segments):
-                seg_dir = os.path.join(tmp, f"seg_{s:03d}")
+                seg_dir = segment_dir(tmp, s)
                 os.makedirs(seg_dir)
                 _write_payload(
                     seg_dir, {"kind": "ann_index", "meta": seg_meta}, seg_arrays
@@ -195,6 +205,15 @@ def save_index(
     except BaseException:
         shutil.rmtree(tmp, ignore_errors=True)
         raise
+    return publish_snapshot(tmp, path)
+
+
+def publish_snapshot(tmp: str, path: str) -> str:
+    """Atomically publish a fully-written ``<path>.tmp`` directory at
+    ``path`` (the commit half of :func:`save_index`, exposed for writers
+    that assemble the tmp directory themselves — the sharded build's
+    coordinator publishes the whole manifest + per-segment tree in one
+    rename once every worker has reported in)."""
     faults.crash_point(P_AFTER_TMP_WRITE)
     if os.path.lexists(path):
         # Two renames are needed to swap directories, so there is an instant
@@ -211,6 +230,45 @@ def save_index(
     else:
         os.replace(tmp, path)  # atomic on POSIX
     return path
+
+
+def write_segmented_manifest(
+    dirpath: str,
+    *,
+    centroids,
+    global_of,
+    locate,
+    sidecar: dict | None = None,
+) -> str:
+    """Write the *coordinator half* of a segmented snapshot into ``dirpath``.
+
+    The segment-lifecycle decoupling hook (DESIGN.md §16): in a sharded
+    build the per-segment payloads are produced by workers — each saves its
+    own :class:`AnnIndex` straight into ``segment_dir(dirpath, s)`` via
+    :func:`save_index`, possibly on a different host — while the
+    coordinator, which never holds any segment in memory, contributes only
+    the routing state here: the (S, D) centroid table, the per-segment
+    local→global id maps, and the (N, 2) global→(segment, local) locator.
+    The assembled directory is layout-identical to
+    ``save_index(path, SegmentedAnnIndex)`` and loads through the ordinary
+    :func:`load_index` / ``serve.recovery`` attach path. ``dirpath`` is
+    written in place — stage under a ``.tmp`` dir and commit with
+    :func:`publish_snapshot` for atomicity."""
+    arrays = {
+        "centroids": np.asarray(centroids, np.float32),
+        "locate": np.asarray(locate, np.int64),
+    }
+    for s, gids in enumerate(global_of):
+        arrays[f"global_of.{s}"] = np.asarray(gids, np.int64)
+    manifest = {
+        "kind": "segmented_ann_index",
+        "meta": {"n_segments": len(global_of)},
+    }
+    _write_payload(dirpath, manifest, arrays)
+    if sidecar is not None:
+        with open(os.path.join(dirpath, _SIDECAR), "w") as f:
+            json.dump(sidecar, f, indent=1, sort_keys=True)
+    return dirpath
 
 
 def load_sidecar(path: str) -> dict | None:
@@ -262,7 +320,7 @@ def load_index(path: str, *, verify: bool = True, quarantine: bool = False):
         segments = []
         n_bad = 0
         for s in range(n_seg):
-            seg_dir = os.path.join(path, f"seg_{s:03d}")
+            seg_dir = segment_dir(path, s)
             try:
                 seg_manifest, seg_arrays = _read_payload(seg_dir, verify=verify)
             except (OSError, ValueError, KeyError, zipfile.BadZipFile):

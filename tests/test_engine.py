@@ -451,6 +451,72 @@ class TestBulkStrategyParity:
             assert hit.mean() >= 0.9, f"after {strat}: {hit.mean():.2f}"
 
 
+class TestStructuralRepairTiling:
+    """Mostly-island graphs drive ``repair_reachability`` into its structural
+    graft path, whose (unreachable x everyone) distance rows are computed in
+    fixed row tiles (a monolithic call materializes an O(n² · d) backend
+    workspace). The tiling must be invisible: any tile budget produces the
+    same rows, hence the same grafts, hence the same graph."""
+
+    BLOBS, PER, D = 4, 96, 16
+
+    def _islands(self):
+        """4 far-apart blobs wired as per-blob directed rings: from entry 0
+        only blob 0 is reachable — 3n/4 unreachable, which is past the
+        ``n // 4`` cutoff where repair skips re-insertion and goes straight
+        to the structural pair_dists rows."""
+        rng = np.random.default_rng(7)
+        centers = rng.normal(size=(self.BLOBS, self.D)).astype(np.float32)
+        data = np.concatenate([
+            50.0 * c + rng.normal(size=(self.PER, self.D)).astype(np.float32)
+            for c in centers
+        ])
+        n = data.shape[0]
+        r = BULK_PARAMS.r_base
+        adj0 = np.full((n, r), -1, np.int32)
+        adj0_d = np.full((n, r), np.inf, np.float32)
+        for b in range(self.BLOBS):
+            lo = b * self.PER
+            for i in range(self.PER):
+                j = lo + (i + 1) % self.PER
+                adj0[lo + i, 0] = j
+                adj0_d[lo + i, 0] = float(
+                    ((data[lo + i] - data[j]) ** 2).sum()
+                )
+        return data, adj0, adj0_d
+
+    def _repair(self, data, adj0, adj0_d):
+        from repro.graph.backends import FP32Backend
+        from repro.graph.engine import repair_reachability
+
+        n = data.shape[0]
+        levels = np.zeros(n, np.int32)
+        adj_up = np.full((n, BULK_PARAMS.r_upper), -1, np.int32)
+        adj_up_d = np.full((n, BULK_PARAMS.r_upper), np.inf, np.float32)
+        return repair_reachability(
+            jnp.asarray(data), jnp.asarray(adj0), jnp.asarray(adj0_d),
+            jnp.asarray(adj_up), jnp.asarray(adj_up_d),
+            FP32Backend(jnp.asarray(data)), levels, 0, params=BULK_PARAMS,
+        )
+
+    def test_tile_budget_invariant_and_fully_connected(self, monkeypatch):
+        from repro.graph.engine import bfs_reachable
+
+        data, adj0, adj0_d = self._islands()
+        n = data.shape[0]
+        ref_adj, ref_d, _, _, _, ref_nd, _ = self._repair(data, adj0, adj0_d)
+        assert bfs_reachable(np.asarray(ref_adj), 0).all()
+        # the structural rows really ran: (3n/4 unreachable) x n distances
+        assert ref_nd == (3 * n // 4) * n
+        # a tiny budget forces many tiles plus a padded tail; bit-exact
+        monkeypatch.setenv("REPRO_REPAIR_TILE", str(5 * n))
+        t_adj, t_d, _, _, _, t_nd, _ = self._repair(data, adj0, adj0_d)
+        np.testing.assert_array_equal(np.asarray(t_adj), np.asarray(ref_adj))
+        np.testing.assert_array_equal(np.asarray(t_d), np.asarray(ref_d))
+        assert t_nd == ref_nd
+        assert bfs_reachable(np.asarray(t_adj), 0).all()
+
+
 class TestNoPrivateCrossImports:
     def test_no_underscore_imports_from_hnsw(self):
         """The refactor's contract: the batched machinery is public engine

@@ -19,15 +19,12 @@ Contracts:
      reader threads; every result set must be consistent with exactly one
      published generation — exactly one live sentinel visible, never two
      (half-applied add) and never the torn orderings in between.
-  6. ``MicroBatcher`` survives as a deprecated wrapper: same results, same
-     error messages, same stats keys, plus a ``DeprecationWarning``.
 """
 
 from __future__ import annotations
 
 import threading
 import time
-import warnings
 
 import numpy as np
 import pytest
@@ -509,42 +506,3 @@ class TestAdmissionController:
         zeroed = ctl.stats()
         assert zeroed["admitted"] == zeroed["served"] == zeroed["shed"] == 0
         assert zeroed["p99_ms"] == 0.0
-
-
-class TestDeprecatedMicroBatcher:
-    def test_warns_and_preserves_legacy_surface(self, runtime_data, fp32_idx):
-        _, _, queries = runtime_data
-        engine = serve.SearchEngine(
-            fp32_idx, k=5, ef=24, q_buckets=(1, 8)
-        ).warmup()
-        with pytest.warns(DeprecationWarning, match="Runtime"):
-            mb = serve.MicroBatcher(engine, max_wait_ms=50.0)
-        with mb:
-            futs = [mb.submit(queries[i]) for i in range(6)]
-            results = [f.result(timeout=30) for f in futs]
-        direct = np.asarray(
-            engine.search(queries[:6], record=False).ids
-        )
-        for i, res in enumerate(results):
-            np.testing.assert_array_equal(np.asarray(res.ids), direct[i])
-        stats = mb.stats()
-        assert set(stats) == {
-            "batches", "requests", "mean_batch", "max_batch_seen",
-        }
-        assert stats["requests"] == 6
-        with pytest.raises(RuntimeError, match="closed"):
-            mb.submit(queries[0])
-
-    def test_wrapper_never_sheds_or_rejects(self, runtime_data, fp32_idx):
-        """The legacy contract: no deadlines, no queue limit."""
-        _, _, queries = runtime_data
-        engine = serve.SearchEngine(fp32_idx, k=5, ef=24, q_buckets=(1, 8))
-        with warnings.catch_warnings():
-            warnings.simplefilter("ignore", DeprecationWarning)
-            with serve.MicroBatcher(engine, max_wait_ms=1.0) as mb:
-                futs = [mb.submit(queries[i]) for i in range(10)]
-                for f in futs:
-                    assert f.result(timeout=30).ids.shape == (5,)
-                inner = mb._rt.stats()
-        assert inner["shed"] == inner["rejected"] == 0
-        assert inner["served"] == 10

@@ -8,10 +8,7 @@ Contracts:
   2. The SearchEngine compiles once per shape bucket: after ``warmup()``,
      any Q within a bucket (and any number of repeat calls) triggers zero
      recompilation, and results equal the facade's.
-  3. The MicroBatcher coalesces single-query requests into blocks under a
-     deadline, returning per-request results identical to a direct batched
-     search; isolated requests still complete within the deadline.
-  4. The SegmentRouter at full probe reproduces the coordinator's fan-out
+  3. The SegmentRouter at full probe reproduces the coordinator's fan-out
      merge; at n_probe=1 it degrades gracefully, never returning invalid
      ids; a global id surfaced by two probed segments is returned at most
      once (the DESIGN.md §11 dedup-before-rerank merge).
@@ -348,54 +345,6 @@ class TestSearchEngine:
         res = engine.search(np.asarray(extra[:4]))
         hits = np.asarray(res.ids)[:, 0]
         assert (hits >= N_BASE).any(), "added ids were struck as tombstones"
-
-
-@pytest.mark.filterwarnings("ignore::DeprecationWarning")
-class TestMicroBatcher:
-    """Legacy surface — MicroBatcher is now a deprecated wrapper over
-    ``serve.Runtime`` (the warning itself is asserted in
-    tests/test_runtime.py); these contracts must keep holding through it."""
-
-    def test_coalesced_results_match_direct(self, serve_data):
-        data, _, queries = serve_data
-        idx = AnnIndex.build(data, algo="hnsw", backend="fp32", params=PARAMS)
-        engine = serve.SearchEngine(
-            idx, k=5, ef=24, q_buckets=(1, 8)
-        ).warmup()
-        with serve.MicroBatcher(engine, max_wait_ms=100.0) as mb:
-            futs = [mb.submit(np.asarray(queries[i])) for i in range(12)]
-            results = [f.result(timeout=30) for f in futs]
-        direct = np.asarray(idx.search(queries[:12], k=5, ef=24).ids)
-        for i, res in enumerate(results):
-            np.testing.assert_array_equal(np.asarray(res.ids), direct[i])
-            assert float(res.n_dists) > 0
-        stats = mb.stats()
-        assert stats["requests"] == 12
-        assert stats["batches"] < 12, "nothing was coalesced"
-        assert stats["max_batch_seen"] >= 2
-
-    def test_deadline_serves_lone_request(self, serve_data):
-        data, _, queries = serve_data
-        idx = AnnIndex.build(data, algo="hnsw", backend="fp32", params=PARAMS)
-        engine = serve.SearchEngine(idx, k=5, ef=24, q_buckets=(1, 8)).warmup()
-        with serve.MicroBatcher(engine, max_wait_ms=20.0) as mb:
-            t0 = time.perf_counter()
-            res = mb.search(np.asarray(queries[0]), timeout=30)
-            elapsed = time.perf_counter() - t0
-        assert res.ids.shape == (5,)
-        assert elapsed < 5.0, f"lone request stalled {elapsed:.1f}s"
-
-    def test_closed_scheduler_rejects(self, serve_data):
-        data, _, queries = serve_data
-        idx = AnnIndex.build(data, algo="hnsw", backend="fp32", params=PARAMS)
-        engine = serve.SearchEngine(idx, k=5, ef=24, q_buckets=(1,))
-        mb = serve.MicroBatcher(engine)
-        mb.close()
-        with pytest.raises(RuntimeError, match="closed"):
-            mb.submit(np.asarray(queries[0]))
-        with serve.MicroBatcher(engine) as mb2:
-            with pytest.raises(ValueError, match="single"):
-                mb2.submit(np.asarray(queries[:2]))
 
 
 class TestSegmentRouter:
